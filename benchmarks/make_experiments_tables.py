@@ -1,0 +1,54 @@
+"""Regenerate the §Dry-run / §Roofline markdown tables in EXPERIMENTS.md from
+experiments/dryrun/*.json. Usage: PYTHONPATH=src python -m benchmarks.make_experiments_tables
+(prints markdown to stdout; EXPERIMENTS.md embeds the output)."""
+from __future__ import annotations
+
+from benchmarks.roofline import load_records, roofline_row
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.2f}"
+
+
+def main():
+    recs = load_records()
+    ok = [r for r in recs if r.get("status") == "ok"]
+    skipped = [r for r in recs if r.get("status") == "skipped"]
+    failed = [r for r in recs if r.get("status") == "fail"]
+
+    print("### Dry-run summary\n")
+    print(f"- compiled OK: **{len(ok)}**, structural skips: {len(skipped)} "
+          f"(encoder-only decode), failures: **{len(failed)}**\n")
+    print("| arch | shape | mesh | fl | mem/dev GiB | HLO coll GiB | compile s |")
+    print("|---|---|---|---|---|---|---|")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"],
+                                       r.get("fl", False))):
+        mem = r["memory"].get("per_device_total_bytes", 0)
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+              f"| {'y' if r.get('fl') else ''} | {fmt_bytes(mem)} "
+              f"| {fmt_bytes(r['collectives']['total_bytes'])} "
+              f"| {r.get('compile_s', 0):.0f} |")
+    for r in skipped:
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} |  | skip "
+              f"(encoder-only) |  |  |")
+
+    print("\n### Roofline (single-pod 16x16 unless noted)\n")
+    print("| arch | shape | fl | t_compute s | t_memory s | t_coll s "
+          "| bottleneck | useful FLOP ratio | mem/dev GiB |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for rec in sorted(ok, key=lambda r: (r["arch"], r["shape"],
+                                         r.get("fl", False))):
+        if rec["mesh"] != "single" and not rec.get("fl"):
+            continue
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        print(f"| {r['arch']} | {r['shape']}{' (pod)' if rec['mesh']=='pod' else ''} "
+              f"| {'y' if r['fl'] else ''} "
+              f"| {r['t_compute_s']:.4f} | {r['t_memory_s']:.4f} "
+              f"| {r['t_collective_s']:.4f} | {r['bottleneck']} "
+              f"| {r['useful_ratio']:.2f} | {r['mem_per_device_gib']:.2f} |")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,182 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+For each (arch × shape × mesh) JSON in experiments/dryrun/:
+    compute term    = FLOPs / (chips × 197e12)
+    memory term     = HBM bytes / (chips × 819e9)
+    collective term = collective bytes / (chips × 50e9)
+
+Two FLOP/byte sources are reported:
+  * analytic — first-principles napkin math from the architecture config and
+    input shape (the trustworthy number; documented per family below);
+  * hlo — compiled cost_analysis(), with the caveat that XLA counts a
+    scan/while body ONCE, so we scale HLO numbers by the known trip counts.
+
+MODEL_FLOPS = 6·N·D (dense train) / 6·N_active·D (MoE) / 2·N·D (prefill) /
+2·N_active per token (decode); the ratio MODEL_FLOPS / FLOPs flags
+remat/redundancy waste.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import math
+import os
+
+from repro import configs
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+from repro.launch.specs import SHAPES, arch_for_shape
+
+PYTHONHASH = None
+
+
+def active_params(cfg, n_total: int) -> int:
+    if cfg.moe is None:
+        return n_total
+    m = cfg.moe
+    # remove the routed experts that are not among top_k (+ keep shared)
+    expert_p = 3 * cfg.d_model * m.d_ff_expert
+    routed_total = cfg.n_layers * m.n_experts * expert_p
+    routed_active = cfg.n_layers * m.top_k * expert_p
+    return n_total - routed_total + routed_active
+
+
+def model_flops(cfg, shape, n_params: int) -> float:
+    tokens = shape.global_batch * shape.seq_len
+    n_act = active_params(cfg, n_params)
+    if shape.kind == "train":
+        return 6.0 * n_act * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence + attention over the cache
+    flops = 2.0 * n_act * shape.global_batch
+    if not cfg.encoder_only and cfg.family not in ("ssm",):
+        win = cfg.window or shape.seq_len
+        ctx = min(shape.seq_len, win)
+        n_attn_layers = cfg.n_layers
+        flops += (4.0 * shape.global_batch * ctx * cfg.n_heads * cfg.hd
+                  * n_attn_layers)
+    return flops
+
+
+def analytic_hbm_bytes(cfg, shape, n_params: int, fl: bool) -> float:
+    """Per-step global HBM traffic estimate (weights + activations + caches)."""
+    tokens = shape.global_batch * shape.seq_len
+    d = cfg.d_model
+    bpe = 2  # bf16
+    if shape.kind == "train":
+        # fwd+bwd: read params twice, write grads, plus ~14 activation
+        # round-trips per token per layer (norm/attn/mlp read+write, remat x2)
+        act = 14 * tokens * d * bpe * cfg.n_layers
+        return 3 * n_params * bpe + act
+    if shape.kind == "prefill":
+        act = 8 * tokens * d * bpe * cfg.n_layers
+        return n_params * bpe + act
+    # decode: weights (active) + full KV/state cache read + one-slot write
+    n_act = active_params(cfg, n_params)
+    if cfg.family == "ssm" and cfg.xlstm:
+        dh = 2 * d // cfg.n_heads
+        cache = cfg.n_layers // 2 * shape.global_batch * cfg.n_heads * dh * dh * 4
+    elif cfg.family == "hybrid":
+        d_inner = cfg.ssm.expand * d
+        h = d_inner // cfg.ssm.head_dim
+        cache = (cfg.n_layers * shape.global_batch * h * cfg.ssm.d_state
+                 * cfg.ssm.head_dim * 4)
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        cache += (n_super * shape.global_batch * shape.seq_len
+                  * cfg.n_kv_heads * cfg.hd * 2 * bpe)
+    elif cfg.encoder_only:
+        cache = 0
+    else:
+        win = cfg.window or shape.seq_len
+        ctx = min(shape.seq_len, win)
+        n_kv_layers = cfg.n_layers
+        cache = (n_kv_layers * shape.global_batch * ctx * cfg.n_kv_heads
+                 * cfg.hd * 2 * bpe)
+    return n_act * bpe + cache
+
+
+SCAN_TRIP = {  # HLO while-body undercount correction per arch (layers scanned)
+    # family -> number of scanned iterations for the dominant loop
+}
+
+
+def n_micro_for(n_params: int) -> int:
+    # mirrors launch/dryrun.py's microbatch heuristic
+    return 8 if n_params > 50e9 else (4 if n_params > 12e9 else
+                                      (2 if n_params > 4e9 else 1))
+
+
+def scan_correction(cfg, shape, n_params: int) -> float:
+    """XLA cost_analysis counts each while body once; approximate the true
+    totals by multiplying by the dominant loops' trip counts (layer scans,
+    nested inner scans, and the microbatch accumulation scan). Crude — the
+    roofline's authoritative terms are the analytic ones; HLO-derived numbers
+    are a cross-check."""
+    layers = 1.0 if cfg.xlstm else float(cfg.n_layers)
+    micro = n_micro_for(n_params) if shape.kind == "train" else 1
+    return layers * micro
+
+
+def load_records(dryrun_dir: str = "experiments/dryrun"):
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir, "*.json"))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def roofline_row(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    cfg = arch_for_shape(configs.get(rec["arch"]), SHAPES[rec["shape"]])
+    shape = SHAPES[rec["shape"]]
+    chips = rec["n_devices"]
+    import jax
+
+    from repro.models import transformer as tf
+
+    pshapes = jax.eval_shape(lambda k: tf.init_params(cfg, k),
+                             jax.random.key(0))
+    n_params = sum(x.size for x in jax.tree_util.tree_leaves(pshapes))
+
+    mf = model_flops(cfg, shape, n_params)
+    hbm = analytic_hbm_bytes(cfg, shape, n_params, rec.get("fl", False))
+    corr = scan_correction(cfg, shape, n_params)
+    coll = rec["collectives"]["total_bytes"] * corr
+    hlo_flops = rec["cost"].get("flops", 0.0) * chips * corr
+
+    t_compute = mf / (chips * PEAK_FLOPS_BF16)
+    t_memory = hbm / (chips * HBM_BW)
+    t_coll = coll / (chips * ICI_BW)
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "fl": rec.get("fl", False), "chips": chips,
+        "model_flops": mf, "hlo_flops": hlo_flops,
+        "useful_ratio": mf / hlo_flops if hlo_flops else float("nan"),
+        "hbm_bytes": hbm, "collective_bytes": coll,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "bottleneck": bottleneck,
+        "mem_per_device_gib": rec["memory"].get(
+            "per_device_total_bytes", 0) / 2**30,
+    }
+
+
+def run(quick: bool = False):
+    rows = []
+    for rec in load_records():
+        r = roofline_row(rec)
+        if r is None:
+            continue
+        rows.append((
+            f"roofline/{r['arch']}/{r['shape']}/{r['mesh']}"
+            + ("/fl" if r["fl"] else ""),
+            r["t_compute_s"] * 1e6,
+            f"t_compute={r['t_compute_s']:.4f}s;t_memory={r['t_memory_s']:.4f}s;"
+            f"t_collective={r['t_collective_s']:.4f}s;"
+            f"bottleneck={r['bottleneck']};"
+            f"model_tflops={r['model_flops']/1e12:.1f};"
+            f"useful_ratio={r['useful_ratio']:.2f};"
+            f"mem_dev={r['mem_per_device_gib']:.2f}GiB"))
+    return rows

@@ -1,0 +1,50 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` shrinks every run
+(used in CI); the default sizes match EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset: table1,table2,fig1,fig3,roofline")
+    args = ap.parse_args()
+
+    from benchmarks import (fig1_sparsity_accuracy, fig3_thgs_vs_flat,
+                            roofline, table1_model_sizes, table2_comm_cost)
+
+    suites = {
+        "table1": table1_model_sizes.run,
+        "table2": table2_comm_cost.run,
+        "fig1": fig1_sparsity_accuracy.run,
+        "fig3": fig3_thgs_vs_flat.run,
+        "roofline": roofline.run,
+    }
+    chosen = (args.only.split(",") if args.only else list(suites))
+
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in chosen:
+        t0 = time.time()
+        try:
+            rows = suites[key](quick=args.quick)
+        except Exception as e:  # keep the suite going; report the failure
+            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
+            failures += 1
+            continue
+        for name, us, derived in rows:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+        print(f"# {key} finished in {time.time()-t0:.1f}s", file=sys.stderr)
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,28 @@
+"""Paper Table 1: model parameter sizes and update volumes (exact)."""
+import time
+
+import jax
+
+from repro.core import costs
+from repro.models.paper_models import PAPER_MODELS, TABLE1_PARAMS
+
+# Table 1 "update volume" column: m * 64bit (double-precision accounting)
+TABLE1_VOLUMES = {"mnist_mlp": "1.2M", "mnist_cnn": "4.44M",
+                  "cifar_mlp": "44.6M", "cifar_vgg16": "112M"}
+
+
+def run(quick: bool = False):
+    rows = []
+    for name, model in PAPER_MODELS.items():
+        t0 = time.time()
+        p = jax.eval_shape(model.init, jax.random.key(0))
+        n = sum(x.size for x in jax.tree_util.tree_leaves(p))
+        us = (time.time() - t0) * 1e6
+        dense_mb = costs.PAPER_BITS.dense_bits(n) / 8 / 2**20
+        ok = n == TABLE1_PARAMS[name]
+        rows.append((f"table1/{name}", us,
+                     f"params={n};published={TABLE1_PARAMS[name]};match={ok};"
+                     f"update_volume={dense_mb:.2f}MiB;"
+                     f"published_volume={TABLE1_VOLUMES[name]}"))
+        assert ok, f"Table 1 mismatch for {name}"
+    return rows

@@ -1,0 +1,67 @@
+"""Secure-aggregation walkthrough: what the server sees, and why masks cancel.
+
+Reproduces the paper's §4 safety analysis empirically: two banks exchange
+sparsified, masked model updates; the demo shows (1) the server's view of each
+individual update is masked at the mask-support positions, (2) the aggregate is
+exact, (3) the dense Bonawitz baseline costs the full vector while the sparse
+scheme moves only top-k ∪ mask-support.
+
+Run:  PYTHONPATH=src python examples/secure_aggregation_demo.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.costs import PAPER_BITS
+from repro.core.masks import client_masks, dh_agree
+from repro.core.secure_agg import aggregate_streams, encode_update
+from repro.core.types import SecureAggConfig, THGSConfig, tree_zeros_like
+
+
+def main():
+    n = 4096
+    thgs = THGSConfig(s0=0.02, alpha=1.0, s_min=0.02, time_varying=False)
+    sa = SecureAggConfig(mask_ratio=0.02, seed=2024)
+    banks = [0, 1]
+
+    print("1. DH agreement (control plane, once per federation):")
+    print(f"   bank0<->bank1 shared secret: {dh_agree(sa.seed, 0, 1):#x} "
+          f"(== {dh_agree(sa.seed, 1, 0):#x} from the other side)\n")
+
+    key = jax.random.key(7)
+    grads = {b: {"w": jax.random.normal(jax.random.fold_in(key, b), (n,))}
+             for b in banks}
+    streams, resids = {}, {}
+    for b in banks:
+        streams[b], resids[b] = encode_update(
+            grads[b], tree_zeros_like(grads[b]), [int(n * 0.02)], thgs, sa,
+            client=b, participants=banks, round_t=0)
+
+    s0 = streams[0][0]
+    print("2. what the SERVER sees from bank0 (one leaf):")
+    print(f"   {s0.k} slots of {n} ({s0.k/n:.1%}); "
+          f"first 5 values: {np.asarray(s0.values[:5]).round(3)}")
+    k_mask = sa.k_mask_for(n, 2)
+    mask = client_masks(sa, 0, banks, 0, 0, n, k_mask)
+    raw = np.asarray(grads[0]["w"])[np.asarray(s0.indices)]
+    sent = np.asarray(s0.values)
+    masked_slots = int((np.abs(sent - raw) > 1e-6).sum())
+    print(f"   {masked_slots} slots differ from the raw gradient "
+          f"(mask-protected); {s0.k - masked_slots} top-k slots are clear "
+          f"(paper §4 case 1 — sparsity itself is the cover)\n")
+
+    agg = aggregate_streams([streams[0], streams[1]], [(n,)], [jnp.float32])
+    expected = sum(
+        (grads[b]["w"] - resids[b]["w"]) / 2 for b in banks)
+    err = float(jnp.max(jnp.abs(agg[0] - expected)))
+    print(f"3. aggregate exactness: max |masked_sum - true_sparse_mean| = {err:.2e}")
+
+    sparse_bits = 2 * PAPER_BITS.sparse_bits(s0.k)
+    dense_bits = 2 * PAPER_BITS.dense_bits(n)
+    print(f"\n4. communication: sparse+masked = {sparse_bits/8:.0f} B, "
+          f"dense Bonawitz = {dense_bits/8:.0f} B "
+          f"-> {dense_bits/sparse_bits:.1f}x reduction")
+
+
+if __name__ == "__main__":
+    main()

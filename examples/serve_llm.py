@@ -1,0 +1,50 @@
+"""Serving example: batched prefill + greedy decode with KV caches.
+
+Serves a reduced assigned architecture with a batch of token requests —
+demonstrating the prefill/decode split the decode_32k / long_500k dry-run
+shapes exercise at production scale.
+
+Run:  PYTHONPATH=src python examples/serve_llm.py --arch yi-6b --n-new 16
+"""
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.data import make_lm_tokens
+from repro.launch.serve import greedy_generate
+from repro.models import transformer as tf
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=24)
+    ap.add_argument("--n-new", type=int, default=16)
+    args = ap.parse_args()
+
+    cfg = configs.reduced(configs.get(args.arch))
+    if not cfg.supports_decode:
+        raise SystemExit(f"{args.arch} is encoder-only: no decode step")
+    params = tf.init_params(cfg, jax.random.key(0))
+    prompts, _ = make_lm_tokens(cfg.vocab, args.batch, args.prompt_len, seed=1)
+    prompts = jnp.asarray(prompts)
+
+    cache_len = args.prompt_len + args.n_new + 8
+    t0 = time.time()
+    out = greedy_generate(params, cfg, prompts, args.n_new, cache_len)
+    dt = time.time() - t0
+    print(f"arch={cfg.name} (reduced)  batch={args.batch} "
+          f"prompt={args.prompt_len} new={args.n_new}")
+    for i in range(args.batch):
+        print(f"  req{i}: prompt={list(map(int, prompts[i][:8]))}... "
+              f"-> generated={list(map(int, out[i]))}")
+    print(f"{args.batch * args.n_new} tokens in {dt:.2f}s "
+          f"({args.batch * args.n_new / dt:.1f} tok/s on 1 CPU core)")
+
+
+if __name__ == "__main__":
+    main()

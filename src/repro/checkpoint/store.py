@@ -1,0 +1,90 @@
+"""Sharding-aware numpy checkpointer.
+
+Saves a pytree to ``<dir>/step_<n>.npz`` (leaves gathered to host, keyed by
+flattened tree path) plus a tiny JSON manifest with dtypes/shapes. Restore
+rebuilds the pytree and, when given a target sharding tree, ``jax.device_put``s
+each leaf back onto the mesh — so a checkpoint written from a sharded train
+state restores onto any mesh of the same logical shape.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+_SEP = "::"
+
+
+def _flatten(tree: PyTree) -> dict[str, jax.Array]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = _SEP.join(str(p) for p in path)
+        out[key] = leaf
+    return out
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    # numpy's savez can't round-trip ml_dtypes (bfloat16): widen those to f32
+    # on disk; restore() casts back per the manifest/`like` dtypes.
+    def to_np(v):
+        arr = np.asarray(jax.device_get(v))
+        if arr.dtype not in (np.float64, np.float32, np.float16, np.int64,
+                             np.int32, np.int16, np.int8, np.uint8, np.bool_,
+                             np.uint32, np.uint64):
+            arr = np.asarray(jax.device_get(v.astype(jax.numpy.float32)))
+        return arr
+
+    arrays = {k: to_np(v) for k, v in flat.items()}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    tmp = path + ".tmp.npz"  # .npz suffix so np.savez doesn't append another
+    np.savez(tmp, **arrays)
+    os.replace(tmp, path)
+    manifest = {
+        "step": step,
+        "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
+                   for k, v in arrays.items()},
+    }
+    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+        json.dump(manifest, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(m.group(1)) for f in os.listdir(ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))]
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree,
+            shardings: Optional[PyTree] = None) -> PyTree:
+    """Rebuild the pytree of ``like``'s structure from disk; optionally place
+    each leaf with the matching sharding from ``shardings``."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    data = np.load(path)
+    flat_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    shard_leaves = (jax.tree_util.tree_leaves(shardings)
+                    if shardings is not None else [None] * len(flat_like))
+    leaves = []
+    for (pth, leaf), shd in zip(flat_like, shard_leaves):
+        key = _SEP.join(str(p) for p in pth)
+        if key not in data:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = data[key]
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: "
+                             f"{arr.shape} vs {leaf.shape}")
+        jarr = jax.numpy.asarray(arr).astype(leaf.dtype)  # jnp knows bf16
+        leaves.append(jax.device_put(jarr, shd) if shd is not None
+                      else jarr)
+    return jax.tree_util.tree_unflatten(treedef, leaves)

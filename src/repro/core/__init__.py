@@ -1,0 +1,35 @@
+"""Core: THGS sparsification + sparse-mask secure aggregation (the paper's contribution)."""
+from repro.core.types import (
+    CommRecord,
+    FedConfig,
+    SecureAggConfig,
+    SparseStream,
+    THGSConfig,
+    tree_size,
+    tree_zeros_like,
+)
+from repro.core.schedules import layer_rates, leaf_ks, round_rate
+from repro.core.sparsify import densify, first_occurrence_mask, member_of, sparsify_leaf
+from repro.core.masks import client_masks, dh_agree, pair_mask
+from repro.core.secure_agg import (
+    aggregate_streams,
+    dense_masked_update,
+    encode_leaf,
+    encode_update,
+)
+from repro.core.fedavg import FederatedState, client_update, init_state, run_round
+from repro.core import costs
+from repro.core.blocked import (BlockedStream, decode_blocked_sum,
+                                encode_leaf_blocked,
+                                sharding_aligned_transform)
+
+__all__ = [
+    "CommRecord", "FedConfig", "SecureAggConfig", "SparseStream", "THGSConfig",
+    "tree_size", "tree_zeros_like", "layer_rates", "leaf_ks", "round_rate",
+    "densify", "first_occurrence_mask", "member_of", "sparsify_leaf",
+    "client_masks", "dh_agree", "pair_mask", "aggregate_streams",
+    "dense_masked_update", "encode_leaf", "encode_update",
+    "FederatedState", "client_update", "init_state", "run_round", "costs",
+    "BlockedStream", "decode_blocked_sum", "encode_leaf_blocked",
+    "sharding_aligned_transform",
+]

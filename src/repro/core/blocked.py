@@ -1,0 +1,212 @@
+"""Block-local THGS encode for the datacenter mesh (jit-native, static shapes).
+
+The single-host path (core/secure_agg.py) does exact per-leaf top-k; at 10^9+
+parameters sharded over 256 devices a global top-k is a giant sort collective.
+The production path splits each leaf into ``n_blocks`` contiguous blocks
+(aligned with the device layout) and runs the identical encode *per block* —
+the standard distributed adaptation of layer-wise top-k (DGC/STC, DESIGN.md §4).
+
+Every helper here is shape-static and differentiation-free; it runs inside the
+pjit/shard_map train step.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class BlockedStream(NamedTuple):
+    indices: jax.Array   # int32[n_blocks, k_total] — global flat indices
+    values: jax.Array    # f32[n_blocks, k_total]
+
+
+def _first_occurrence_rows(idx: jax.Array) -> jax.Array:
+    """Per-row first-occurrence mask for [n_blocks, k] index rows."""
+    order = jnp.argsort(idx, axis=-1)
+    sorted_idx = jnp.take_along_axis(idx, order, -1)
+    is_first = jnp.concatenate(
+        [jnp.ones_like(sorted_idx[:, :1], bool),
+         sorted_idx[:, 1:] != sorted_idx[:, :-1]], -1)
+    out = jnp.zeros_like(is_first)
+    return out.at[jnp.arange(idx.shape[0])[:, None], order].set(is_first)
+
+
+def block_layout(size: int, n_blocks: int) -> tuple[int, int, int]:
+    """(n_blocks, block_len, padded) — small leaves collapse to one block."""
+    if size < 4 * n_blocks:
+        n_blocks = 1
+    m = -(-size // n_blocks)
+    return n_blocks, m, n_blocks * m
+
+
+def sharding_aligned_transform(shape, pspec, axis_sizes: dict,
+                               intra_order: tuple):
+    """Zero-communication blocked view of a sharded leaf.
+
+    Splits each dim that PartitionSpec shards into (axis_size, dim/axis_size),
+    moves the axis-sized dims to the front (in ``intra_order``), and flattens —
+    so block i is exactly device i's shard, and the reshape/transpose never
+    moves data. Forcing an arbitrary row-block layout instead costs two
+    param-sized all-to-alls per step (measured: +25 GiB collectives on yi-6b).
+
+    Returns (to_blocks, from_blocks, n_blocks, m, front_axes) or None when the
+    spec has multi-axis entries (caller falls back to the generic layout).
+    """
+    import numpy as _np
+
+    spec = list(pspec) + [None] * (len(shape) - len(pspec))
+    split_shape, perm_front, rest_positions = [], {}, []
+    pos = 0
+    for d, ax in zip(shape, spec):
+        if ax is None:
+            split_shape.append(d)
+            rest_positions.append(pos)
+            pos += 1
+        elif isinstance(ax, str) and ax in axis_sizes and d % axis_sizes[ax] == 0:
+            n = axis_sizes[ax]
+            split_shape += [n, d // n]
+            perm_front[ax] = pos
+            rest_positions.append(pos + 1)
+            pos += 2
+        else:
+            return None  # tuple-axis or non-divisible: generic fallback
+    front = [perm_front[a] for a in intra_order if a in perm_front]
+    if not front:
+        return None  # fully replicated leaf
+    perm = front + rest_positions
+    n_blocks = 1
+    for a in intra_order:
+        if a in perm_front:
+            n_blocks *= axis_sizes[a]
+    m = int(_np.prod([split_shape[i] for i in rest_positions])) if rest_positions else 1
+    inv_perm = _np.argsort(perm).tolist()
+
+    def to_blocks(x):
+        return x.reshape(split_shape).transpose(perm).reshape(n_blocks, m)
+
+    def from_blocks(b):
+        mid = [split_shape[i] for i in perm]
+        return b.reshape(mid).transpose(inv_perm).reshape(shape)
+
+    front_axes = tuple(a for a in intra_order if a in perm_front)
+    return to_blocks, from_blocks, n_blocks, m, front_axes
+
+
+def encode_leaf_blocked(
+    g: jax.Array,
+    residual: jax.Array,
+    k_block: int,
+    n_blocks: int,
+    *,
+    mask_key: jax.Array | None = None,
+    k_mask_block: int = 0,
+    n_peers: int = 0,
+    self_id: jax.Array | None = None,
+    mask_lo: float = -1.0,
+    mask_q: float = 2.0,
+    block_sharding=None,  # NamedSharding for the [n_blocks, m] view; blocks
+                          # align with devices so every op below is shard-local
+    transform=None,       # (to_blocks, from_blocks, n_blocks, m) from
+                          # sharding_aligned_transform: zero-comm block view
+) -> tuple[BlockedStream, jax.Array]:
+    """Error-feedback accumulate -> block-local top-k (∪ pairwise mask support).
+
+    When mask args are given, pairwise masks are generated counter-based per
+    (unordered pair, leaf, block): peer j in [0, n_peers) != self contributes
+    support indices and signed uniform values exactly as core/masks.py, so the
+    cross-participant sum cancels. Returns (stream, new_residual).
+    """
+    size = g.size
+    if transform is not None:
+        to_blocks, from_blocks, n_blocks, m = transform[:4]
+    else:
+        n_blocks, m, padded = block_layout(size, n_blocks)
+
+        def to_blocks(x):
+            # keep the narrow dtype through the reshape boundary and constrain
+            # the block view immediately — a replicated f32 flat copy of a
+            # multi-GiB leaf otherwise materializes before the constraint
+            flat = jnp.pad(x.reshape(-1), (0, padded - size))
+            b = flat.reshape(n_blocks, m)
+            if block_sharding is not None and n_blocks > 1:
+                b = jax.lax.with_sharding_constraint(b, block_sharding)
+            return b
+
+        from_blocks = None
+    k_block = int(min(k_block, m))
+
+    blocks = (to_blocks(residual).astype(jnp.float32)
+              + to_blocks(g).astype(jnp.float32))
+    if block_sharding is not None and n_blocks > 1 and transform is None:
+        blocks = jax.lax.with_sharding_constraint(blocks, block_sharding)
+
+    top_abs, idx_t = jax.lax.top_k(jnp.abs(blocks), k_block)   # [nb, kb]
+
+    if mask_key is not None and k_mask_block > 0 and n_peers >= 2:
+        pair_idx_list, pair_val_list = [], []
+        for peer in range(n_peers):
+            # unordered pair id; self==peer contributes zeros (masked out below)
+            lo = jnp.minimum(self_id, peer)
+            hi = jnp.maximum(self_id, peer)
+            pk = jax.random.fold_in(jax.random.fold_in(mask_key, lo), hi)
+            k_i, k_v = jax.random.split(pk)
+            pidx = jax.random.randint(k_i, (n_blocks, k_mask_block), 0, m,
+                                      dtype=jnp.int32)
+            pval = jax.random.uniform(k_v, (n_blocks, k_mask_block),
+                                      minval=mask_lo, maxval=mask_lo + mask_q)
+            sign = jnp.where(self_id < peer, 1.0, -1.0)
+            active = (self_id != peer).astype(jnp.float32)
+            pair_idx_list.append(pidx)
+            pair_val_list.append(sign * active * pval)
+        idx_m = jnp.concatenate(pair_idx_list, -1)
+        val_m = jnp.concatenate(pair_val_list, -1)
+        idx = jnp.concatenate([idx_t, idx_m], -1)
+        mask_vals = jnp.concatenate(
+            [jnp.zeros_like(top_abs), val_m], -1)
+    else:
+        idx = idx_t
+        mask_vals = jnp.zeros_like(top_abs)
+
+    first = _first_occurrence_rows(idx)
+    gvals = jnp.take_along_axis(blocks, idx, -1)
+    vals = gvals * first.astype(blocks.dtype) + mask_vals
+
+    rows = jnp.arange(n_blocks)[:, None]
+    new_blocks = blocks.at[rows, idx].set(0.0)
+    if transform is not None:
+        new_resid = from_blocks(new_blocks)
+    else:
+        new_resid = new_blocks.reshape(-1)[:size].reshape(g.shape)
+
+    global_idx = (rows * m + idx).astype(jnp.int32)
+    return BlockedStream(indices=global_idx, values=vals), new_resid.astype(
+        residual.dtype)
+
+
+def decode_blocked_sum(streams_idx: jax.Array, streams_vals: jax.Array,
+                       size: int, n_blocks: int, weight: float,
+                       block_sharding=None, transform=None) -> jax.Array:
+    """Scatter-add gathered streams [n_fed, nb, k] into a dense flat leaf.
+
+    The dense buffer is kept in its [n_blocks, m] device-aligned layout while
+    scattering (a flat replicated f32 buffer of a multi-GiB leaf per device is
+    what this avoids); the caller reshapes/re-constrains to the leaf layout.
+    """
+    if transform is not None:
+        from_blocks, nb, m = transform[1], transform[2], transform[3]
+    else:
+        nb, m, padded = block_layout(size, n_blocks)
+        from_blocks = None
+    dense = jnp.zeros((nb, m), jnp.float32)
+    if block_sharding is not None and nb > 1:
+        dense = jax.lax.with_sharding_constraint(dense, block_sharding)
+    flat_idx = streams_idx.reshape(-1)
+    dense = dense.at[flat_idx // m, flat_idx % m].add(
+        weight * streams_vals.reshape(-1))
+    if block_sharding is not None and nb > 1:
+        dense = jax.lax.with_sharding_constraint(dense, block_sharding)
+    if transform is not None:
+        return from_blocks(dense)  # leaf-shaped, zero-comm layout inverse
+    return dense.reshape(-1)[:size]

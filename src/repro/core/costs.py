@@ -1,0 +1,69 @@
+"""Communication-cost accounting (paper §5.2, Eq. 6-8).
+
+The paper counts a sparse element as 96 bit (64-bit float value + 32-bit index)
+and a dense element as 64 bit. On TPU we transmit float32 values (64 bit/element
+sparse, 32 bit dense); both accountings are reported so EXPERIMENTS.md can compare
+against the paper's Table 2 like-for-like.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+from repro.core.types import CommRecord
+
+
+@dataclasses.dataclass(frozen=True)
+class BitModel:
+    value_bits: int = 64
+    index_bits: int = 32
+
+    def sparse_bits(self, k_total: int) -> int:
+        return k_total * (self.value_bits + self.index_bits)
+
+    def dense_bits(self, size: int) -> int:
+        return size * self.value_bits
+
+
+PAPER_BITS = BitModel(value_bits=64, index_bits=32)   # Eq. 6: 96 bit / element
+TPU_BITS = BitModel(value_bits=32, index_bits=32)     # f32 + int32
+
+
+def upload_bits_sparse(ks: Sequence[int], k_masks: Sequence[int], n_pairs: int,
+                       bits: BitModel = PAPER_BITS) -> int:
+    """Per-client upload for one round: top-k slots + per-pair mask slots (Eq. 6)."""
+    total_slots = sum(ks) + n_pairs * sum(k_masks)
+    return bits.sparse_bits(total_slots)
+
+
+def upload_bits_dense(model_size: int, bits: BitModel = PAPER_BITS) -> int:
+    return bits.dense_bits(model_size)
+
+
+def round_record(
+    round_t: int,
+    model_size: int,
+    ks: Sequence[int],
+    k_masks: Sequence[int],
+    n_clients: int,
+    bits: BitModel = PAPER_BITS,
+) -> CommRecord:
+    """Eq. 7-8 for one aggregation round: uploads are sparse, downloads dense."""
+    up = n_clients * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits)
+    down = n_clients * upload_bits_dense(model_size, bits)
+    dense_up = n_clients * upload_bits_dense(model_size, bits)
+    return CommRecord(
+        round=round_t,
+        upload_bits=up,
+        download_bits=down,
+        dense_upload_bits=dense_up,
+        n_clients=n_clients,
+    )
+
+
+def total_upload_to_convergence(
+    n_rounds: int, per_round_bits: int
+) -> int:
+    """Eq. 7: c = n_rounds * (C*K) * c_up, with per_round_bits already summed
+    over the C*K selected clients."""
+    return n_rounds * per_round_bits

@@ -1,0 +1,186 @@
+"""Federated optimization loop: FedAvg / FedProx clients + THGS/secure-agg server.
+
+The transmitted "gradient update" of the paper is the local model delta after
+``local_steps`` of SGD (McMahan et al. 2017); THGS + secure aggregation compress
+that delta. This module is the single-host reference implementation used by the
+paper-scale benchmarks and tests; the datacenter-mesh variant lives in
+repro/launch/train.py and shares the encode/aggregate primitives.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import costs, schedules
+from repro.core.secure_agg import aggregate_streams, encode_update
+from repro.core.types import (
+    CommRecord,
+    FedConfig,
+    PyTree,
+    SecureAggConfig,
+    THGSConfig,
+    tree_zeros_like,
+)
+
+LossFn = Callable[[PyTree, Any], jax.Array]
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "local_steps", "prox_mu"))
+def client_update(
+    params: PyTree,
+    batches: Any,  # stacked leading axis = local_steps
+    loss_fn: LossFn,
+    local_steps: int,
+    lr: float,
+    prox_mu: float = 0.0,
+) -> tuple[PyTree, jax.Array]:
+    """Local SGD (optionally FedProx-proximal); returns (delta, mean loss)."""
+    grad_fn = jax.value_and_grad(loss_fn)
+
+    def prox_term(p):
+        if prox_mu == 0.0:
+            return 0.0
+        sq = sum(
+            jnp.sum((a - b) ** 2)
+            for a, b in zip(jax.tree_util.tree_leaves(p),
+                            jax.tree_util.tree_leaves(params))
+        )
+        return 0.5 * prox_mu * sq
+
+    def step(p, batch):
+        loss, g = grad_fn(p, batch)
+        if prox_mu != 0.0:
+            gp = jax.grad(lambda q: prox_term(q))(p)
+            g = jax.tree_util.tree_map(jnp.add, g, gp)
+        p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+        return p, loss
+
+    new_params, losses = jax.lax.scan(
+        step, params, batches, length=local_steps
+    )
+    delta = jax.tree_util.tree_map(lambda a, b: a - b, new_params, params)
+    return delta, jnp.mean(losses)
+
+
+@dataclasses.dataclass
+class FederatedState:
+    params: PyTree
+    residuals: dict[int, PyTree]        # per-client error feedback
+    losses: dict[int, float]            # last local loss per client (for Eq. 2 beta)
+    round: int = 0
+    comm_log: list[CommRecord] = dataclasses.field(default_factory=list)
+
+
+def init_state(params: PyTree, fed: FedConfig) -> FederatedState:
+    return FederatedState(
+        params=params,
+        residuals={c: tree_zeros_like(params) for c in range(fed.n_clients)},
+        losses={},
+    )
+
+
+def run_round(
+    state: FederatedState,
+    client_batches: dict[int, Any],
+    loss_fn: LossFn,
+    fed: FedConfig,
+    thgs: THGSConfig | None,
+    sa: SecureAggConfig,
+    bits: costs.BitModel = costs.PAPER_BITS,
+) -> FederatedState:
+    """One aggregation round over the provided participating clients.
+
+    thgs=None -> dense FedAvg/FedProx baseline (optionally dense-masked SA).
+    """
+    participants = sorted(client_batches.keys())
+    leaves = jax.tree_util.tree_leaves(state.params)
+    leaf_shapes = [x.shape for x in leaves]
+    leaf_dtypes = [x.dtype for x in leaves]
+    model_size = sum(x.size for x in leaves)
+
+    deltas, streams_all = {}, {}
+    for c in participants:
+        delta, loss = client_update(
+            state.params,
+            client_batches[c],
+            loss_fn,
+            fed.local_steps,
+            fed.local_lr,
+            fed.prox_mu if fed.algorithm == "fedprox" else 0.0,
+        )
+        loss = float(loss)
+        if thgs is not None:
+            ks = schedules.leaf_ks(
+                thgs,
+                [x.size for x in leaves],
+                t=state.round,
+                total_rounds=fed.rounds,
+                loss_prev=state.losses.get(c),
+                loss_curr=loss,
+            )
+            streams, new_res = encode_update(
+                delta, state.residuals[c], ks, thgs, sa,
+                client=c, participants=participants, round_t=state.round,
+            )
+            streams_all[c] = streams
+            state.residuals[c] = new_res
+        else:
+            deltas[c] = delta
+        state.losses[c] = loss
+
+    if thgs is not None:
+        agg_leaves = aggregate_streams(
+            [streams_all[c] for c in participants], leaf_shapes, leaf_dtypes
+        )
+        agg = jax.tree_util.tree_unflatten(
+            jax.tree_util.tree_structure(state.params), agg_leaves
+        )
+        ks_acct = [s.k for s in streams_all[participants[0]]]
+        rec = CommRecord(
+            round=state.round,
+            upload_bits=len(participants) * bits.sparse_bits(sum(ks_acct)),
+            download_bits=len(participants) * bits.dense_bits(model_size),
+            dense_upload_bits=len(participants) * bits.dense_bits(model_size),
+            n_clients=len(participants),
+        )
+    else:
+        if sa.enabled:
+            from repro.core.secure_agg import dense_masked_update
+
+            masked = []
+            for c in participants:
+                leaves_c = jax.tree_util.tree_leaves(deltas[c])
+                masked.append([
+                    dense_masked_update(x, sa, c, participants, state.round, i)
+                    for i, x in enumerate(leaves_c)
+                ])
+            summed = [
+                sum(m[i] for m in masked) / len(participants)
+                for i in range(len(leaves))
+            ]
+            agg = jax.tree_util.tree_unflatten(
+                jax.tree_util.tree_structure(state.params),
+                [s.astype(d) for s, d in zip(summed, leaf_dtypes)],
+            )
+        else:
+            agg = jax.tree_util.tree_map(
+                lambda *xs: sum(xs) / len(xs), *[deltas[c] for c in participants]
+            )
+        rec = CommRecord(
+            round=state.round,
+            upload_bits=len(participants) * bits.dense_bits(model_size),
+            download_bits=len(participants) * bits.dense_bits(model_size),
+            dense_upload_bits=len(participants) * bits.dense_bits(model_size),
+            n_clients=len(participants),
+        )
+
+    state.params = jax.tree_util.tree_map(
+        lambda p, d: p + fed.server_lr * d, state.params, agg
+    )
+    state.comm_log.append(rec)
+    state.round += 1
+    return state

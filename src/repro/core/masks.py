@@ -1,0 +1,98 @@
+"""Pairwise encryption masks with sparse support (paper §3.2, Eq. 3-5).
+
+Bonawitz-style secure aggregation: clients a<b agree (via a DH exchange, which is
+control-plane and simulated host-side by ``dh_agree``) on a common seed; each round
+both derive the SAME pseudo-random sparse support S_ab and mask values m_ab, and
+client a adds +m_ab while b adds -m_ab, so the server-side sum cancels exactly.
+
+Sparse-mask adaptation (the paper's contribution): the mask is nonzero only on
+``k_mask`` pseudo-random positions (expected fraction ``mask_ratio / x`` per pair,
+matching Eq. 4's threshold sigma = p + (k/x) q on a uniform [p, p+q) matrix). Both
+endpoints transmit every support position, so no mask is ever left uncancelled —
+the failure mode of naive sparsify-then-mask that §2.2 analyses.
+
+Masks are counter-based (jax.random.fold_in chains): regenerated on the fly each
+round, never stored, which is also how the TPU kernel variant works.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SecureAggConfig
+
+
+class PairMask(NamedTuple):
+    indices: jax.Array  # int32[k_mask] support positions (flat, may repeat)
+    values: jax.Array   # float32[k_mask] signed mask values in +-[p, p+q)
+
+
+def dh_agree(seed: int, a: int, b: int) -> int:
+    """Simulated Diffie-Hellman agreement -> shared pair secret (host-side).
+
+    Stands in for the DH exchange of the secure-aggregation protocol; both parties
+    can compute it independently (here: a keyed hash of the unordered pair).
+    The data-plane cost of the protocol — mask transmission — is what the
+    framework models; DH itself is a once-per-federation control-plane exchange.
+    """
+    lo, hi = (a, b) if a < b else (b, a)
+    h = hashlib.sha256(f"{seed}:{lo}:{hi}".encode()).digest()
+    return int.from_bytes(h[:8], "little")
+
+
+def pair_key(cfg: SecureAggConfig, a: int, b: int, round_t: int) -> jax.Array:
+    secret = dh_agree(cfg.seed, a, b)
+    key = jax.random.key(secret % (2**31 - 1))
+    return jax.random.fold_in(key, round_t)
+
+
+def pair_mask(
+    cfg: SecureAggConfig,
+    a: int,
+    b: int,
+    round_t: int,
+    leaf_id: int,
+    size: int,
+    k_mask: int,
+) -> PairMask:
+    """Mask of client ``a`` towards client ``b`` for one leaf, one round.
+
+    Deterministic in (unordered pair, round, leaf): both endpoints generate
+    identical (indices, |values|); the endpoint with the smaller id adds +values,
+    the other -values (Bonawitz sign convention), so sums cancel.
+    """
+    key = jax.random.fold_in(pair_key(cfg, a, b, round_t), leaf_id)
+    k_idx, k_val = jax.random.split(key)
+    idx = jax.random.randint(k_idx, (k_mask,), 0, size, dtype=jnp.int32)
+    mag = jax.random.uniform(
+        k_val, (k_mask,), minval=cfg.p, maxval=cfg.p + cfg.q, dtype=jnp.float32
+    )
+    sign = 1.0 if a < b else -1.0
+    return PairMask(indices=idx, values=sign * mag)
+
+
+def client_masks(
+    cfg: SecureAggConfig,
+    client: int,
+    others: Sequence[int],
+    round_t: int,
+    leaf_id: int,
+    size: int,
+    k_mask: int,
+) -> PairMask:
+    """Concatenated masks of ``client`` towards every other participant."""
+    parts = [
+        pair_mask(cfg, client, b, round_t, leaf_id, size, k_mask)
+        for b in others
+        if b != client
+    ]
+    if not parts:
+        z = jnp.zeros((0,), jnp.int32)
+        return PairMask(indices=z, values=jnp.zeros((0,), jnp.float32))
+    return PairMask(
+        indices=jnp.concatenate([p.indices for p in parts]),
+        values=jnp.concatenate([p.values for p in parts]),
+    )

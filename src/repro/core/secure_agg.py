@@ -1,0 +1,154 @@
+"""Secure aggregation with sparse encryption masks (paper Alg. 2, Eq. 5).
+
+The XLA-native realization of ``G_sparse = encode((G + mask_e) ⊙ mask_t)`` with
+``mask_t = topk(|acc|) ∪ support(mask_e)`` is a static-shape *unified stream* per
+leaf and client:
+
+    idx   = concat(topk_idx, mask_support_idx)           # static k + (x-1)*k_mask
+    vals  = acc[idx] * first_occurrence(idx) + mask_vals # dedup double-hits
+    resid = acc.at[idx].set(0)                           # Alg.2 line 17
+
+Scatter-adding every client's (idx, vals) on the server reproduces
+``sum_clients acc ⊙ mask_t`` exactly: the gradient contribution of an index that
+appears in several slots is counted once (first-occurrence gate), and the pairwise
+mask values cancel because both endpoints of each pair transmit the same support
+(see core/masks.py). This is the property tests/test_secure_agg.py verifies.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.masks import PairMask, client_masks
+from repro.core.sparsify import first_occurrence_mask
+from repro.core.types import SecureAggConfig, SparseStream, THGSConfig
+
+
+class EncodedLeaf(NamedTuple):
+    stream: SparseStream
+    residual: jax.Array
+
+
+def encode_leaf(
+    grad: jax.Array,
+    residual: jax.Array,
+    k: int,
+    thgs: THGSConfig,
+    mask: PairMask | None,
+) -> EncodedLeaf:
+    """Error-feedback accumulate -> top-k ∪ mask support -> unified stream."""
+    acc = (residual + grad).astype(jnp.float32)
+    flat = acc.reshape(-1)
+    n = flat.shape[0]
+    k = int(min(k, n))
+    abs_flat = jnp.abs(flat)
+    if thgs.selector == "sampled":
+        from repro.core.sparsify import _sampled_topk
+
+        _, idx_t = _sampled_topk(abs_flat, k, thgs.sample_frac)
+    else:
+        _, idx_t = jax.lax.top_k(abs_flat, k)
+    idx_t = idx_t.astype(jnp.int32)
+
+    if mask is not None and mask.indices.shape[0] > 0:
+        idx = jnp.concatenate([idx_t, mask.indices])
+        mask_vals = jnp.concatenate(
+            [jnp.zeros((k,), jnp.float32), mask.values]
+        )
+    else:
+        idx = idx_t
+        mask_vals = jnp.zeros((k,), jnp.float32)
+
+    first = first_occurrence_mask(idx)
+    vals = flat[idx] * first.astype(flat.dtype) + mask_vals
+    new_resid = flat.at[idx].set(0.0).reshape(acc.shape)
+    return EncodedLeaf(
+        stream=SparseStream(indices=idx, values=vals),
+        residual=new_resid.astype(residual.dtype),
+    )
+
+
+def encode_update(
+    update: dict | list,
+    residuals: dict | list,
+    ks: Sequence[int],
+    thgs: THGSConfig,
+    sa: SecureAggConfig,
+    client: int,
+    participants: Sequence[int],
+    round_t: int,
+):
+    """Encode a whole pytree update. Returns (streams, new_residuals)."""
+    leaves, treedef = jax.tree_util.tree_flatten(update)
+    res_leaves = jax.tree_util.tree_leaves(residuals)
+    assert len(leaves) == len(res_leaves) == len(ks)
+    streams, new_res = [], []
+    for leaf_id, (g, r, k) in enumerate(zip(leaves, res_leaves, ks)):
+        if sa.enabled and len(participants) >= 2:
+            k_mask = sa.k_mask_for(g.size, len(participants))
+            mask = client_masks(
+                sa, client, participants, round_t, leaf_id, g.size, k_mask
+            )
+        else:
+            mask = None
+        enc = encode_leaf(g, r, k, thgs, mask)
+        streams.append(enc.stream)
+        new_res.append(enc.residual)
+    return streams, jax.tree_util.tree_unflatten(treedef, new_res)
+
+
+def aggregate_streams(
+    client_streams: Sequence[Sequence[SparseStream]],
+    leaf_shapes: Sequence[tuple],
+    leaf_dtypes: Sequence,
+    weights: Sequence[float] | None = None,
+) -> list[jax.Array]:
+    """Server-side decode+sum: scatter-add every client's stream per leaf.
+
+    Pairwise masks cancel in the sum; the result equals
+    ``sum_c w_c * (acc_c ⊙ mask_t_c)`` reshaped to the leaf shapes.
+    """
+    n_clients = len(client_streams)
+    if weights is None:
+        weights = [1.0 / n_clients] * n_clients
+    out = []
+    for leaf_id, shape in enumerate(leaf_shapes):
+        size = 1
+        for d in shape:
+            size *= d
+        dense = jnp.zeros((size,), jnp.float32)
+        for c in range(n_clients):
+            s = client_streams[c][leaf_id]
+            dense = dense.at[s.indices].add(weights[c] * s.values)
+        out.append(dense.reshape(shape).astype(leaf_dtypes[leaf_id]))
+    return out
+
+
+def dense_masked_update(
+    update_leaf: jax.Array,
+    sa: SecureAggConfig,
+    client: int,
+    participants: Sequence[int],
+    round_t: int,
+    leaf_id: int,
+) -> jax.Array:
+    """Classic (non-sparse) Bonawitz masking of a dense update — the SA baseline.
+
+    Full-size pairwise masks added to the dense update; aggregation is a plain
+    sum/psum and transmits every element (the communication cost the paper's
+    sparse-mask method removes).
+    """
+    from repro.core.masks import pair_key
+
+    flat = update_leaf.reshape(-1).astype(jnp.float32)
+    for b in participants:
+        if b == client:
+            continue
+        key = jax.random.fold_in(pair_key(sa, client, b, round_t), leaf_id)
+        mag = jax.random.uniform(
+            key, flat.shape, minval=sa.p, maxval=sa.p + sa.q, dtype=jnp.float32
+        )
+        flat = flat + (1.0 if client < b else -1.0) * mag
+    return flat.reshape(update_leaf.shape)

@@ -1,0 +1,111 @@
+"""THGS sparsification primitives (paper Alg. 1).
+
+Per leaf (== per layer, "hierarchical"): accumulate the incoming gradient into the
+error-feedback residual, select the top-k of the accumulated magnitude, emit the
+selected (indices, values) and keep the remainder as the new residual.
+
+Selection strategies:
+  * 'exact'   — jax.lax.top_k over the flat leaf (small/medium tensors).
+  * 'sampled' — threshold estimated from a strided subsample's top-k; membership by
+                magnitude >= threshold, compacted to a static k via top_k on the
+                masked magnitudes (ties at the threshold resolved arbitrarily).
+                Sub-linear selection cost; used for very large leaves.
+  * 'local'   — the caller splits the leaf across shards and runs 'exact' per shard
+                with k/num_shards each (the launcher does this inside shard_map).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.types import SparseStream, THGSConfig
+
+
+class LeafSparsification(NamedTuple):
+    stream: SparseStream   # top-k indices/values of the accumulated gradient
+    residual: jax.Array    # same shape as the leaf; acc with top-k zeroed
+    threshold: jax.Array   # scalar delta actually used
+
+
+def _exact_topk(flat_abs: jax.Array, k: int):
+    vals, idx = jax.lax.top_k(flat_abs, k)
+    return vals, idx
+
+
+def _sampled_topk(flat_abs: jax.Array, k: int, sample_frac: float):
+    """Estimate the k-th magnitude from a strided subsample, then compact.
+
+    The estimate is conservative (threshold from the sample's matching quantile);
+    we still return exactly k entries by top_k over the thresholded magnitudes,
+    which equals exact top-k whenever the estimate is below the true k-th value
+    and degrades gracefully (ties near delta) otherwise.
+    """
+    n = flat_abs.shape[0]
+    m = max(int(n * sample_frac), min(n, 1024))
+    stride = max(n // m, 1)
+    sample = flat_abs[::stride]
+    ks = max(1, min(sample.shape[0], int(k * sample.shape[0] / n)))
+    thresh = jax.lax.top_k(sample, ks)[0][-1]
+    gated = jnp.where(flat_abs >= thresh, flat_abs, 0.0)
+    return jax.lax.top_k(gated, k)
+
+
+def sparsify_leaf(
+    grad: jax.Array,
+    residual: jax.Array,
+    k: int,
+    cfg: THGSConfig,
+) -> LeafSparsification:
+    """One THGS layer step: error-feedback accumulate -> top-k -> residual."""
+    acc = (residual + grad).astype(grad.dtype)
+    flat = acc.reshape(-1)
+    k = int(min(k, flat.shape[0]))
+    abs_flat = jnp.abs(flat)
+    if cfg.selector == "sampled":
+        top_vals_abs, idx = _sampled_topk(abs_flat, k, cfg.sample_frac)
+    else:  # 'exact' and 'local' (the launcher pre-shards for 'local')
+        top_vals_abs, idx = _exact_topk(abs_flat, k)
+    delta = top_vals_abs[-1]
+    values = flat[idx]
+    new_resid_flat = flat.at[idx].set(0.0)
+    return LeafSparsification(
+        stream=SparseStream(indices=idx.astype(jnp.int32), values=values),
+        residual=new_resid_flat.reshape(acc.shape),
+        threshold=delta,
+    )
+
+
+def densify(stream: SparseStream, size: int, dtype=jnp.float32) -> jax.Array:
+    """Scatter a stream back to a dense flat vector (server-side decode)."""
+    return jnp.zeros((size,), dtype).at[stream.indices].add(
+        stream.values.astype(dtype)
+    )
+
+
+def first_occurrence_mask(indices: jax.Array) -> jax.Array:
+    """Boolean per slot: True iff this slot is the first occurrence of its index.
+
+    Sort-based (O(k log k)): duplicates of an index occupy consecutive ranks after
+    sorting; a slot is a first occurrence iff its sorted predecessor differs.
+    """
+    order = jnp.argsort(indices)
+    sorted_idx = indices[order]
+    is_first_sorted = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_idx[1:] != sorted_idx[:-1]]
+    )
+    # scatter back to original slot order
+    out = jnp.zeros(indices.shape, bool).at[order].set(is_first_sorted)
+    return out
+
+
+def member_of(query: jax.Array, table: jax.Array) -> jax.Array:
+    """Boolean per query slot: does the index appear anywhere in `table`?
+
+    Sorted-table binary search (O(q log t)); both arrays are int32 flat indices.
+    """
+    st = jnp.sort(table)
+    pos = jnp.searchsorted(st, query)
+    pos = jnp.clip(pos, 0, st.shape[0] - 1)
+    return st[pos] == query

@@ -1,0 +1,137 @@
+"""Core datatypes for the THGS + sparse-secure-aggregation framework.
+
+Shapes are always static under jit: every stream size (``k`` for top-k, ``k_mask``
+per pair) is a Python int decided host-side from the sparsity schedules before the
+step function is traced.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Mapping
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class SparseStream:
+    """Static-shape sparse encoding of one tensor (one THGS layer/leaf).
+
+    ``indices`` index into the *flattened* tensor; ``values`` carry
+    ``acc[idx] * first_occurrence + mask`` per slot (see core/secure_agg.py).
+    Duplicate indices are allowed; scatter-add semantics resolve them.
+    """
+
+    indices: jax.Array  # int32[k_total]
+    values: jax.Array   # float[k_total]
+
+    @property
+    def k(self) -> int:
+        return self.indices.shape[-1]
+
+
+@dataclasses.dataclass(frozen=True)
+class THGSConfig:
+    """Time-varying hierarchical gradient sparsification (paper Alg. 1, Eq. 1-2)."""
+
+    s0: float = 0.1            # initial (layer-1) sparsity rate, Eq. 1
+    alpha: float = 0.8         # per-layer attenuation factor, Eq. 1
+    s_min: float = 0.01        # lower bound of the layer schedule, Eq. 1
+    # Eq. 2 time-varying round schedule: R <- (alpha_t + beta - t/T) * R
+    time_varying: bool = True
+    alpha_t: float = 0.8       # constant attenuation factor of Eq. 2
+    r_min: float = 0.001       # lower bound of the round schedule
+    # Selector: 'exact' lax.top_k | 'sampled' threshold from a subsample |
+    # 'local' per-shard top-k (used on sharded tensors in the launcher).
+    selector: str = "exact"
+    sample_frac: float = 0.01  # for selector='sampled'
+    # k values are quantized to this many geometric levels so the number of
+    # distinct jit specializations over a training run is bounded.
+    k_levels: int = 16
+
+    def validate(self) -> None:
+        if not (0.0 < self.s0 <= 1.0):
+            raise ValueError(f"s0 must be in (0,1], got {self.s0}")
+        if not (0.0 < self.alpha <= 1.0):
+            raise ValueError(f"alpha must be in (0,1], got {self.alpha}")
+        if self.s_min <= 0 or self.s_min > self.s0:
+            raise ValueError(f"need 0 < s_min <= s0, got {self.s_min} vs {self.s0}")
+        if self.selector not in ("exact", "sampled", "local"):
+            raise ValueError(f"unknown selector {self.selector!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class SecureAggConfig:
+    """Sparse-mask secure aggregation (paper Alg. 2, Eq. 3-5)."""
+
+    enabled: bool = True
+    # Paper Eq. 4: sigma = p + (k/x) q -> per-pair mask support fraction = k/x
+    # with x participants and mask ratio k.  k_mask per pair = ceil(size * mask_ratio / x).
+    mask_ratio: float = 0.01
+    # Uniform mask distribution support [p, p + q) (paper §3.2).
+    p: float = -1.0
+    q: float = 2.0
+    # Mask values are regenerated from counter-based PRNG each round, never stored.
+    seed: int = 0x5EC0DE
+
+    def k_mask_for(self, size: int, n_clients: int) -> int:
+        if not self.enabled or n_clients < 2:
+            return 0
+        return max(1, int(size * self.mask_ratio / n_clients))
+
+
+@dataclasses.dataclass(frozen=True)
+class FedConfig:
+    """Federated optimization settings (paper §5 experimental protocol)."""
+
+    n_clients: int = 100          # total client population
+    clients_per_round: int = 10   # C*K in Eq. 7
+    local_steps: int = 5          # local iterations per round
+    local_batch: int = 50
+    local_lr: float = 0.1
+    server_lr: float = 1.0
+    prox_mu: float = 0.0          # FedProx proximal coefficient (0 => FedAvg)
+    rounds: int = 100             # T in Eq. 2
+    algorithm: str = "fedavg"     # 'fedavg' | 'fedprox'
+
+
+@dataclasses.dataclass
+class CommRecord:
+    """Byte accounting for one round (Eq. 6-8)."""
+
+    round: int = 0
+    upload_bits: int = 0
+    download_bits: int = 0
+    dense_upload_bits: int = 0   # what FedAvg would have uploaded
+    n_clients: int = 0
+
+    @property
+    def compression(self) -> float:
+        return self.dense_upload_bits / max(self.upload_bits, 1)
+
+
+def tree_size(tree: PyTree) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(tree))
+
+
+def tree_zeros_like(tree: PyTree, dtype=None) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda x: jnp.zeros(x.shape, dtype or x.dtype), tree
+    )
+
+
+def quantize_k(k: int, size: int, levels: int) -> int:
+    """Snap k to one of `levels` geometric levels of `size` to bound recompiles."""
+    if k <= 1:
+        return 1
+    if k >= size:
+        return size
+    import math
+
+    # geometric grid between 1 and size
+    pos = math.log(k) / math.log(size)  # in (0, 1)
+    snapped = round(pos * levels) / levels
+    return max(1, min(size, int(round(size ** snapped))))

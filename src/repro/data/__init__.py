@@ -1,0 +1,8 @@
+from repro.data.datasets import (CIFAR10, FASHION_MNIST, MNIST, SPECS,
+                                 DatasetSpec, make_dataset, make_lm_tokens)
+from repro.data.federated import (client_batches, dirichlet, iid,
+                                  noniid_label_k)
+
+__all__ = ["CIFAR10", "FASHION_MNIST", "MNIST", "SPECS", "DatasetSpec",
+           "make_dataset", "make_lm_tokens", "client_batches", "dirichlet",
+           "iid", "noniid_label_k"]

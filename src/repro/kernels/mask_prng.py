@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: counter-based sparse-mask generation + apply (Eq. 3-5).
+
+Secure aggregation's data-plane hot loop: for each parameter position i, derive
+a uniform u(i) in [p, p+q) from a murmur-style 32-bit avalanche of (seed ^ i)
+(counter-based — masks are *recomputed*, never stored, so the mask matrix costs
+zero HBM), keep it only where u(i) < sigma (Eq. 4's threshold: expected support
+fraction (sigma-p)/q = k/x), and add it to the gradient tile in one pass.
+
+Both endpoints of a pair run the same kernel with the same seed and opposite
+``sign``, so the aggregated masks cancel exactly. Matches ref.mask_prng_ref.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _kernel(g_ref, o_ref, m_ref, *, seed: int, p: float, q: float,
+            sigma: float, sign: float, block_rows: int):
+    i = pl.program_id(0)
+    base = i * block_rows * LANE
+    idx = base + jax.lax.broadcasted_iota(jnp.int32, g_ref.shape, 0) * LANE \
+        + jax.lax.broadcasted_iota(jnp.int32, g_ref.shape, 1)
+    x = idx.astype(jnp.uint32) ^ jnp.uint32(seed)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    u = p + q * (x.astype(jnp.float32) / jnp.float32(2**32))
+    mask = jnp.where(u < sigma, u, 0.0) * sign
+    m_ref[...] = mask
+    o_ref[...] = (g_ref[...].astype(jnp.float32) + mask).astype(o_ref.dtype)
+
+
+def mask_prng_apply(g: jax.Array, seed: int, *, p: float = -1.0, q: float = 2.0,
+                    sigma: float, sign: float = 1.0, block_rows: int = 256,
+                    interpret: bool = False):
+    """Returns (g + mask, mask) with the sparse pairwise mask regenerated on the
+    fly. g: any shape."""
+    orig_shape = g.shape
+    n = g.size
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
+    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows, LANE)
+    block_rows = min(block_rows, rows)
+    grid = (-(-rows // block_rows),)
+
+    kernel = functools.partial(_kernel, seed=seed, p=p, q=q, sigma=sigma,
+                               sign=sign, block_rows=block_rows)
+    out, mask = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_rows, LANE), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), g.dtype),
+            jax.ShapeDtypeStruct((rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(gf)
+    unpad = lambda x: x.reshape(-1)[:n].reshape(orig_shape)
+    return unpad(out), unpad(mask)

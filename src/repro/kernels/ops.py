@@ -1,0 +1,41 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel body
+runs as traced jnp ops, which is how correctness is validated against ref.py.
+On TPU they compile to Mosaic with the BlockSpec tilings declared in each file.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.mask_prng import mask_prng_apply as _mask
+from repro.kernels.thgs_sparsify import thgs_sparsify as _thgs
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
+                                             "block_kv"))
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    block_q: int = 128, block_kv: int = 128):
+    return _flash(q, k, v, causal=causal, window=window, block_q=block_q,
+                  block_kv=block_kv, interpret=_interpret())
+
+
+@jax.jit
+def thgs_sparsify(g, residual, threshold):
+    return _thgs(g, residual, threshold, interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("seed", "p", "q", "sigma", "sign"))
+def mask_prng_apply(g, *, seed: int, p: float = -1.0, q: float = 2.0,
+                    sigma: float, sign: float = 1.0):
+    return _mask(g, seed, p=p, q=q, sigma=sigma, sign=sign,
+                 interpret=_interpret())

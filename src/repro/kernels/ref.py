@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets in tests)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None) -> jax.Array:
+    """[B,T,H,hd] x [B,S,Hkv,hd] GQA attention, f32 math."""
+    b, t, h, hd = q.shape
+    s = k.shape[1]
+    group = h // k.shape[2]
+    kf = jnp.repeat(k, group, axis=2).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=2).astype(jnp.float32)
+    scores = jnp.einsum("bthd,bshd->bhts", q.astype(jnp.float32), kf) / (hd ** 0.5)
+    q_pos = jnp.arange(t)[:, None]
+    k_pos = jnp.arange(s)[None, :]
+    mask = jnp.ones((t, s), bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window is not None:
+        mask &= k_pos > q_pos - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhts,bshd->bthd", probs, vf)
+    return out.astype(q.dtype)
+
+
+def thgs_sparsify_ref(g, residual, threshold):
+    """Fused THGS threshold step: acc = g + residual; split at |acc| > delta."""
+    acc = (g.astype(jnp.float32) + residual.astype(jnp.float32))
+    keep = jnp.abs(acc) > threshold
+    sparse = jnp.where(keep, acc, 0.0)
+    new_resid = jnp.where(keep, 0.0, acc)
+    return sparse.astype(g.dtype), new_resid.astype(residual.dtype)
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """murmur3-style avalanche of uint32 lanes (the kernel uses the same)."""
+    x = x.astype(jnp.uint32)
+    x ^= x >> 16
+    x *= jnp.uint32(0x7FEB352D)
+    x ^= x >> 15
+    x *= jnp.uint32(0x846CA68B)
+    x ^= x >> 16
+    return x
+
+
+def mask_prng_ref(g, seed: int, *, p: float, q: float, sigma: float,
+                  sign: float = 1.0):
+    """Counter-based sparse-mask generation + add (paper Eq. 3-5 data plane).
+
+    u(i) = mix32(seed ^ i) mapped to [p, p+q); the mask is kept only where
+    u(i) < sigma (expected support fraction (sigma-p)/q) and added to g.
+    Returns (masked, mask) — both parties regenerate `mask` identically from
+    the shared seed, so +/- copies cancel at the aggregator.
+    """
+    n = g.size
+    idx = jnp.arange(n, dtype=jnp.uint32)
+    h = _mix32(idx ^ jnp.uint32(seed))
+    u = p + q * (h.astype(jnp.float32) / jnp.float32(2**32))
+    mask = jnp.where(u < sigma, u, 0.0).reshape(g.shape) * sign
+    return (g.astype(jnp.float32) + mask).astype(g.dtype), mask

@@ -1,0 +1,62 @@
+"""Pallas TPU kernel: fused THGS threshold split (the sparsifier's hot loop).
+
+One HBM pass instead of four: reads (g, residual), writes (sparse, new_residual)
+tile by tile — acc = g + residual; sparse = acc·1[|acc|>δ]; residual' = acc−sparse.
+This is the memory-bound inner step of Alg. 1 once the per-layer threshold δ is
+known (δ itself comes from top-k / sampled selection in core/sparsify.py).
+
+Block layout: inputs flattened to [rows, 128-lane] tiles; block_rows chosen so
+4 tiles (2 in + 2 out) fit comfortably in VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+LANE = 128
+
+
+def _kernel(g_ref, r_ref, thr_ref, s_ref, out_r_ref):
+    acc = g_ref[...].astype(jnp.float32) + r_ref[...].astype(jnp.float32)
+    keep = jnp.abs(acc) > thr_ref[0, 0]
+    sparse = jnp.where(keep, acc, 0.0)
+    s_ref[...] = sparse.astype(s_ref.dtype)
+    out_r_ref[...] = (acc - sparse).astype(out_r_ref.dtype)
+
+
+def thgs_sparsify(g: jax.Array, residual: jax.Array, threshold: jax.Array,
+                  *, block_rows: int = 256, interpret: bool = False):
+    """g, residual: same shape/any rank; threshold: scalar. Returns (sparse, resid)."""
+    orig_shape, orig_dtype = g.shape, g.dtype
+    n = g.size
+    rows = -(-n // LANE)
+    pad = rows * LANE - n
+    gf = jnp.pad(g.reshape(-1), (0, pad)).reshape(rows, LANE)
+    rf = jnp.pad(residual.reshape(-1), (0, pad)).reshape(rows, LANE)
+    block_rows = min(block_rows, rows)
+    grid = (-(-rows // block_rows),)
+    thr = jnp.asarray(threshold, jnp.float32).reshape(1, 1)
+
+    sparse, resid = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+            pl.BlockSpec((block_rows, LANE), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, LANE), orig_dtype),
+            jax.ShapeDtypeStruct((rows, LANE), residual.dtype),
+        ],
+        interpret=interpret,
+    )(gf, rf, thr)
+    unpad = lambda x: x.reshape(-1)[:n].reshape(orig_shape)
+    return unpad(sparse), unpad(resid).astype(residual.dtype)

@@ -1,0 +1,5 @@
+from repro.launch import mesh, serve, shardings, specs, train
+from repro.launch.mesh import make_production_mesh
+
+__all__ = ["mesh", "serve", "shardings", "specs", "train",
+           "make_production_mesh"]

@@ -1,0 +1,288 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST precede every other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (arch × input-shape × mesh) combo.
+
+For each combination this:
+  1. builds the production mesh (16×16 single-pod / 2×16×16 multi-pod),
+  2. resolves parameter/state/input shardings,
+  3. ``jax.jit(step).lower(**ShapeDtypeStructs).compile()`` — no allocation,
+  4. records memory_analysis(), cost_analysis(), and the collective-byte
+     breakdown parsed from the compiled HLO,
+  5. writes experiments/dryrun/<arch>__<shape>__<mesh>[__fl].json.
+
+Any failure here (sharding mismatch, OOM at compile, unsupported collective)
+is a bug in the system. benchmarks/roofline.py consumes the JSON artifacts.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both
+  python -m repro.launch.dryrun --arch yi-6b --shape train_4k --mesh pod --fl
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.core.types import SecureAggConfig, THGSConfig
+from repro.launch import serve, shardings as shd, train
+from repro.launch.mesh import logical_rules, make_production_mesh
+from repro.launch.specs import SHAPES, arch_for_shape, input_pspecs, input_specs
+from repro.models import transformer as tf
+from repro.models.sharding import logical_axis_rules
+
+COLLECTIVE_OPS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                  "collective-permute")
+_SHAPE_RE = re.compile(r"(f64|f32|bf16|f16|s32|u32|s8|u8|pred|s64|u64)\[([\d,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "bf16": 2, "f16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def parse_collectives(hlo: str) -> dict:
+    """Sum result-shape bytes of every collective op in the compiled HLO."""
+    out: dict[str, dict] = {k: {"bytes": 0, "count": 0} for k in COLLECTIVE_OPS}
+    for line in hlo.splitlines():
+        s = line.strip()
+        m = re.match(r"(?:ROOT )?%?[\w.\-]+ = (.+)", s)
+        if not m:
+            continue
+        rhs = m.group(1)
+        opm = re.search(r"\b([a-z0-9\-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        base = next((c for c in COLLECTIVE_OPS if op == c or
+                     op.startswith(c + "-")), None)
+        if base is None:
+            continue
+        # result shapes appear before the op name; take everything up to ' = '
+        result_part = rhs.split(opm.group(1) + "(")[0]
+        nbytes = 0
+        for dm in _SHAPE_RE.finditer(result_part):
+            dtype, dims = dm.group(1), dm.group(2)
+            n = 1
+            if dims:
+                for d in dims.split(","):
+                    n *= int(d)
+            nbytes += n * _BYTES[dtype]
+        out[base]["bytes"] += nbytes
+        out[base]["count"] += 1
+    out["total_bytes"] = sum(v["bytes"] for k, v in out.items()
+                             if isinstance(v, dict))
+    return out
+
+
+def memory_summary(compiled) -> dict:
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    keys = ("generated_code_size_in_bytes", "argument_size_in_bytes",
+            "output_size_in_bytes", "alias_size_in_bytes",
+            "temp_size_in_bytes")
+    out = {}
+    for k in keys:
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    if "argument_size_in_bytes" in out:
+        out["per_device_total_bytes"] = (
+            out.get("argument_size_in_bytes", 0)
+            + out.get("output_size_in_bytes", 0)
+            - out.get("alias_size_in_bytes", 0)
+            + out.get("temp_size_in_bytes", 0))
+    return out
+
+
+def cost_summary(compiled) -> dict:
+    try:
+        ca = compiled.cost_analysis()
+    except Exception as e:  # pragma: no cover
+        return {"error": str(e)}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return {k: float(v) for k, v in ca.items()
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "bytes accessed", "transcendentals")
+                or k.startswith("bytes accessed"))}
+
+
+def build_step(cfg, shape, mesh, rules, fl: bool, thgs=None, sa=None):
+    """Returns (fn, example kwargs of ShapeDtypeStructs, in_shardings tree)."""
+    cfg = arch_for_shape(cfg, shape)
+    pshapes = jax.eval_shape(lambda k: tf.init_params(cfg, k),
+                             jax.random.key(0))
+    pspecs = shd.param_specs(pshapes, rules, mesh)
+    pshard = shd.named(pspecs, mesh)
+    ins = input_specs(cfg, shape)
+    ispecs = input_pspecs(cfg, shape, rules)
+    ishard = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), ispecs,
+        is_leaf=lambda x: isinstance(x, P))
+
+    if shape.kind == "train":
+        if fl:
+            fed_axis = "pod" if "pod" in mesh.axis_names else "data"
+            n_fed = dict(zip(mesh.axis_names, mesh.devices.shape))[fed_axis]
+            thgs = thgs or THGSConfig(s0=0.01, alpha=0.9, s_min=0.001)
+            sa = sa or SecureAggConfig(mask_ratio=0.01)
+            n_params = sum(x.size for x in jax.tree_util.tree_leaves(pshapes))
+            n_micro = 8 if n_params > 50e9 else (4 if n_params > 12e9 else
+                                                 (2 if n_params > 4e9 else 1))
+            step = train.make_fl_train_step(cfg, mesh, fed_axis, thgs, sa,
+                                            n_micro=n_micro)
+            res = train.init_fl_residuals(pshapes, n_fed)
+            # residuals: per-participant over the federation axis AND
+            # param-layout sharded within the participant
+            res_shard = jax.tree_util.tree_map(
+                lambda ps: NamedSharding(mesh, P(fed_axis, *ps)),
+                pspecs, is_leaf=lambda x: isinstance(x, P))
+            args = dict(params=pshapes, residuals=res,
+                        batch=ins["batch"],
+                        round_key=jax.eval_shape(lambda: jax.random.key(0)))
+            shards = dict(params=pshard, residuals=res_shard,
+                          batch=ishard["batch"],
+                          round_key=NamedSharding(mesh, P()))
+            fn = lambda params, residuals, batch, round_key: step(
+                params, residuals, batch, round_key)
+            return fn, args, shards
+        # microbatch count scales with model size (activation footprint)
+        n_params = sum(x.size for x in jax.tree_util.tree_leaves(pshapes))
+        n_micro = 8 if n_params > 50e9 else (4 if n_params > 12e9 else
+                                             (2 if n_params > 4e9 else 1))
+        step = train.make_dense_train_step(cfg, n_micro=n_micro)
+        args = dict(params=pshapes, batch=ins["batch"])
+        shards = dict(params=pshard, batch=ishard["batch"])
+        return (lambda params, batch: step(params, batch)), args, shards
+
+    if shape.kind == "prefill":
+        step = serve.make_prefill_step(cfg, cache_len=shape.seq_len)
+        args = dict(params=pshapes, tokens=ins["tokens"])
+        shards = dict(params=pshard, tokens=ishard["tokens"])
+        if cfg.family == "vlm":
+            args["image_embeds"] = ins["image_embeds"]
+            shards["image_embeds"] = ishard["image_embeds"]
+        return (lambda params, tokens, image_embeds=None: step(
+            params, tokens, image_embeds)), args, shards
+
+    step = serve.make_decode_step(cfg)
+    args = dict(params=pshapes, token=ins["token"], state=ins["state"])
+    shards = dict(params=pshard, token=ishard["token"],
+                  state=ishard["state"])
+    return (lambda params, token, state: step(params, token, state)), args, shards
+
+
+def run_one(arch: str, shape_name: str, mesh_kind: str, fl: bool = False,
+            out_dir: str = "experiments/dryrun", kv_int8: bool = False) -> dict:
+    cfg = configs.get(arch)
+    if kv_int8:
+        import dataclasses as _dc
+
+        cfg = _dc.replace(cfg, kv_dtype="int8")
+    shape = SHAPES[shape_name]
+    if not cfg.supports_shape(shape_name):
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "skipped", "reason": "encoder-only: no decode step"}
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(
+                out_dir, f"{arch}__{shape_name}__{mesh_kind}.json"), "w") as f:
+            json.dump(rec, f, indent=1)
+        return rec
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "pod"))
+    fed_axis = ("pod" if "pod" in mesh.axis_names else "data") if fl else None
+    rules = logical_rules(mesh, fed_axis=fed_axis)
+    if shape.global_batch == 1:
+        # long_500k: batch carries no parallelism -> fold the idle batch axes
+        # into the KV-cache sequence sharding (model code + input specs agree)
+        batch_axes = rules["batch"] if isinstance(rules["batch"], tuple) \
+            else (rules["batch"],)
+        rules = {**rules, "kv_seq": tuple(a for a in batch_axes if a) + ("model",),
+                 "batch": None}
+    t0 = time.time()
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "fl": fl,
+           "kv_int8": kv_int8, "n_devices": int(mesh.devices.size)}
+    try:
+        with logical_axis_rules(mesh, rules):
+            fn, args, shards = build_step(
+                cfg, shape, mesh, rules, fl)
+            # donate mutable state, as the real launcher does: decode donates
+            # its KV/recurrent caches; training donates params (+ residuals)
+            if shape.kind == "decode":
+                donate = (2,)
+            elif shape.kind == "train":
+                donate = (0, 1) if fl else (0,)
+            else:
+                donate = ()
+            jitted = jax.jit(fn, in_shardings=tuple(
+                shards[k] for k in args), donate_argnums=donate)
+            lowered = jitted.lower(*[args[k] for k in args])
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            memory=memory_summary(compiled),
+            cost=cost_summary(compiled),
+            collectives=parse_collectives(compiled.as_text()),
+        )
+    except Exception as e:
+        rec.update(status="fail", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    os.makedirs(out_dir, exist_ok=True)
+    tag = (f"{arch}__{shape_name}__{mesh_kind}" + ("__fl" if fl else "")
+           + ("__kvint8" if kv_int8 else ""))
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None, choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single", choices=["single", "pod", "both"])
+    ap.add_argument("--fl", action="store_true",
+                    help="lower the THGS+secure-agg federated train step")
+    ap.add_argument("--kv-int8", action="store_true",
+                    help="int8 KV cache variant (beyond-paper decode memory)")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = configs.all_archs() if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = ["single", "pod"] if args.mesh == "both" else [args.mesh]
+
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mk in meshes:
+                rec = run_one(arch, shape, mk, fl=args.fl, out_dir=args.out,
+                              kv_int8=args.kv_int8)
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    mem = rec["memory"].get("per_device_total_bytes")
+                    col = rec["collectives"]["total_bytes"]
+                    extra = (f" mem/dev={mem/2**30:.2f}GiB "
+                             f"coll={col/2**30:.2f}GiB "
+                             f"compile={rec['compile_s']:.0f}s")
+                elif status == "fail":
+                    n_fail += 1
+                    extra = " " + rec["error"][:160]
+                print(f"[{status:7s}] {arch:24s} {shape:12s} {mk:6s}"
+                      f"{' fl' if args.fl else '':3s}{extra}", flush=True)
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,57 @@
+"""Production mesh + logical-axis rules.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is the
+federation axis — each pod is one cross-silo FL participant (DESIGN.md §2).
+
+Defined as functions so importing this module never touches jax device state
+(the dry-run sets XLA_FLAGS before first jax init; tests see 1 device).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = False):
+    """Small mesh for subprocess sharding tests (host platform device count)."""
+    if multi_pod:
+        return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
+    return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def logical_rules(mesh, *, fsdp: bool = True, fed_axis: str | None = None) -> dict:
+    """Map the model code's logical axis names onto this mesh's physical axes.
+
+    fed_axis: the federation axis for FL training — params must NOT be
+    fsdp-sharded along it (each participant owns a full model view along the
+    federation axis), so it is excluded from 'fsdp'.
+    """
+    axes = mesh.axis_names
+    has_pod = "pod" in axes
+    # inside the FL shard_map the federation axis is manual — model-code
+    # sharding constraints must not mention it
+    batch_axes = tuple(a for a in axes if a in ("pod", "data") and a != fed_axis)
+    fsdp_axis = "data" if (fsdp and "data" in axes and fed_axis != "data") else None
+    return {
+        "batch": batch_axes if len(batch_axes) > 1 else batch_axes[0],
+        "seq": "model",      # sequence-parallel residual stream
+        "model": "model",    # tensor-parallel feature dim
+        "heads": "model",
+        "expert": "model",
+        "vocab": "model",
+        "fsdp": fsdp_axis,
+        "kv_seq": "model",   # decode KV cache sharded along sequence
+        "pod": "pod" if has_pod else None,
+    }
+
+
+# TPU v5e hardware constants for the roofline model (per chip).
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s per link

@@ -1,0 +1,42 @@
+"""Serving steps: prefill (prompt -> logits + caches) and one-token decode.
+
+Decode donates the state buffers so the KV cache updates in place.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+def make_prefill_step(cfg: ArchConfig, cache_len: int) -> Callable:
+    def step(params, tokens, image_embeds=None):
+        return tf.prefill(params, cfg, tokens, cache_len,
+                          image_embeds=image_embeds)
+
+    return step
+
+
+def make_decode_step(cfg: ArchConfig) -> Callable:
+    def step(params, token, state):
+        return tf.decode_step(params, cfg, token, state)
+
+    return step
+
+
+def greedy_generate(params, cfg: ArchConfig, prompt, n_new: int,
+                    cache_len: int):
+    """Host-driven greedy loop (examples / integration tests)."""
+    logits, state = jax.jit(make_prefill_step(cfg, cache_len))(params, prompt)
+    step = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
+    tok = jax.numpy.argmax(logits[:, -1:], -1).astype(jax.numpy.int32)
+    out = [tok]
+    for _ in range(n_new - 1):
+        logits, state = step(params, tok, state)
+        tok = jax.numpy.argmax(logits[:, -1:], -1)[..., 0:1].astype(jax.numpy.int32) if logits.ndim == 3 else jax.numpy.argmax(logits, -1).astype(jax.numpy.int32)
+        tok = tok.reshape(prompt.shape[0], 1)
+        out.append(tok)
+    return jax.numpy.concatenate(out, axis=1)

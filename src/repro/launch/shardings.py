@@ -1,0 +1,118 @@
+"""Parameter/state PartitionSpec assignment by tree-path rules.
+
+Weights get 2D sharding: the contraction-input dim over the 'fsdp' logical axis
+(ZeRO-3 style, all-gathered at use) and the parallel dim over 'model' (tensor
+parallel). Stacked layer dims (from scan-over-layers) are replicated. The rules
+are keyed on leaf names so every architecture family resolves from one table.
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+PyTree = Any
+
+# leaf name -> logical spec for its LAST `len(spec)` dims (leading dims -> None)
+_RULES: dict[str, tuple] = {
+    # embeddings / heads. The embed table shards its FEATURE dim: the lookup
+    # gather and its scatter-add gradient are then device-local (vocab-sharded
+    # tables force a replicated multi-GiB embedding gradient).
+    "embed": (None, "model"),
+    "lm_head": ("fsdp", "vocab"),
+    # attention projections (d_in, d_out-parallel)
+    "wq": ("fsdp", "model"),
+    "wk": ("fsdp", "model"),
+    "wv": ("fsdp", "model"),
+    "wo": ("model", "fsdp"),
+    # dense MLP
+    "wi": ("fsdp", "model"),
+    "wi_gate": ("fsdp", "model"),
+    "wi_up": ("fsdp", "model"),
+    # moe (rank-3 expert weights resolved below by rank)
+    "router": ("fsdp", None),
+    "shared_wi_gate": ("fsdp", "model"),
+    "shared_wi_up": ("fsdp", "model"),
+    "shared_wo": ("model", "fsdp"),
+    # ssm
+    "in_proj": ("fsdp", "model"),
+    "out_proj": ("model", "fsdp"),
+    "conv_w": (None, "model"),
+    "A_log": ("heads",),
+    "D": ("heads",),
+    "dt_bias": ("heads",),
+    # xlstm
+    "w_in": ("fsdp", "model"),
+    "w_qkv": ("fsdp", "model"),
+    "w_if": ("fsdp", None),
+    "w_o": ("fsdp", "model"),
+    "w_out": ("model", "fsdp"),
+    "r": (None, "model", None),
+    # norms / biases
+    "scale": (None,),
+    "bias": (None,),
+    "b": (None,),
+}
+
+_MOE_RANK3 = {
+    "wi_gate": ("expert", "fsdp", None),
+    "wi_up": ("expert", "fsdp", None),
+    "wo": ("expert", None, "fsdp"),
+}
+
+
+def _leaf_logical(path, shape) -> tuple:
+    keys = [getattr(p, "key", getattr(p, "name", None)) for p in path]
+    name = next((k for k in reversed(keys) if isinstance(k, str)), None)
+    in_moe = "moe" in keys
+    base: Optional[tuple] = None
+    if in_moe and name in _MOE_RANK3:
+        base = _MOE_RANK3[name]
+    elif name in _RULES:
+        base = _RULES[name]
+    if base is None:
+        base = (None,) * len(shape)
+    if len(base) > len(shape):
+        base = base[-len(shape):]
+    pad = (None,) * (len(shape) - len(base))
+    return pad + tuple(base)
+
+
+def _resolve(logical: tuple, rules: dict, shape: tuple) -> P:
+    phys = []
+    for ax, dim in zip(logical, shape):
+        if ax is None:
+            phys.append(None)
+            continue
+        target = rules.get(ax)
+        if target is None:
+            phys.append(None)
+            continue
+        # require divisibility (GSPMD can pad, but padded params waste memory;
+        # fall back to replication when the dim doesn't divide)
+        n = 1
+        for t in (target if isinstance(target, tuple) else (target,)):
+            n *= _AXIS_SIZES.get(t, 1)
+        phys.append(target if dim % max(n, 1) == 0 else None)
+    return P(*phys)
+
+
+_AXIS_SIZES: dict[str, int] = {}
+
+
+def param_specs(params_shape: PyTree, rules: dict, mesh) -> PyTree:
+    """PartitionSpec pytree for a params/grads/opt-state tree (by eval_shape)."""
+    global _AXIS_SIZES
+    _AXIS_SIZES = dict(zip(mesh.axis_names, mesh.devices.shape))
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: _resolve(_leaf_logical(path, leaf.shape), rules,
+                                    leaf.shape),
+        params_shape,
+    )
+
+
+def named(specs: PyTree, mesh) -> PyTree:
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), specs,
+        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,139 @@
+"""Input ShapeDtypeStructs + shardings for every (arch × input shape) pair.
+
+The four assigned shapes:
+    train_4k     seq=4096    global_batch=256   (training step)
+    prefill_32k  seq=32768   global_batch=32    (inference prefill)
+    decode_32k   seq=32768   global_batch=128   (one-token decode, 32k KV cache)
+    long_500k    seq=524288  global_batch=1     (one-token decode, 500k context)
+
+Decode shapes lower ``serve_step`` (one new token + KV cache of seq_len);
+long_500k uses each arch's sub-quadratic variant (cfg.long_context_variant()).
+Modality frontends are stubs: audio gets frame embeddings, VLM gets image patch
+embeddings at d_model (the one sanctioned stub — DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+from repro.models import transformer as tf
+
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def arch_for_shape(cfg: ArchConfig, shape: InputShape) -> ArchConfig:
+    if shape.name == "long_500k":
+        return cfg.long_context_variant()
+    return cfg
+
+
+def input_specs(cfg: ArchConfig, shape: InputShape) -> dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for the step function's data arguments."""
+    b, t = shape.global_batch, shape.seq_len
+    dt = cfg.dtype
+    if shape.kind == "train":
+        batch: dict[str, Any] = {"labels": sds((b, t), "int32")}
+        if cfg.family == "audio":
+            batch["frames"] = sds((b, t, cfg.d_model), dt)
+        else:
+            batch["tokens"] = sds((b, t), "int32")
+        if cfg.family == "vlm":
+            batch["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), dt)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            toks = sds((b, t, cfg.d_model), dt)
+        else:
+            toks = sds((b, t), "int32")
+        out = {"tokens": toks}
+        if cfg.family == "vlm":
+            out["image_embeds"] = sds((b, cfg.n_image_tokens, cfg.d_model), dt)
+        return out
+    # decode: one token + family-specific state of cache_len = seq_len
+    state = jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, b, t))
+    return {"token": sds((b, 1), "int32"), "state": state}
+
+
+def batch_pspec(rules: dict, ndim: int, seq_dim: int | None = None) -> P:
+    spec = [None] * ndim
+    spec[0] = rules["batch"]
+    if seq_dim is not None and rules.get("seq"):
+        spec[seq_dim] = rules["seq"]
+    return P(*spec)
+
+
+def input_pspecs(cfg: ArchConfig, shape: InputShape, rules: dict) -> Any:
+    """PartitionSpec tree matching input_specs()."""
+    bspec = rules["batch"]
+    if shape.kind == "train":
+        batch = {"labels": P(bspec, None)}
+        if cfg.family == "audio":
+            batch["frames"] = P(bspec, rules["seq"], None)
+        else:
+            batch["tokens"] = P(bspec, None)
+        if cfg.family == "vlm":
+            batch["image_embeds"] = P(bspec, None, None)
+        return {"batch": batch}
+    if shape.kind == "prefill":
+        if cfg.family == "audio":
+            toks = P(bspec, rules["seq"], None)
+        else:
+            toks = P(bspec, None)
+        out = {"tokens": toks}
+        if cfg.family == "vlm":
+            out["image_embeds"] = P(bspec, None, None)
+        return out
+
+    # decode state: shard KV caches along batch + sequence; recurrent states
+    # along batch + heads/feature where divisible.
+    state_shapes = jax.eval_shape(
+        lambda: tf.init_decode_state(cfg, shape.global_batch, shape.seq_len))
+
+    # long_500k passes batch=None / kv_seq=(data..,model) via the rules dict
+    # (set in dryrun.run_one), so model constraints and input specs agree.
+    kv_seq_axes = rules["kv_seq"]
+    eff_bspec = bspec
+
+    def spec_for(path, leaf):
+        nd = len(leaf.shape)
+        names = [None] * nd
+        # batch dim: first dim whose size == global_batch (after stacked dims)
+        batch_i = None
+        for i, d in enumerate(leaf.shape):
+            if d == shape.global_batch:
+                names[i] = eff_bspec
+                batch_i = i
+                break
+        if batch_i is None:
+            return P(*names)
+        # KV caches: [.., B, S, kv, hd] -> shard S over model (+idle batch axes)
+        if nd > batch_i + 1 and leaf.shape[batch_i + 1] >= 1024:
+            names[batch_i + 1] = kv_seq_axes
+        return P(*names)
+
+    state_spec = jax.tree_util.tree_map_with_path(spec_for, state_shapes)
+    return {"token": P(eff_bspec, None), "state": state_spec}

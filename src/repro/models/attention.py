@@ -1,0 +1,228 @@
+"""GQA attention: full/causal/sliding-window/cross, prefill + single-token decode.
+
+GQA is computed NATIVELY (queries reshaped to [B,T,kv,group,hd] and contracted
+against the un-repeated K/V): materializing repeated K/V via jnp.repeat forces
+GSPMD to all-gather a sequence-sharded KV cache (measured: a 1 GiB full-cache
+gather per layer on long_500k decode — §Perf iteration 1).
+
+Decode attends over a pre-allocated KV cache of length ``cache_len`` with a
+validity mask; the cache layout [B, S, kv, hd] shards S over the 'model' mesh
+axis (flash-decode: the softmax reduction over the sharded S axis lowers to
+small partial-reduce collectives).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, dense_init
+from repro.models.sharding import shard
+
+NEG_INF = -1e30
+KV_QSCALE = 0.05  # int8 KV quantization step (beyond-paper decode option)
+
+
+class KVCache(NamedTuple):
+    k: jax.Array        # [B, S, kv, hd]
+    v: jax.Array        # [B, S, kv, hd]
+    length: jax.Array   # int32[B] valid prefix length
+
+
+def init_attention(key, d: int, n_heads: int, n_kv: int, hd: int, dtype,
+                   cross: bool = False) -> dict:
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, n_heads * hd, dtype),
+        "wk": dense_init(ks[1], d, n_kv * hd, dtype),
+        "wv": dense_init(ks[2], d, n_kv * hd, dtype),
+        "wo": dense_init(ks[3], n_heads * hd, d, dtype),
+    }
+
+
+def _split_heads(x: jax.Array, n: int, hd: int) -> jax.Array:
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _q_groups(q: jax.Array, n_kv: int) -> jax.Array:
+    """[B,T,H,hd] -> [B,T,kv,g,hd] — GQA grouping without repeating K/V."""
+    b, t, h, hd = q.shape
+    return q.reshape(b, t, n_kv, h // n_kv, hd)
+
+
+def attend(q: jax.Array, k: jax.Array, v: jax.Array, mask: Optional[jax.Array],
+           hd: int) -> jax.Array:
+    """GQA attention. q: [B,T,H,hd]; k,v: [B,S,kv,hd] (kv divides H);
+    mask broadcastable to [B,1,1,T,S]. Returns [B,T,H,hd]."""
+    b, t, h, _ = q.shape
+    n_kv = k.shape[2]
+    qg = _q_groups(q, n_kv)
+    scores = jnp.einsum("btkgd,bskd->bkgts", qg, k) / (hd ** 0.5)
+    if mask is not None:
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkgts,bskd->btkgd", probs, v)
+    return out.reshape(b, t, h, hd)
+
+
+def causal_mask(t: int, s: int, window: Optional[int] = None) -> jax.Array:
+    """[t, s] lower-triangular (optionally banded) mask; s >= t aligned at the end."""
+    qi = jnp.arange(t)[:, None] + (s - t)
+    ki = jnp.arange(s)[None, :]
+    m = ki <= qi
+    if window is not None:
+        m &= ki > qi - window
+    return m
+
+
+# Query-chunk size above which scores are never materialized in full. This is
+# the XLA stand-in for the Pallas flash kernel (kernels/flash_attention.py):
+# the [T, S] score matrix only ever exists one query-chunk at a time.
+CHUNK_Q = 1024
+
+
+def attend_chunked(q: jax.Array, k: jax.Array, v: jax.Array, *, hd: int,
+                   causal: bool, window: Optional[int]) -> jax.Array:
+    """Memory-bounded GQA attention: lax.map over query chunks of CHUNK_Q."""
+    b, t, h, _ = q.shape
+    s = k.shape[1]
+    if t <= CHUNK_Q:
+        mask = (causal_mask(t, s, window)[None, None, None]
+                if causal else None)
+        return attend(q, k, v, mask, hd)
+    assert t % CHUNK_Q == 0, f"T={t} must divide by CHUNK_Q={CHUNK_Q}"
+    nc = t // CHUNK_Q
+    qc = q.reshape(b, nc, CHUNK_Q, h, hd).swapaxes(0, 1)  # [nc,B,cq,H,hd]
+
+    def one(args):
+        qi, start = args
+        if causal:
+            q_pos = start + jnp.arange(CHUNK_Q)[:, None]
+            k_pos = jnp.arange(s)[None, :]
+            m = k_pos <= q_pos
+            if window is not None:
+                m &= k_pos > q_pos - window
+            m = m[None, None, None]
+        else:
+            m = None
+        return attend(qi, k, v, m, hd)
+
+    # remat per chunk: backward recomputes scores/probs instead of saving
+    # every chunk's [cq, S] tile — flash-attention memory semantics.
+    one = jax.checkpoint(one, prevent_cse=False)
+    starts = jnp.arange(nc) * CHUNK_Q
+    out = jax.lax.map(one, (qc, starts))                  # [nc,B,cq,H,hd]
+    return out.swapaxes(0, 1).reshape(b, t, h, hd)
+
+
+def self_attention(
+    p: dict, x: jax.Array, *, n_heads: int, n_kv: int, hd: int,
+    rope: str = "default", causal: bool = True, window: Optional[int] = None,
+    positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Full-sequence self attention (training / prefill)."""
+    b, t, _ = x.shape
+    if positions is None:
+        positions = jnp.arange(t)[None, :]
+    q = _split_heads(x @ p["wq"], n_heads, hd)
+    k = _split_heads(x @ p["wk"], n_kv, hd)
+    v = _split_heads(x @ p["wv"], n_kv, hd)
+    q = apply_rope(q, positions, rope)
+    k = apply_rope(k, positions, rope)
+    # heads over 'model' so per-chunk score tiles stay device-local
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    out = attend_chunked(q, k, v, hd=hd, causal=causal, window=window)
+    out = shard(out, "batch", None, "heads", None)
+    return out.reshape(b, t, n_heads * hd) @ p["wo"]
+
+
+def cross_attention(p: dict, x: jax.Array, kv_src: jax.Array, *,
+                    n_heads: int, n_kv: int, hd: int) -> jax.Array:
+    """x attends to kv_src (e.g. image embeddings); no positional rotation."""
+    b, t, _ = x.shape
+    q = _split_heads(x @ p["wq"], n_heads, hd)
+    k = _split_heads(kv_src @ p["wk"], n_kv, hd)
+    v = _split_heads(kv_src @ p["wv"], n_kv, hd)
+    q = shard(q, "batch", None, "heads", None)
+    k = shard(k, "batch", None, "heads", None)
+    v = shard(v, "batch", None, "heads", None)
+    out = attend_chunked(q, k, v, hd=hd, causal=False, window=None)
+    out = shard(out, "batch", None, "heads", None)
+    return out.reshape(b, t, n_heads * hd) @ p["wo"]
+
+
+def decode_self_attention(
+    p: dict, x: jax.Array, cache: KVCache, *, n_heads: int, n_kv: int, hd: int,
+    rope: str = "default", window: Optional[int] = None,
+) -> tuple[jax.Array, KVCache]:
+    """One-token decode: x [B, 1, d]; writes position cache.length into the cache.
+
+    The new K/V are merged at each row's current length via a one-hot masked
+    add (elementwise => partitions cleanly when S is sharded); attention runs
+    over the full static cache with a validity (+ window) mask, so shapes stay
+    static regardless of fill level.
+    """
+    b, t, _ = x.shape
+    assert t == 1, "decode step consumes exactly one new token"
+    pos = cache.length[:, None]  # [B,1]
+    q = _split_heads(x @ p["wq"], n_heads, hd)
+    k_new = _split_heads(x @ p["wk"], n_kv, hd)
+    v_new = _split_heads(x @ p["wv"], n_kv, hd)
+    q = apply_rope(q, pos, rope)
+    k_new = apply_rope(k_new, pos, rope)
+
+    s = cache.k.shape[1]
+    quant = cache.k.dtype == jnp.int8
+    if quant:  # int8 cache: quantize the new entry, merge in int8
+        qk_new = jnp.clip(jnp.round(k_new.astype(jnp.float32) / KV_QSCALE),
+                          -127, 127).astype(jnp.int8)
+        qv_new = jnp.clip(jnp.round(v_new.astype(jnp.float32) / KV_QSCALE),
+                          -127, 127).astype(jnp.int8)
+    onehot = (jnp.arange(s)[None, :] == cache.length[:, None])
+    oh = onehot[:, :, None, None].astype(cache.k.dtype)
+    k = cache.k * (1 - oh) + oh * (qk_new if quant else k_new)
+    v = cache.v * (1 - oh) + oh * (qv_new if quant else v_new)
+    # flash-decode: keep the cache sequence-sharded through the attention math
+    k = shard(k, "batch", "kv_seq", None, None)
+    v = shard(v, "batch", "kv_seq", None, None)
+    if quant:
+        k_att = (k.astype(x.dtype) * KV_QSCALE)
+        v_att = (v.astype(x.dtype) * KV_QSCALE)
+    else:
+        k_att, v_att = k, v
+
+    ki = jnp.arange(s)[None, :]
+    valid = ki <= cache.length[:, None]  # includes the newly written slot
+    if window is not None:
+        valid &= ki > (cache.length[:, None] - window)
+    mask = valid[:, None, None, None, :]  # [B,1,1,1,S]
+
+    out = attend(q, k_att, v_att, mask, hd)
+    out = out.reshape(b, 1, n_heads * hd) @ p["wo"]
+    return out, KVCache(k=k, v=v, length=cache.length + 1)
+
+
+def prefill_cache(
+    p: dict, x: jax.Array, *, n_heads: int, n_kv: int, hd: int,
+    rope: str = "default", window: Optional[int] = None, cache_len: int | None = None,
+) -> tuple[jax.Array, KVCache]:
+    """Prefill: full causal attention AND build the cache for subsequent decode."""
+    b, t, _ = x.shape
+    positions = jnp.arange(t)[None, :]
+    q = _split_heads(x @ p["wq"], n_heads, hd)
+    k = _split_heads(x @ p["wk"], n_kv, hd)
+    v = _split_heads(x @ p["wv"], n_kv, hd)
+    q = apply_rope(q, positions, rope)
+    k = apply_rope(k, positions, rope)
+    q = shard(q, "batch", None, "heads", None)
+    out = attend_chunked(q, k, v, hd=hd, causal=True, window=window)
+    out = shard(out, "batch", None, "heads", None)
+    out = out.reshape(b, t, n_heads * hd) @ p["wo"]
+    s = cache_len or t
+    pad = s - t
+    kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return out, KVCache(k=kc, v=vc, length=jnp.full((b,), t, jnp.int32))

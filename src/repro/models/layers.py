@@ -1,0 +1,92 @@
+"""Shared layer primitives: norms, RoPE variants, MLPs, initializers.
+
+Models are pure functions over parameter pytrees (no flax): ``init_*`` builds the
+params, the forward functions consume them. Everything is jit/pjit-friendly.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------- initializers
+def dense_init(key, d_in: int, d_out: int, dtype) -> jax.Array:
+    scale = (2.0 / (d_in + d_out)) ** 0.5
+    return (scale * jax.random.normal(key, (d_in, d_out))).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d)) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+def init_norm(d: int, kind: str, dtype) -> dict:
+    p = {"scale": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_norm(p: dict, x: jax.Array, kind: str, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "layernorm":
+        mu = jnp.mean(xf, -1, keepdims=True)
+        var = jnp.var(xf, -1, keepdims=True)
+        out = (xf - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    else:  # rmsnorm
+        ms = jnp.mean(xf * xf, -1, keepdims=True)
+        out = xf * jax.lax.rsqrt(ms + eps) * p["scale"]
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(hd: int, positions: jax.Array, theta: float = 10000.0):
+    """positions: int32[...]; returns (cos, sin) of shape positions.shape + (hd//2,)."""
+    inv = 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, mode: str = "default") -> jax.Array:
+    """x: [..., T, H, hd]; positions: [..., T] (broadcastable).
+
+    mode='default': rotate the full head dim (llama style, interleaved-pairs-free
+    "split-half" convention). mode='2d': ChatGLM convention — rotary on the first
+    half of the head dim only, second half passes through. mode='none': identity.
+    """
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    rot_d = hd if mode == "default" else hd // 2
+    rot_d = rot_d - (rot_d % 2)
+    xr, xp = x[..., :rot_d], x[..., rot_d:]
+    cos, sin = rope_freqs(rot_d, positions)          # [..., T, rot_d/2]
+    cos = cos[..., None, :].astype(x.dtype)          # broadcast over heads
+    sin = sin[..., None, :].astype(x.dtype)
+    x1, x2 = xr[..., : rot_d // 2], xr[..., rot_d // 2:]
+    rotated = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], -1)
+    return jnp.concatenate([rotated, xp], -1)
+
+
+# ------------------------------------------------------------------------ MLPs
+def init_mlp(key, d: int, d_ff: int, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    p = {"wo": dense_init(ks[2], d_ff, d, dtype)}
+    if act == "swiglu":
+        p["wi_gate"] = dense_init(ks[0], d, d_ff, dtype)
+        p["wi_up"] = dense_init(ks[1], d, d_ff, dtype)
+    else:
+        p["wi"] = dense_init(ks[0], d, d_ff, dtype)
+    return p
+
+
+def apply_mlp(p: dict, x: jax.Array, act: str) -> jax.Array:
+    from repro.models.sharding import shard
+
+    if act == "swiglu":
+        h = jax.nn.silu(x @ p["wi_gate"]) * (x @ p["wi_up"])
+    else:
+        h = jax.nn.gelu(x @ p["wi"])
+    if h.ndim == 3:  # keep d_ff tensor-parallel through the activation
+        h = shard(h, "batch", None, "model")
+    return h @ p["wo"]

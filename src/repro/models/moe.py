@@ -1,0 +1,122 @@
+"""Mixture-of-Experts layer: shared + routed experts, sort-based capacity dispatch.
+
+Token-choice top-k routing (DeepSeek-MoE / Llama-4 style). Dispatch avoids the
+GShard one-hot tensor (T x E x C is infeasible at 1M tokens): assignments are
+argsort-grouped by expert, positions within each expert computed by searchsorted,
+overflow beyond the static capacity dropped (standard capacity-factor semantics).
+Expert weight tensors carry a leading E dim that shards over the 'model' mesh axis
+(expert parallelism); the scatter/gather between token space (data-sharded) and
+expert space (model-sharded) is GSPMD's to lower into all-to-alls.
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoESpec
+from repro.models.layers import dense_init
+from repro.models.sharding import shard
+
+
+class MoEOut(NamedTuple):
+    y: jax.Array
+    aux_loss: jax.Array  # load-balance auxiliary loss (Switch-style)
+
+
+def init_moe(key, d: int, spec: MoESpec, act: str, dtype) -> dict:
+    ks = jax.random.split(key, 7)
+    e, f = spec.n_experts, spec.d_ff_expert
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "wi_gate": (dense_init(ks[1], d, f, dtype)[None] *
+                    jnp.ones((e, 1, 1), dtype)),
+        "wi_up": (dense_init(ks[2], d, f, dtype)[None] *
+                  jnp.ones((e, 1, 1), dtype)),
+        "wo": (dense_init(ks[3], f, d, dtype)[None] *
+               jnp.ones((e, 1, 1), dtype)),
+    }
+    if spec.n_shared:
+        fs = spec.n_shared * f
+        p["shared_wi_gate"] = dense_init(ks[4], d, fs, dtype)
+        p["shared_wi_up"] = dense_init(ks[5], d, fs, dtype)
+        p["shared_wo"] = dense_init(ks[6], fs, d, dtype)
+    return p
+
+
+def capacity(n_tokens: int, spec: MoESpec) -> int:
+    c = int(math.ceil(n_tokens * spec.top_k / spec.n_experts * spec.capacity_factor))
+    return max(8, -(-c // 8) * 8)  # round up to 8 for TPU-friendly shapes
+
+
+def _dispatch_group(xt, eidx, gate_vals, e: int, k: int, cap: int):
+    """Sort-based dispatch for ONE group's tokens [T, d]. All ops are local to
+    the group, so vmapping over groups keeps the sort device-local under GSPMD
+    (a flat global argsort would be a cross-device sort — observed 20x memory
+    blowup)."""
+    t, d = xt.shape
+    flat_e = eidx.reshape(-1)                                 # [t*k]
+    flat_tok = jnp.repeat(jnp.arange(t), k)
+    flat_gate = gate_vals.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, stok, sgate = flat_e[order], flat_tok[order], flat_gate[order]
+    seg_start = jnp.searchsorted(se, jnp.arange(e))
+    pos = jnp.arange(t * k) - seg_start[se]
+    keep = pos < cap
+    slot = jnp.where(keep, se * cap + pos, e * cap)           # overflow slot
+    # .add, not .set: slots are unique by construction, and scatter-set with
+    # potentially-duplicate indices lowers to a sort-with-payload (observed
+    # multi-GiB u32/f32 sort buffers); scatter-add stays a plain scatter.
+    buf = jnp.zeros((e * cap + 1, d), xt.dtype).at[slot].add(
+        xt[stok], indices_are_sorted=True, unique_indices=True)
+    return buf[:-1].reshape(e, cap, d), (keep, slot, stok, sgate)
+
+
+def _combine_group(yexp, dispatch, t: int, d: int, e: int, cap: int, dtype):
+    keep, slot, stok, sgate = dispatch
+    flat = yexp.reshape(e * cap, d)
+    gathered = jnp.where(keep[:, None],
+                         flat[jnp.clip(slot, 0, e * cap - 1)], 0.0)
+    return jnp.zeros((t, d), dtype).at[stok].add(
+        (sgate[:, None] * gathered).astype(dtype))
+
+
+def apply_moe(p: dict, x: jax.Array, spec: MoESpec) -> MoEOut:
+    """x: [B, T, d] -> [B, T, d]. B is the dispatch-group dim (data-sharded)."""
+    b, t, d = x.shape
+    e, k = spec.n_experts, spec.top_k
+
+    logits = (x.astype(jnp.float32) @ p["router"])            # [B, T, E]
+    probs = jax.nn.softmax(logits, -1)
+    gate_vals, eidx = jax.lax.top_k(probs, k)                 # [B, T, k]
+    gate_vals = gate_vals / jnp.clip(gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance aux loss (mean prob * fraction routed, Switch-style)
+    me = probs.mean((0, 1))                                   # [E]
+    ce = jnp.zeros((e,)).at[eidx.reshape(-1)].add(1.0) / (b * t * k)
+    aux = spec.router_aux_weight * e * jnp.sum(me * ce)
+
+    # ---- per-group sort-based dispatch with static per-group capacity
+    cap = capacity(t, spec)
+    buf, dispatch = jax.vmap(
+        lambda xg, eg, gg: _dispatch_group(xg, eg, gg, e, k, cap)
+    )(x, eidx, gate_vals)                                     # buf [B, E, cap, d]
+    buf = shard(buf, "batch", "expert", None, None)
+
+    # ---- expert computation (E sharded over 'model' => expert parallel;
+    # the B<->E resharding of buf is the all-to-all)
+    h = jnp.einsum("gecd,edf->gecf", buf, p["wi_gate"])
+    h = jax.nn.silu(h) * jnp.einsum("gecd,edf->gecf", buf, p["wi_up"])
+    yexp = jnp.einsum("gecf,efd->gecd", h, p["wo"])
+    yexp = shard(yexp, "batch", "expert", None, None)
+
+    y = jax.vmap(
+        lambda ye, disp: _combine_group(ye, disp, t, d, e, cap, x.dtype)
+    )(yexp, dispatch)
+
+    if "shared_wi_gate" in p:
+        y = y + (jax.nn.silu(x @ p["shared_wi_gate"]) *
+                 (x @ p["shared_wi_up"])) @ p["shared_wo"]
+    return MoEOut(y=y.reshape(b, t, d), aux_loss=aux)

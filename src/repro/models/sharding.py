@@ -1,0 +1,67 @@
+"""Logical-axis sharding annotations for model code.
+
+Model forward functions call ``shard(x, 'batch', None, 'model')`` with *logical*
+axis names; the launcher installs a mapping from logical names to physical mesh
+axes (``('pod','data')`` / ``'model'``). Outside a mesh context (unit tests,
+smoke tests, single-device benchmarks) the calls are identity — the same model
+code runs everywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def _rules() -> Optional[dict]:
+    return getattr(_state, "rules", None)
+
+
+def _mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def logical_axis_rules(mesh: Mesh, rules: dict[str, Union[str, tuple, None]]):
+    """rules: logical name -> physical mesh axis (or tuple of axes, or None)."""
+    prev_r, prev_m = _rules(), _mesh()
+    _state.rules, _state.mesh = rules, mesh
+    try:
+        yield
+    finally:
+        _state.rules, _state.mesh = prev_r, prev_m
+
+
+def spec(*logical: Optional[str]) -> P:
+    rules = _rules() or {}
+    return P(*[rules.get(ax) if ax is not None else None for ax in logical])
+
+
+def shard(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Constrain ``x`` to the sharding implied by logical axis names (or no-op)."""
+    mesh = _mesh()
+    if mesh is None:
+        return x
+    if len(logical) != x.ndim:
+        raise ValueError(f"rank mismatch: {len(logical)} names for shape {x.shape}")
+    # Inside a partial-manual shard_map region the constraint must be built on
+    # the CONTEXT mesh (some axes Manual), not the concrete all-Auto mesh, or
+    # XLA rejects it with a mesh mismatch. The logical rules already exclude
+    # manual (federation) axes from every spec.
+    try:
+        am = jax.sharding.get_abstract_mesh()
+        if am is not None and am.axis_names == mesh.axis_names:
+            return jax.lax.with_sharding_constraint(
+                x, NamedSharding(am, spec(*logical)))
+    except Exception:
+        pass
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec(*logical)))
+
+
+def param_sharding(path_names: Sequence[Optional[str]]) -> P:
+    return spec(*path_names)

@@ -1,0 +1,169 @@
+"""Mamba2 (SSD — state space duality) block, chunked-parallel + one-step decode.
+
+Scalar-per-head decay (a_t = exp(dt_t * A_h)), multi-head state S in R^{N x P}.
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like form
+within chunks of length Q, linear state recurrence across chunks via lax.scan.
+Decode is the O(1) recurrent update carried in SSMCache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMSpec
+from repro.models.layers import dense_init
+from repro.models.sharding import shard
+
+
+class SSMCache(NamedTuple):
+    state: jax.Array       # [B, H, N, P]
+    conv: jax.Array        # [B, d_conv-1, conv_channels] rolling conv context
+
+
+def dims(d_model: int, spec: SSMSpec):
+    d_inner = spec.expand * d_model
+    n_heads = d_inner // spec.head_dim
+    conv_ch = d_inner + 2 * spec.n_groups * spec.d_state
+    return d_inner, n_heads, conv_ch
+
+
+def init_ssm(key, d_model: int, spec: SSMSpec, dtype) -> dict:
+    d_inner, n_heads, conv_ch = dims(d_model, spec)
+    ks = jax.random.split(key, 5)
+    proj_out = 2 * d_inner + 2 * spec.n_groups * spec.d_state + n_heads
+    return {
+        "in_proj": dense_init(ks[0], d_model, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (spec.d_conv, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, n_heads)).astype(jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, d_model, dtype),
+    }
+
+
+def _split_proj(zxbcdt: jax.Array, d_inner: int, spec: SSMSpec, n_heads: int):
+    gn = spec.n_groups * spec.d_state
+    z = zxbcdt[..., :d_inner]
+    xbc = zxbcdt[..., d_inner: 2 * d_inner + 2 * gn]
+    dt = zxbcdt[..., 2 * d_inner + 2 * gn:]
+    return z, xbc, dt
+
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv over time. xbc: [B, T, C]; w: [K, C]."""
+    k = w.shape[0]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = sum(pad[:, i: i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + b)
+
+
+def ssd_forward(p: dict, x: jax.Array, spec: SSMSpec,
+                init_state: jax.Array | None = None):
+    """Chunked SSD scan. x: [B, T, d_model] -> (y, final_state)."""
+    b, t, d_model = x.shape
+    d_inner, n_heads, conv_ch = dims(d_model, spec)
+    g, n, pdim, q = spec.n_groups, spec.d_state, spec.head_dim, spec.chunk
+    if t % q != 0:  # odd lengths (tests, prompts): largest divisor <= chunk
+        q = next(d for d in range(min(q, t), 0, -1) if t % d == 0)
+    nc = t // q
+
+    z, xbc, dt = _split_proj(x @ p["in_proj"], d_inner, spec, n_heads)
+    xbc = _causal_conv(xbc, p["conv_w"], p["conv_b"])
+    xs = xbc[..., :d_inner].reshape(b, t, n_heads, pdim)
+    Bv = xbc[..., d_inner: d_inner + g * n].reshape(b, t, g, n)
+    Cv = xbc[..., d_inner + g * n:].reshape(b, t, g, n)
+    heads_per_g = n_heads // g
+    Bh = jnp.repeat(Bv, heads_per_g, axis=2)  # [B,T,H,N]
+    Ch = jnp.repeat(Cv, heads_per_g, axis=2)
+
+    dtv = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])      # [B,T,H]
+    A = -jnp.exp(p["A_log"])                                          # [H] (negative)
+    loga = (dtv * A).astype(jnp.float32)                              # log decay, <=0
+
+    # reshape into chunks; heads over 'model' so the [Q,Q,H] intra-chunk score
+    # tensor stays device-local
+    def ch(a):
+        return a.reshape(b, nc, q, *a.shape[2:])
+    xs_c, B_c, C_c, loga_c, dt_c = map(ch, (xs, Bh, Ch, loga, dtv))
+    xs_c = shard(xs_c, "batch", None, None, "heads", None)
+    B_c = shard(B_c, "batch", None, None, "heads", None)
+    C_c = shard(C_c, "batch", None, None, "heads", None)
+    loga_c = shard(loga_c, "batch", None, None, "heads")
+    dt_c = shard(dt_c, "batch", None, None, "heads")
+
+    cum = jnp.cumsum(loga_c, axis=2)                                  # [B,nc,Q,H]
+    # intra-chunk (attention-like) term; mask BEFORE exp (0*inf NaN in backward)
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]               # [B,nc,Qq,Qk,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    gamma = jnp.exp(rel)
+    scores = jnp.einsum("bcqhn,bckhn->bcqkh", C_c, B_c) * gamma
+    y_intra = jnp.einsum("bcqkh,bckhp,bckh->bcqhp", scores, xs_c, dt_c)
+
+    # per-chunk input -> state contribution
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)                   # [B,nc,Q,H]
+    chunk_state = jnp.einsum("bcqhn,bcqhp,bcqh,bcqh->bchnp",
+                             B_c, xs_c, dt_c, decay_to_end)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                           # [B,nc,H]
+
+    s0 = (init_state if init_state is not None
+          else jnp.zeros((b, n_heads, n, pdim), jnp.float32))
+
+    def scan_fn(s, inp):
+        cs, cd = inp  # [B,H,N,P], [B,H]
+        s_next = s * cd[..., None, None] + cs
+        return s_next, s
+
+    (s_final, s_prevs) = jax.lax.scan(
+        scan_fn, s0, (chunk_state.swapaxes(0, 1), chunk_decay.swapaxes(0, 1))
+    )
+    s_prevs = s_prevs.swapaxes(0, 1)                                  # [B,nc,H,N,P]
+
+    # inter-chunk: contribution of carried state to each position
+    y_inter = jnp.einsum("bcqhn,bchnp,bcqh->bcqhp",
+                         C_c, s_prevs, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(b, t, n_heads, pdim)
+    y = y + xs * p["D"][None, None, :, None]
+    y = y.reshape(b, t, d_inner).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"], s_final
+
+
+def ssd_decode_step(p: dict, x: jax.Array, cache: SSMCache, spec: SSMSpec):
+    """One-token recurrent update. x: [B, 1, d_model]."""
+    b, t, d_model = x.shape
+    d_inner, n_heads, conv_ch = dims(d_model, spec)
+    g, n, pdim = spec.n_groups, spec.d_state, spec.head_dim
+
+    z, xbc, dt = _split_proj(x @ p["in_proj"], d_inner, spec, n_heads)
+    # rolling causal conv: context = last (K-1) inputs + current
+    ctx = jnp.concatenate([cache.conv, xbc], axis=1)                  # [B,K,C]
+    xbc_t = jax.nn.silu(jnp.einsum("bkc,kc->bc", ctx, p["conv_w"]) + p["conv_b"])
+    new_conv = ctx[:, 1:, :]
+
+    xs = xbc_t[:, :d_inner].reshape(b, n_heads, pdim)
+    Bv = xbc_t[:, d_inner: d_inner + g * n].reshape(b, g, n)
+    Cv = xbc_t[:, d_inner + g * n:].reshape(b, g, n)
+    heads_per_g = n_heads // g
+    Bh = jnp.repeat(Bv, heads_per_g, axis=1)                          # [B,H,N]
+    Ch = jnp.repeat(Cv, heads_per_g, axis=1)
+
+    dtv = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = jnp.exp(dtv * (-jnp.exp(p["A_log"])))                         # [B,H]
+    s = cache.state * a[..., None, None] + jnp.einsum(
+        "bhn,bhp,bh->bhnp", Bh, xs.astype(jnp.float32), dtv)
+    y = jnp.einsum("bhn,bhnp->bhp", Ch.astype(jnp.float32), s)
+    y = y + xs.astype(jnp.float32) * p["D"][None, :, None]
+    y = y.reshape(b, 1, d_inner).astype(x.dtype) * jax.nn.silu(z)
+    return y @ p["out_proj"], SSMCache(state=s, conv=new_conv)
+
+
+def init_cache(batch: int, d_model: int, spec: SSMSpec, dtype) -> SSMCache:
+    d_inner, n_heads, conv_ch = dims(d_model, spec)
+    return SSMCache(
+        state=jnp.zeros((batch, n_heads, spec.d_state, spec.head_dim), jnp.float32),
+        conv=jnp.zeros((batch, spec.d_conv - 1, conv_ch), dtype),
+    )

@@ -1,0 +1,541 @@
+"""Architecture-generic model: init / train loss / prefill / decode for every
+assigned family (dense, moe, vlm, audio encoder, hybrid mamba2, xlstm).
+
+Layout decisions that matter at scale (see DESIGN.md §6):
+  * layers are stacked and traversed with lax.scan (+ jax.checkpoint remat) so HLO
+    size and compile time are O(1) in depth;
+  * the residual stream between blocks is sequence-sharded over the 'model' axis
+    (Megatron-style sequence parallelism) so the 100-layer x 4k-token carry fits;
+  * attention materializes scores only per query-chunk (lax.map) — the XLA stand-in
+    for the Pallas flash kernel (kernels/flash_attention.py) used on real TPU;
+  * the cross-entropy is computed per sequence-chunk with vocab sharded, so the
+    202k-vocab logits tensor never exists in full.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models import xlstm as xlstm_mod
+from repro.models.attention import KVCache
+from repro.models.layers import apply_mlp, apply_norm, embed_init
+from repro.models.sharding import shard
+
+init_attention = attn.init_attention
+
+
+# ------------------------------------------------------------------ block init
+def _init_self_block(key, cfg: ArchConfig, dtype) -> dict:
+    from repro.models.layers import init_mlp, init_norm
+
+    ks = jax.random.split(key, 4)
+    p = {
+        "attn_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, dtype),
+        "mlp_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+    }
+    if cfg.family == "moe" and cfg.moe is not None:
+        p["moe"] = moe_mod.init_moe(ks[1], cfg.d_model, cfg.moe, cfg.act, dtype)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype)
+    return p
+
+
+def _init_cross_block(key, cfg: ArchConfig, dtype) -> dict:
+    from repro.models.layers import init_mlp, init_norm
+
+    ks = jax.random.split(key, 2)
+    return {
+        "attn_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "attn": init_attention(ks[0], cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                               cfg.hd, dtype, cross=True),
+        "mlp_norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "mlp": init_mlp(ks[1], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+    }
+
+
+def _init_ssm_block(key, cfg: ArchConfig, dtype) -> dict:
+    from repro.models.layers import init_norm
+
+    return {
+        "norm": init_norm(cfg.d_model, cfg.norm, dtype),
+        "ssm": ssm_mod.init_ssm(key, cfg.d_model, cfg.ssm, dtype),
+    }
+
+
+def init_params(cfg: ArchConfig, key: jax.Array) -> dict:
+    dtype = jnp.dtype(cfg.dtype)
+    keys = jax.random.split(key, 8)
+    from repro.models.layers import init_norm
+
+    params: dict = {"final_norm": init_norm(cfg.d_model, cfg.norm, dtype)}
+    if cfg.family != "audio":
+        params["embed"] = embed_init(keys[0], cfg.vocab, cfg.d_model, dtype)
+    if not cfg.tie_embeddings:
+        params["lm_head"] = embed_init(keys[1], cfg.vocab, cfg.d_model, dtype).T
+
+    if cfg.xlstm:
+        n_s = (cfg.n_layers + 1) // 2
+        n_m = cfg.n_layers // 2
+        params["slstm"] = jax.vmap(
+            lambda k: xlstm_mod.init_slstm(k, cfg.d_model, cfg.n_heads, dtype)
+        )(jax.random.split(keys[2], n_s))
+        params["mlstm"] = jax.vmap(
+            lambda k: xlstm_mod.init_mlstm(k, cfg.d_model, cfg.n_heads, dtype)
+        )(jax.random.split(keys[3], n_m))
+    elif cfg.family == "vlm":
+        n_super = cfg.n_layers // (cfg.cross_attn_every + 1)
+        params["self_blocks"] = jax.vmap(jax.vmap(
+            lambda k: _init_self_block(k, cfg, dtype)
+        ))(jax.random.split(keys[2], (n_super, cfg.cross_attn_every)))
+        params["cross_blocks"] = jax.vmap(
+            lambda k: _init_cross_block(k, cfg, dtype)
+        )(jax.random.split(keys[3], n_super))
+    elif cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        params["ssm_blocks"] = jax.vmap(jax.vmap(
+            lambda k: _init_ssm_block(k, cfg, dtype)
+        ))(jax.random.split(keys[2], (n_super, cfg.shared_attn_every)))
+        params["shared_block"] = _init_self_block(keys[3], cfg, dtype)
+    else:  # dense / moe / audio — uniform stack
+        params["blocks"] = jax.vmap(
+            lambda k: _init_self_block(k, cfg, dtype)
+        )(jax.random.split(keys[2], cfg.n_layers))
+    return params
+
+
+def lm_head_weight(params: dict, cfg: ArchConfig) -> jax.Array:
+    return params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+
+
+# ------------------------------------------------------------- block forwards
+def _self_block(p: dict, cfg: ArchConfig, x: jax.Array, *, causal: bool,
+                window: Optional[int]) -> tuple[jax.Array, jax.Array]:
+    """Pre-norm attention + MLP/MoE. Returns (x, aux_loss)."""
+    h = apply_norm(p["attn_norm"], x, cfg.norm)
+    h = shard(h, "batch", None, None)
+    a = attn.self_attention(
+        p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads, hd=cfg.hd,
+        rope=cfg.rope, causal=causal, window=window)
+    x = x + a
+    h = apply_norm(p["mlp_norm"], x, cfg.norm)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        out = moe_mod.apply_moe(p["moe"], h, cfg.moe)
+        x = x + out.y
+        aux = out.aux_loss
+    else:
+        x = x + apply_mlp(p["mlp"], h, cfg.act)
+    x = shard(x, "batch", "seq", None)
+    return x, aux
+
+
+def _cross_block(p: dict, cfg: ArchConfig, x: jax.Array,
+                 kv_src: jax.Array) -> jax.Array:
+    h = apply_norm(p["attn_norm"], x, cfg.norm)
+    x = x + attn.cross_attention(p["attn"], h, kv_src, n_heads=cfg.n_heads,
+                                 n_kv=cfg.n_kv_heads, hd=cfg.hd)
+    h = apply_norm(p["mlp_norm"], x, cfg.norm)
+    x = x + apply_mlp(p["mlp"], h, cfg.act)
+    return shard(x, "batch", "seq", None)
+
+
+def _ssm_block(p: dict, cfg: ArchConfig, x: jax.Array):
+    h = apply_norm(p["norm"], x, cfg.norm)
+    y, _ = ssm_mod.ssd_forward(p["ssm"], h, cfg.ssm)
+    return shard(x + y, "batch", "seq", None)
+
+
+# --------------------------------------------------------------- full forward
+def forward(params: dict, cfg: ArchConfig, h: jax.Array, *,
+            window: Optional[int] = None,
+            image_embeds: Optional[jax.Array] = None) -> tuple[jax.Array, jax.Array]:
+    """Training/prefill forward over the full stack. h: [B,T,d] embedded input.
+    Returns (hidden, total_aux_loss)."""
+    causal = not cfg.encoder_only
+    window = window if window is not None else cfg.window
+    aux_total = jnp.zeros((), jnp.float32)
+
+    if cfg.xlstm:
+        for i in range(cfg.n_layers):
+            pblk = (jax.tree_util.tree_map(lambda a: a[i // 2], params["slstm"])
+                    if i % 2 == 0 else
+                    jax.tree_util.tree_map(lambda a: a[i // 2], params["mlstm"]))
+            if i % 2 == 0:
+                y, _ = xlstm_mod.slstm_forward(pblk, h, cfg.n_heads)
+            else:
+                y, _ = xlstm_mod.mlstm_forward(pblk, h, cfg.n_heads)
+            h = h + y
+        return apply_norm(params["final_norm"], h, cfg.norm), aux_total
+
+    if cfg.family == "vlm":
+        def super_body(carry, blk):
+            x, aux = carry
+            self_ps, cross_p = blk
+
+            def inner(c, bp):
+                x2, a2 = c
+                x2, a_new = _self_block(bp, cfg, x2, causal=causal, window=window)
+                return (x2, a2 + a_new), None
+
+            inner = jax.checkpoint(inner, prevent_cse=False)
+            (x, aux), _ = jax.lax.scan(inner, (x, aux), self_ps)
+            x = _cross_block(cross_p, cfg, x, image_embeds)
+            return (x, aux), None
+
+        body = jax.checkpoint(super_body, prevent_cse=False)
+        (h, aux_total), _ = jax.lax.scan(
+            body, (h, aux_total),
+            (params["self_blocks"], params["cross_blocks"]))
+    elif cfg.family == "hybrid":
+        def super_body(carry, blk):
+            x, aux = carry
+
+            def inner(c, bp):
+                return _ssm_block(bp, cfg, c), None
+
+            inner = jax.checkpoint(inner, prevent_cse=False)
+            x, _ = jax.lax.scan(inner, x, blk)
+            x, a_new = _self_block(params["shared_block"], cfg, x,
+                                   causal=causal, window=window)
+            return (x, aux + a_new), None
+
+        body = jax.checkpoint(super_body, prevent_cse=False)
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total),
+                                         params["ssm_blocks"])
+    else:
+        def body(carry, bp):
+            x, aux = carry
+            x, a_new = _self_block(bp, cfg, x, causal=causal, window=window)
+            return (x, aux + a_new), None
+
+        body = jax.checkpoint(body, prevent_cse=False)
+        (h, aux_total), _ = jax.lax.scan(body, (h, aux_total), params["blocks"])
+
+    return apply_norm(params["final_norm"], h, cfg.norm), aux_total
+
+
+# ----------------------------------------------------------------------- loss
+def chunked_ce_loss(h: jax.Array, w_head: jax.Array, labels: jax.Array,
+                    chunk: int = 128) -> jax.Array:
+    """Next-token CE without materializing full [B,T,V] logits."""
+    b, t, d = h.shape
+    chunk = min(chunk, t)
+    nc = t // chunk
+    hs = h[:, : nc * chunk].reshape(b, nc, chunk, d).swapaxes(0, 1)
+    ls = labels[:, : nc * chunk].reshape(b, nc, chunk).swapaxes(0, 1)
+
+    def per_chunk(args):
+        hx, lx = args
+        logits = (hx @ w_head).astype(jnp.float32)
+        logits = shard(logits, "batch", None, "model")
+        lse = jax.nn.logsumexp(logits, -1)
+        gold = jnp.take_along_axis(logits, lx[..., None], -1)[..., 0]
+        return jnp.mean(lse - gold)
+
+    # remat: backward recomputes each chunk's logits instead of saving [c, V]
+    losses = jax.lax.map(jax.checkpoint(per_chunk, prevent_cse=False), (hs, ls))
+    return jnp.mean(losses)
+
+
+def embed_tokens(params: dict, cfg: ArchConfig, tokens: jax.Array) -> jax.Array:
+    h = params["embed"][tokens]
+    return shard(h, "batch", "seq", None)
+
+
+def train_loss(params: dict, cfg: ArchConfig, batch: dict[str, Any]) -> jax.Array:
+    """batch: {'tokens' or 'frames', 'labels', ['image_embeds']}."""
+    if cfg.family == "audio":
+        h = batch["frames"].astype(jnp.dtype(cfg.dtype))
+        h = shard(h, "batch", "seq", None)
+    else:
+        h = embed_tokens(params, cfg, batch["tokens"])
+    h, aux = forward(params, cfg, h, image_embeds=batch.get("image_embeds"))
+    ce = chunked_ce_loss(h, lm_head_weight(params, cfg), batch["labels"])
+    return ce + aux
+
+
+# ------------------------------------------------------------------- serving
+class DecodeState(NamedTuple):
+    caches: Any          # family-specific cache pytree
+    cross_kv: Any        # vlm only: per-super-block (k, v) from image embeds
+
+
+def init_decode_state(cfg: ArchConfig, batch: int, cache_len: int) -> DecodeState:
+    dtype = jnp.dtype(cfg.dtype)
+
+    kv_dt = jnp.int8 if cfg.kv_dtype == "int8" else dtype
+
+    def kv(b=batch, s=cache_len):
+        return KVCache(
+            k=jnp.zeros((b, s, cfg.n_kv_heads, cfg.hd), kv_dt),
+            v=jnp.zeros((b, s, cfg.n_kv_heads, cfg.hd), kv_dt),
+            length=jnp.zeros((b,), jnp.int32),
+        )
+
+    if cfg.xlstm:
+        d_inner, dh = xlstm_mod._cell_dims(cfg.d_model, cfg.n_heads)
+        n_s = (cfg.n_layers + 1) // 2
+        n_m = cfg.n_layers // 2
+        caches = {
+            "s": tuple(jnp.zeros((n_s, batch, cfg.n_heads, dh), jnp.float32)
+                       for _ in range(4)),
+            "m": (jnp.zeros((n_m, batch, cfg.n_heads, dh, dh), jnp.float32),
+                  jnp.zeros((n_m, batch, cfg.n_heads, dh), jnp.float32),
+                  jnp.zeros((n_m, batch, cfg.n_heads), jnp.float32)),
+        }
+        return DecodeState(caches=caches, cross_kv=None)
+    if cfg.family == "vlm":
+        n_super = cfg.n_layers // (cfg.cross_attn_every + 1)
+        stack = lambda c: jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_super, cfg.cross_attn_every) + x.shape), c)
+        caches = stack(kv())
+        d_img = (jnp.zeros((n_super, batch, cfg.n_image_tokens,
+                            cfg.n_kv_heads, cfg.hd), dtype),) * 2
+        return DecodeState(caches=caches, cross_kv=d_img)
+    if cfg.family == "hybrid":
+        n_super = cfg.n_layers // cfg.shared_attn_every
+        sc = ssm_mod.init_cache(batch, cfg.d_model, cfg.ssm, dtype)
+        ssm_caches = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(
+                x, (n_super, cfg.shared_attn_every) + x.shape), sc)
+        attn_caches = jax.tree_util.tree_map(
+            lambda x: jnp.broadcast_to(x, (n_super,) + x.shape), kv())
+        return DecodeState(caches={"ssm": ssm_caches, "attn": attn_caches},
+                           cross_kv=None)
+    # dense / moe
+    caches = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape), kv())
+    return DecodeState(caches=caches, cross_kv=None)
+
+
+def prefill(params: dict, cfg: ArchConfig, tokens: jax.Array, cache_len: int,
+            image_embeds: Optional[jax.Array] = None):
+    """Full-sequence prefill producing last-position logits + decode state.
+
+    Every family supports prefill: attention families fill KV caches, recurrent
+    families (ssm/xlstm/hybrid) return their final recurrent state; the audio
+    encoder has no decode phase, so its "prefill" is a full batched encode
+    (logits only, state None).
+    """
+    window = cfg.window
+
+    if cfg.family == "audio":
+        h = tokens.astype(jnp.dtype(cfg.dtype))  # tokens == frame embeddings
+        h, _ = forward(params, cfg, h)
+        logits = h[:, -1:] @ lm_head_weight(params, cfg)
+        return logits, None
+
+    h = embed_tokens(params, cfg, tokens)
+
+    if cfg.xlstm:
+        new_s, new_m = [], []
+        for i in range(cfg.n_layers):
+            li = i // 2
+            if i % 2 == 0:
+                pblk = jax.tree_util.tree_map(lambda a: a[li], params["slstm"])
+                y, carry = xlstm_mod.slstm_forward(pblk, h, cfg.n_heads)
+                new_s.append(carry)
+            else:
+                pblk = jax.tree_util.tree_map(lambda a: a[li], params["mlstm"])
+                y, carry = xlstm_mod.mlstm_forward(pblk, h, cfg.n_heads)
+                new_m.append(carry)
+            h = h + y
+        caches = {
+            "s": tuple(jnp.stack([c[j] for c in new_s]) for j in range(4)),
+            "m": tuple(jnp.stack([c[j] for c in new_m]) for j in range(3)),
+        }
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        return h[:, -1:] @ lm_head_weight(params, cfg), DecodeState(
+            caches=caches, cross_kv=None)
+
+    def self_prefill(bp, x):
+        hn = apply_norm(bp["attn_norm"], x, cfg.norm)
+        a, cache = attn.prefill_cache(
+            bp["attn"], hn, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            hd=cfg.hd, rope=cfg.rope, window=window, cache_len=cache_len)
+        x = x + a
+        hn = apply_norm(bp["mlp_norm"], x, cfg.norm)
+        if "moe" in bp:
+            x = x + moe_mod.apply_moe(bp["moe"], hn, cfg.moe).y
+        else:
+            x = x + apply_mlp(bp["mlp"], hn, cfg.act)
+        return shard(x, "batch", "seq", None), cache
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, bp):
+            return self_prefill(bp, x)
+
+        h, caches = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                                 h, params["blocks"])
+        state = DecodeState(caches=caches, cross_kv=None)
+    elif cfg.family == "vlm":
+        def super_body(x, blk):
+            self_ps, cross_p = blk
+
+            inner = jax.checkpoint(lambda x2, bp: self_prefill(bp, x2),
+                                   prevent_cse=False)
+            x, self_caches = jax.lax.scan(inner, x, self_ps)
+            # cache the cross-attn K/V projected from the image embeddings
+            kc = attn._split_heads(image_embeds @ cross_p["attn"]["wk"],
+                                   cfg.n_kv_heads, cfg.hd)
+            vc = attn._split_heads(image_embeds @ cross_p["attn"]["wv"],
+                                   cfg.n_kv_heads, cfg.hd)
+            x = _cross_block(cross_p, cfg, x, image_embeds)
+            return x, (self_caches, (kc, vc))
+
+        h, (caches, cross_kv) = jax.lax.scan(
+            jax.checkpoint(super_body, prevent_cse=False), h,
+            (params["self_blocks"], params["cross_blocks"]))
+        state = DecodeState(caches=caches, cross_kv=cross_kv)
+    elif cfg.family == "hybrid":
+        def super_body(x, blk):
+            def inner(x2, bp):
+                hn = apply_norm(bp["norm"], x2, cfg.norm)
+                y, s_final = ssm_mod.ssd_forward(bp["ssm"], hn, cfg.ssm)
+                conv_tail = _conv_tail(hn, bp["ssm"], cfg)
+                return x2 + y, ssm_mod.SSMCache(state=s_final, conv=conv_tail)
+
+            inner = jax.checkpoint(inner, prevent_cse=False)
+            x, ssm_caches = jax.lax.scan(inner, x, blk)
+            x, attn_cache = self_prefill(params["shared_block"], x)
+            return x, (ssm_caches, attn_cache)
+
+        h, (sc, ac) = jax.lax.scan(
+            jax.checkpoint(super_body, prevent_cse=False), h,
+            params["ssm_blocks"])
+        state = DecodeState(caches={"ssm": sc, "attn": ac}, cross_kv=None)
+    else:
+        raise ValueError(cfg.family)
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    return h[:, -1:] @ lm_head_weight(params, cfg), state
+
+
+def _conv_tail(hn: jax.Array, p_ssm: dict, cfg: ArchConfig) -> jax.Array:
+    """Last (d_conv-1) pre-conv xBC inputs — the rolling decode context that
+    ssm.ssd_decode_step's causal conv expects."""
+    spec = cfg.ssm
+    d_inner = spec.expand * cfg.d_model
+    gn = spec.n_groups * spec.d_state
+    tail = hn[:, -(spec.d_conv - 1):, :] @ p_ssm["in_proj"]
+    return tail[..., d_inner: 2 * d_inner + 2 * gn]
+
+
+def decode_step(params: dict, cfg: ArchConfig, token: jax.Array,
+                state: DecodeState) -> tuple[jax.Array, DecodeState]:
+    """One-token decode across all families. token: int32[B, 1]."""
+    window = cfg.window
+    h = embed_tokens(params, cfg, token) if cfg.family != "audio" else token
+    h = shard(h, "batch", None, None)
+
+    if cfg.xlstm:
+        s_cache, m_cache = state.caches["s"], state.caches["m"]
+        new_s, new_m = [], []
+        for i in range(cfg.n_layers):
+            if i % 2 == 0:
+                li = i // 2
+                pblk = jax.tree_util.tree_map(lambda a: a[li], params["slstm"])
+                cache = tuple(c[li] for c in s_cache)
+                y, new = xlstm_mod.slstm_forward(pblk, h, cfg.n_heads, cache=cache)
+                new_s.append(new)
+            else:
+                li = i // 2
+                pblk = jax.tree_util.tree_map(lambda a: a[li], params["mlstm"])
+                cache = tuple(c[li] for c in m_cache)
+                y, new = xlstm_mod.mlstm_decode_step(pblk, h, cache, cfg.n_heads)
+                new_m.append(new)
+            h = h + y
+        caches = {
+            "s": tuple(jnp.stack([n[j] for n in new_s]) for j in range(4)),
+            "m": tuple(jnp.stack([n[j] for n in new_m]) for j in range(3)),
+        }
+        h = apply_norm(params["final_norm"], h, cfg.norm)
+        return h @ lm_head_weight(params, cfg), DecodeState(caches=caches,
+                                                            cross_kv=None)
+
+    def self_decode(bp, x, cache):
+        hn = apply_norm(bp["attn_norm"], x, cfg.norm)
+        a, cache = attn.decode_self_attention(
+            bp["attn"], hn, cache, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            hd=cfg.hd, rope=cfg.rope, window=window)
+        x = x + a
+        hn = apply_norm(bp["mlp_norm"], x, cfg.norm)
+        if "moe" in bp:
+            x = x + moe_mod.apply_moe(bp["moe"], hn, cfg.moe).y
+        else:
+            x = x + apply_mlp(bp["mlp"], hn, cfg.act)
+        return x, cache
+
+    if cfg.family in ("dense", "moe"):
+        def body(x, scan_in):
+            bp, cache = scan_in
+            x, cache = self_decode(bp, x, cache)
+            return x, cache
+
+        h, caches = jax.lax.scan(body, h, (params["blocks"], state.caches))
+        new_state = DecodeState(caches=caches, cross_kv=None)
+    elif cfg.family == "vlm":
+        def cross_decode(cp, x, kv):
+            hn = apply_norm(cp["attn_norm"], x, cfg.norm)
+            k, v = kv
+            q = attn._split_heads(hn @ cp["attn"]["wq"], cfg.n_heads, cfg.hd)
+            o = attn.attend(q, k, v, None, cfg.hd)
+            x = x + o.reshape(*x.shape[:-1], -1) @ cp["attn"]["wo"]
+            hn = apply_norm(cp["mlp_norm"], x, cfg.norm)
+            return x + apply_mlp(cp["mlp"], hn, cfg.act)
+
+        def super_body(x, scan_in):
+            self_ps, cross_p, self_caches, ckv = scan_in
+
+            def inner(x2, si):
+                bp, cache = si
+                x2, cache = self_decode(bp, x2, cache)
+                return x2, cache
+
+            x, self_caches = jax.lax.scan(inner, x, (self_ps, self_caches))
+            x = cross_decode(cross_p, x, ckv)
+            return x, (self_caches, None)
+
+        h, (caches, _) = jax.lax.scan(
+            super_body, h,
+            (params["self_blocks"], params["cross_blocks"], state.caches,
+             state.cross_kv))
+        new_state = DecodeState(caches=caches, cross_kv=state.cross_kv)
+    elif cfg.family == "hybrid":
+        def super_body(x, scan_in):
+            ssm_ps, ssm_caches, attn_cache = scan_in
+
+            def inner(x2, si):
+                bp, cache = si
+                hn = apply_norm(bp["norm"], x2, cfg.norm)
+                y, cache = ssm_mod.ssd_decode_step(bp["ssm"], hn, cache, cfg.ssm)
+                return x2 + y, cache
+
+            x, ssm_caches = jax.lax.scan(inner, x, (ssm_ps, ssm_caches))
+            x, attn_cache = self_decode(params["shared_block"], x, attn_cache)
+            return x, (ssm_caches, attn_cache)
+
+        h, (sc, ac) = jax.lax.scan(
+            super_body, h,
+            (params["ssm_blocks"], state.caches["ssm"], state.caches["attn"]))
+        new_state = DecodeState(caches={"ssm": sc, "attn": ac}, cross_kv=None)
+    else:
+        raise ValueError(f"decode unsupported for family {cfg.family}")
+
+    h = apply_norm(params["final_norm"], h, cfg.norm)
+    logits = h @ lm_head_weight(params, cfg)
+    return logits, new_state
+
+
+def param_count(params: dict) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

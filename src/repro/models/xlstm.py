@@ -1,0 +1,226 @@
+"""xLSTM blocks (arXiv:2405.04517): sLSTM (scalar memory, exponential gating with
+stabilizer) and mLSTM (matrix memory, covariance update).
+
+Training/prefill:
+  * mLSTM runs in the CHUNKED-PARALLEL form (the paper's training mode): the
+    per-step matrix state C [dh,dh] is never materialized per position — only
+    per chunk — which is what makes 4k-step training memory-feasible. The
+    unstabilized chunked math is exactly equal to the stabilized recurrence
+    (the stabilizer cancels analytically; h = Cq / max(|n·q|, 1)).
+  * sLSTM has no parallel form (true nonlinear recurrence); it runs as a
+    two-level remat scan (outer chunks checkpointed, inner steps recomputed in
+    backward) so only O(T/chunk) states are saved.
+
+Decode: O(1) recurrent steps for both cell types, carrying (c,n,m,h) / (C,n,m).
+Blocks alternate sLSTM (even index) / mLSTM (odd). The assignment's d_ff=0
+means no separate FFN: each cell carries its own factor-2 up/down projection.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import dense_init
+from repro.models.sharding import shard
+
+CHUNK_T = 128   # sLSTM remat chunk (outer scan length = T / CHUNK_T)
+CHUNK_M = 256   # mLSTM chunked-parallel chunk length
+
+
+def _cell_dims(d_model: int, n_heads: int, factor: int = 2):
+    d_inner = factor * d_model
+    dh = d_inner // n_heads
+    return d_inner, dh
+
+
+def init_slstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    d_inner, dh = _cell_dims(d_model, n_heads)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], d_model, 4 * d_inner, dtype),   # z,i,f,o pre-acts
+        "r": (jax.random.normal(ks[1], (n_heads, dh, 4 * dh)) * 0.05).astype(dtype),
+        "b": jnp.zeros((4 * d_inner,), dtype),
+        "w_out": dense_init(ks[3], d_inner, d_model, dtype),
+    }
+
+
+def init_mlstm(key, d_model: int, n_heads: int, dtype) -> dict:
+    d_inner, dh = _cell_dims(d_model, n_heads)
+    ks = jax.random.split(key, 6)
+    return {
+        "w_qkv": dense_init(ks[0], d_model, 3 * d_inner, dtype),
+        "w_if": dense_init(ks[1], d_model, 2 * n_heads, dtype),  # input/forget gates
+        "w_o": dense_init(ks[2], d_model, d_inner, dtype),
+        "w_out": dense_init(ks[3], d_inner, d_model, dtype),
+    }
+
+
+# ------------------------------------------------------------------- sLSTM
+def _slstm_step(r, b_heads, n_heads, dh):
+    def step(carry, pre_t):  # pre_t: [B, 4, H, dh]
+        c, n, m, h = carry
+        bsz = h.shape[0]
+        rec = jnp.einsum("bhd,hde->bhe", h, r).reshape(bsz, n_heads, 4, dh)
+        rec = jnp.moveaxis(rec, 2, 1)                       # [B,4,H,dh]
+        zt, it, ft, ot = [pre_t.astype(jnp.float32)[:, j] + rec[:, j]
+                          for j in range(4)]
+        m_new = jnp.maximum(ft + m, it)                     # stabilizer
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(ft + m - m_new)
+        c_new = f_g * c + i_g * jnp.tanh(zt)
+        n_new = f_g * n + i_g
+        h_new = jax.nn.sigmoid(ot) * c_new / jnp.maximum(n_new, 1e-6)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    return step
+
+
+def slstm_forward(p: dict, x: jax.Array, n_heads: int,
+                  cache: tuple | None = None):
+    """x: [B,T,d]. Two-level remat scan; returns (y, final_state)."""
+    b, t, d_model = x.shape
+    d_inner, dh = _cell_dims(d_model, n_heads)
+    pre = (x @ p["w_in"] + p["b"]).reshape(b, t, 4, n_heads, dh)
+
+    if cache is None:
+        c0 = jnp.zeros((b, n_heads, dh), jnp.float32)
+        n0 = jnp.ones((b, n_heads, dh), jnp.float32)
+        m0 = jnp.zeros((b, n_heads, dh), jnp.float32)
+        h0 = jnp.zeros((b, n_heads, dh), jnp.float32)
+    else:
+        c0, n0, m0, h0 = cache
+
+    step = _slstm_step(p["r"].astype(jnp.float32), p["b"], n_heads, dh)
+    xs = jnp.moveaxis(pre, 1, 0)                            # [T,B,4,H,dh]
+
+    if t > CHUNK_T and t % CHUNK_T == 0:
+        xs = xs.reshape(t // CHUNK_T, CHUNK_T, *xs.shape[1:])
+
+        def outer(carry, xc):
+            carry, hs = jax.lax.scan(step, carry, xc)
+            return carry, hs
+
+        carry, hs = jax.lax.scan(
+            jax.checkpoint(outer, prevent_cse=False), (c0, n0, m0, h0), xs)
+        hs = hs.reshape(t, b, n_heads, dh)
+    else:
+        carry, hs = jax.lax.scan(step, (c0, n0, m0, h0), xs)
+
+    y = jnp.moveaxis(hs, 0, 1).reshape(b, t, d_inner).astype(x.dtype)
+    return y @ p["w_out"], carry
+
+
+# ------------------------------------------------------------------- mLSTM
+def _mlstm_proj(p, x, n_heads):
+    b, t, d_model = x.shape
+    d_inner, dh = _cell_dims(d_model, n_heads)
+    qkv = (x @ p["w_qkv"]).reshape(b, t, 3, n_heads, dh)
+    gif = (x @ p["w_if"]).reshape(b, t, 2, n_heads).astype(jnp.float32)
+    o = jax.nn.sigmoid(x @ p["w_o"]).reshape(b, t, n_heads, dh)
+    q = qkv[:, :, 0].astype(jnp.float32)
+    k = qkv[:, :, 1].astype(jnp.float32) * (dh ** -0.5)
+    v = qkv[:, :, 2].astype(jnp.float32)
+    logi = gif[:, :, 0]                      # input gate pre-act (exp gate)
+    logf = jax.nn.log_sigmoid(gif[:, :, 1])  # forget gate in log space
+    return q, k, v, logi, logf, o, dh, d_inner
+
+
+def mlstm_forward(p: dict, x: jax.Array, n_heads: int,
+                  cache: tuple | None = None):
+    """Chunked-parallel mLSTM (training/prefill). x: [B,T,d].
+
+    Returns (y, (C, n, m)) — m is returned as zeros (the chunked form is
+    unstabilized-exact; the recurrent decode step re-stabilizes from m=0).
+    """
+    b, t, d_model = x.shape
+    q, k, v, logi, logf, o, dh, d_inner = _mlstm_proj(p, x, n_heads)
+
+    if cache is None:
+        C0 = jnp.zeros((b, n_heads, dh, dh), jnp.float32)
+        n0 = jnp.zeros((b, n_heads, dh), jnp.float32)
+    else:
+        C0, n0, m0 = cache
+        # fold the stabilizer back in: unstabilized state = exp(m) * stabilized
+        C0 = C0 * jnp.exp(m0)[..., None, None]
+        n0 = n0 * jnp.exp(m0)[..., None]
+
+    Q = CHUNK_M if (t % CHUNK_M == 0 and t >= CHUNK_M) else t
+    nc = t // Q
+
+    def chunked(a):
+        return a.reshape(b, nc, Q, *a.shape[2:])
+
+    qc, kc, vc = map(chunked, (q, k, v))
+    lic, lfc = map(chunked, (logi, logf))
+    qc = shard(qc, "batch", None, None, "heads", None)
+    kc = shard(kc, "batch", None, None, "heads", None)
+    vc = shard(vc, "batch", None, None, "heads", None)
+
+    csum = jnp.cumsum(lfc, axis=2)                    # [B,nc,Q,H]
+    total = csum[:, :, -1, :]                         # [B,nc,H]
+
+    # intra-chunk: w_ab = exp(b_a - b_b + logi_b) for b <= a.
+    # Mask BEFORE the exp: masked rel is large-positive, and exp->inf inside a
+    # where() turns the backward pass into 0*inf = NaN.
+    rel = csum[:, :, :, None, :] - csum[:, :, None, :, :] + lic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((Q, Q), bool))
+    rel = jnp.where(causal[None, None, :, :, None], rel, -jnp.inf)
+    w = jnp.exp(rel)
+    qk = jnp.einsum("zcahd,zcbhd->zcabh", qc, kc)     # [B,nc,Qa,Qb,H]
+    scores = qk * w
+    y_intra = jnp.einsum("zcabh,zcbhd->zcahd", scores, vc)
+    den_intra = jnp.sum(scores, axis=3)               # [B,nc,Qa,H]
+
+    # chunk state contributions
+    wst = jnp.exp(total[:, :, None, :] - csum + lic)  # [B,nc,Q,H]
+    Cc = jnp.einsum("bcqh,bcqhv,bcqhk->bchvk", wst, vc, kc)
+    ncq = jnp.einsum("bcqh,bcqhk->bchk", wst, kc)
+
+    def scan_fn(carry, inp):
+        C, n = carry
+        Cc_i, nc_i, tot_i = inp
+        decay = jnp.exp(tot_i)[..., None, None]
+        C_new = C * decay + Cc_i
+        n_new = n * decay[..., 0] + nc_i
+        return (C_new, n_new), (C, n)
+
+    (C_f, n_f), (C_prevs, n_prevs) = jax.lax.scan(
+        scan_fn, (C0, n0),
+        (Cc.swapaxes(0, 1), ncq.swapaxes(0, 1), total.swapaxes(0, 1)))
+    C_prevs = C_prevs.swapaxes(0, 1)                  # [B,nc,H,dh,dh]
+    n_prevs = n_prevs.swapaxes(0, 1)                  # [B,nc,H,dh]
+
+    eb = jnp.exp(csum)                                # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcqh,bcqhk,bchvk->bcqhv", eb, qc, C_prevs)
+    den_inter = jnp.einsum("bcqh,bcqhk,bchk->bcqh", eb, qc, n_prevs)
+
+    den = jnp.maximum(jnp.abs(den_intra + den_inter), 1.0)
+    h = (y_intra + y_inter) / den[..., None]
+    h = h.reshape(b, t, n_heads, dh)
+    y = (o.astype(jnp.float32) * h).reshape(b, t, d_inner).astype(x.dtype)
+    m_f = jnp.zeros((b, n_heads), jnp.float32)
+    return y @ p["w_out"], (C_f, n_f, m_f)
+
+
+def mlstm_decode_step(p: dict, x: jax.Array, cache: tuple, n_heads: int):
+    """O(1) stabilized recurrent step. x: [B,1,d]."""
+    b, t, d_model = x.shape
+    q, k, v, logi, logf, o, dh, d_inner = _mlstm_proj(p, x, n_heads)
+    C, n, m = cache
+    it, ft = logi[:, 0], logf[:, 0]                   # [B,H]
+    m_new = jnp.maximum(ft + m, it)
+    i_g = jnp.exp(it - m_new)[..., None]
+    f_g = jnp.exp(ft + m - m_new)[..., None]
+    q0, k0, v0 = q[:, 0], k[:, 0], v[:, 0]
+    C_new = f_g[..., None] * C + i_g[..., None] * (v0[..., :, None] *
+                                                   k0[..., None, :])
+    n_new = f_g * n + i_g * k0
+    num = jnp.einsum("bhvk,bhk->bhv", C_new, q0)
+    # h = Cq / max(|n.q|, 1) in unstabilized terms == stabilized with exp(-m)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q0)),
+                      jnp.exp(-m_new))
+    h = num / den[..., None]
+    y = (o[:, 0].astype(jnp.float32) * h).reshape(b, 1, d_inner).astype(x.dtype)
+    return y @ p["w_out"], (C_new, n_new, m_new)

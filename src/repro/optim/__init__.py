@@ -1,0 +1,84 @@
+"""Native JAX optimizers (no optax dependency): SGD, momentum, AdamW.
+
+API mirrors the usual (init, update) pair:
+    opt = sgd(lr=0.1) | momentum(lr, beta) | adamw(lr, ...)
+    state = opt.init(params)
+    params, state = opt.step(params, grads, state)
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[PyTree], PyTree]
+    step: Callable[[PyTree, PyTree, PyTree], tuple[PyTree, PyTree]]
+    name: str = "opt"
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return ()
+
+    def step(params, grads, state):
+        new = jax.tree_util.tree_map(lambda p, g: p - lr * g, params, grads)
+        return new, state
+
+    return Optimizer(init, step, "sgd")
+
+
+def momentum(lr: float, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return jax.tree_util.tree_map(jnp.zeros_like, params)
+
+    def step(params, grads, m):
+        m = jax.tree_util.tree_map(lambda mi, g: beta * mi + g, m, grads)
+        upd = (jax.tree_util.tree_map(lambda mi, g: beta * mi + g, m, grads)
+               if nesterov else m)
+        new = jax.tree_util.tree_map(lambda p, u: p - lr * u, params, upd)
+        return new, m
+
+    return Optimizer(init, step, "momentum")
+
+
+class AdamState(NamedTuple):
+    mu: PyTree
+    nu: PyTree
+    count: jax.Array
+
+
+def adamw(lr: float, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+          weight_decay: float = 0.0) -> Optimizer:
+    def init(params):
+        z = lambda: jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return AdamState(mu=z(), nu=z(), count=jnp.zeros((), jnp.int32))
+
+    def step(params, grads, state):
+        c = state.count + 1
+        mu = jax.tree_util.tree_map(
+            lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+            state.mu, grads)
+        nu = jax.tree_util.tree_map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+
+        def upd(p, m, v):
+            u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new = jax.tree_util.tree_map(upd, params, mu, nu)
+        return new, AdamState(mu=mu, nu=nu, count=c)
+
+    return Optimizer(init, step, "adamw")

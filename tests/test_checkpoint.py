@@ -1,0 +1,41 @@
+"""Checkpointer roundtrip + manifest."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+
+
+def test_roundtrip(tmp_path):
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "nested": {"b": jnp.ones((4,), jnp.bfloat16),
+                       "c": jnp.array(3, jnp.int32)}}
+    path = checkpoint.save(str(tmp_path), 7, tree)
+    assert path.endswith("step_00000007.npz")
+    like = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), tree)
+    restored = checkpoint.restore(str(tmp_path), 7, like)
+    for a, b in zip(jax.tree_util.tree_leaves(tree),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_step(tmp_path):
+    assert checkpoint.latest_step(str(tmp_path)) is None
+    t = {"x": jnp.zeros(1)}
+    checkpoint.save(str(tmp_path), 1, t)
+    checkpoint.save(str(tmp_path), 12, t)
+    assert checkpoint.latest_step(str(tmp_path)) == 12
+
+
+def test_shape_mismatch_raises(tmp_path):
+    t = {"x": jnp.zeros((2, 2))}
+    checkpoint.save(str(tmp_path), 0, t)
+    bad = {"x": jax.ShapeDtypeStruct((3, 2), jnp.float32)}
+    try:
+        checkpoint.restore(str(tmp_path), 0, bad)
+        assert False, "expected ValueError"
+    except ValueError:
+        pass

@@ -1,0 +1,79 @@
+"""Federated partitioner + synthetic dataset properties."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.data import (MNIST, client_batches, dirichlet, iid, make_dataset,
+                        make_lm_tokens, noniid_label_k)
+
+
+def _labels(n=2000, seed=0):
+    return np.random.RandomState(seed).randint(0, 10, size=n)
+
+
+@given(n_clients=st.integers(2, 20), seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_iid_partition_disjoint_and_complete(n_clients, seed):
+    y = _labels()
+    parts = iid(y, n_clients, seed=seed)
+    allidx = np.concatenate(list(parts.values()))
+    assert len(allidx) == len(y)
+    assert len(np.unique(allidx)) == len(y)
+
+
+@given(k=st.integers(1, 10), n_clients=st.integers(2, 20),
+       seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_noniid_label_k_property(k, n_clients, seed):
+    """Paper's Non-IID-k: every client holds samples from exactly <=k classes
+    (k when enough data), and the union covers the dataset."""
+    y = _labels()
+    parts = noniid_label_k(y, n_clients, k, seed=seed)
+    allidx = np.concatenate([p for p in parts.values() if len(p)])
+    assert len(np.unique(allidx)) == len(allidx)
+    for c, idx in parts.items():
+        if len(idx):
+            assert len(np.unique(y[idx])) <= k
+
+
+def test_noniid_4_sees_exactly_4():
+    y = _labels(5000)
+    parts = noniid_label_k(y, 10, 4, seed=1)
+    for idx in parts.values():
+        assert len(np.unique(y[idx])) == 4
+
+
+def test_dirichlet_covers():
+    y = _labels()
+    parts = dirichlet(y, 10, alpha=0.5, seed=0)
+    allidx = np.concatenate(list(parts.values()))
+    assert len(np.unique(allidx)) == len(y)
+
+
+def test_dataset_deterministic_and_learnable():
+    x1, y1 = make_dataset(MNIST, 500, seed=3)
+    x2, y2 = make_dataset(MNIST, 500, seed=3)
+    np.testing.assert_array_equal(x1, x2)
+    np.testing.assert_array_equal(y1, y2)
+    assert x1.shape == (500, 28, 28, 1)
+    # nearest-prototype separability: same-class samples are closer on average
+    xf = x1.reshape(500, -1)
+    d_same, d_diff = [], []
+    for c in range(10):
+        m = xf[y1 == c].mean(0)
+        d_same.append(np.linalg.norm(xf[y1 == c] - m, axis=1).mean())
+        d_diff.append(np.linalg.norm(xf[y1 != c] - m, axis=1).mean())
+    assert np.mean(d_same) < np.mean(d_diff)
+
+
+def test_lm_tokens_structure():
+    toks, labels = make_lm_tokens(100, 8, 64, seed=0)
+    assert toks.shape == (8, 64) and labels.shape == (8, 64)
+    np.testing.assert_array_equal(toks[:, 1:], labels[:, :-1])
+    assert toks.max() < 100 and toks.min() >= 0
+
+
+def test_client_batches_shape():
+    x, y = make_dataset(MNIST, 300, seed=0)
+    xb, yb = client_batches(x, y, np.arange(100), batch=10, steps=5, seed=0)
+    assert xb.shape == (5, 10, 28, 28, 1)
+    assert yb.shape == (5, 10)

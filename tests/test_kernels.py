@@ -1,0 +1,76 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), sweeping shapes/dtypes."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+
+KEY = jax.random.key(42)
+
+
+@pytest.mark.parametrize("b,t,s,h,hkv,hd", [
+    (1, 128, 128, 4, 4, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 256, 256, 8, 1, 128),   # MQA
+    (2, 128, 128, 2, 2, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, None), (True, 64),
+                                           (False, None)])
+def test_flash_attention_matches_ref(b, t, s, h, hkv, hd, causal, window):
+    q = jax.random.normal(jax.random.fold_in(KEY, 1), (b, t, h, hd))
+    k = jax.random.normal(jax.random.fold_in(KEY, 2), (b, s, hkv, hd))
+    v = jax.random.normal(jax.random.fold_in(KEY, 3), (b, s, hkv, hd))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window)
+    exp = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=2e-5,
+                               atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    q = jax.random.normal(KEY, (1, 128, 4, 64)).astype(dtype)
+    k = jax.random.normal(jax.random.fold_in(KEY, 5), (1, 128, 2, 64)).astype(dtype)
+    v = jax.random.normal(jax.random.fold_in(KEY, 6), (1, 128, 2, 64)).astype(dtype)
+    out = ops.flash_attention(q, k, v)
+    exp = ref.flash_attention_ref(q, k, v)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(exp, np.float32), rtol=tol, atol=tol)
+    assert out.dtype == dtype
+
+
+@pytest.mark.parametrize("shape", [(100,), (64, 129), (7, 3, 11), (4096,)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_thgs_sparsify_matches_ref(shape, dtype):
+    g = jax.random.normal(jax.random.fold_in(KEY, 9), shape).astype(dtype)
+    r = (jax.random.normal(jax.random.fold_in(KEY, 10), shape) * 0.2).astype(dtype)
+    thr = 0.8
+    sp, nr = ops.thgs_sparsify(g, r, thr)
+    spr, nrr = ref.thgs_sparsify_ref(g, r, thr)
+    np.testing.assert_allclose(np.asarray(sp, np.float32),
+                               np.asarray(spr, np.float32), rtol=1e-2, atol=1e-2)
+    np.testing.assert_allclose(np.asarray(nr, np.float32),
+                               np.asarray(nrr, np.float32), rtol=1e-2, atol=1e-2)
+    # exact split: every position is in exactly one of (sparse, residual)
+    both = np.asarray(jnp.abs(sp.astype(jnp.float32)) *
+                      jnp.abs(nr.astype(jnp.float32)))
+    assert (both < 1e-6).all()
+
+
+@pytest.mark.parametrize("shape", [(513, 7), (1000,), (128, 128)])
+def test_mask_prng_matches_ref_and_cancels(shape):
+    g = jax.random.normal(jax.random.fold_in(KEY, 11), shape)
+    o_k, m_k = ops.mask_prng_apply(g, seed=1234, sigma=-0.4, sign=1.0)
+    o_r, m_r = ref.mask_prng_ref(g, 1234, p=-1.0, q=2.0, sigma=-0.4, sign=1.0)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-6)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r), atol=1e-6)
+    _, m_neg = ops.mask_prng_apply(g, seed=1234, sigma=-0.4, sign=-1.0)
+    assert float(jnp.max(jnp.abs(m_k + m_neg))) == 0.0
+
+
+def test_mask_prng_support_fraction():
+    g = jnp.zeros((100_000,))
+    _, m = ops.mask_prng_apply(g, seed=7, sigma=-0.5, sign=1.0)
+    frac = float(jnp.mean(m != 0))
+    assert abs(frac - 0.25) < 0.02  # (sigma - p)/q = 0.25

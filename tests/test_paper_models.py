@@ -1,0 +1,24 @@
+"""Paper Table 1: exact parameter counts + forward sanity."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models.paper_models import PAPER_MODELS, TABLE1_PARAMS
+
+
+@pytest.mark.parametrize("name", list(PAPER_MODELS))
+def test_table1_param_counts_exact(name):
+    m = PAPER_MODELS[name]
+    p = m.init(jax.random.key(0))
+    n = sum(x.size for x in jax.tree_util.tree_leaves(p))
+    assert n == TABLE1_PARAMS[name], f"{name}: {n} != {TABLE1_PARAMS[name]}"
+
+
+@pytest.mark.parametrize("name", list(PAPER_MODELS))
+def test_forward_shapes(name):
+    m = PAPER_MODELS[name]
+    p = m.init(jax.random.key(0))
+    x = jax.random.normal(jax.random.key(1), (4, *m.input_shape))
+    logits = m.apply(p, x)
+    assert logits.shape == (4, 10)
+    assert bool(jnp.all(jnp.isfinite(logits)))

@@ -1,0 +1,65 @@
+"""Eq. 1 (hierarchical) + Eq. 2 (time-varying) schedule properties."""
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.schedules import layer_rates, leaf_ks, round_rate
+from repro.core.types import THGSConfig, quantize_k
+
+
+@given(s0=st.floats(0.001, 1.0), alpha=st.floats(0.1, 1.0),
+       n=st.integers(1, 64))
+@settings(max_examples=50, deadline=None)
+def test_layer_rates_monotone_and_bounded(s0, alpha, n):
+    s_min = s0 / 100
+    cfg = THGSConfig(s0=s0, alpha=alpha, s_min=s_min)
+    rates = layer_rates(cfg, n)
+    assert len(rates) == n
+    assert rates[0] == pytest.approx(s0)
+    for a, b in zip(rates, rates[1:]):
+        assert b <= a + 1e-12          # non-increasing (alpha <= 1)
+        assert b >= s_min - 1e-12      # floored at s_min
+
+
+def test_layer_rates_hits_floor():
+    cfg = THGSConfig(s0=0.1, alpha=0.5, s_min=0.04)
+    assert layer_rates(cfg, 4) == [0.1, 0.05, 0.04, 0.04]
+
+
+@given(t=st.integers(0, 100), loss_prev=st.floats(0.1, 10),
+       loss_curr=st.floats(0.1, 10))
+@settings(max_examples=50, deadline=None)
+def test_round_rate_clamped(t, loss_prev, loss_curr):
+    cfg = THGSConfig(s0=0.1, alpha=0.9, s_min=0.01, alpha_t=0.8, r_min=0.001)
+    r = round_rate(cfg, 0.1, t, 100, loss_prev, loss_curr)
+    assert cfg.r_min <= r <= 1.0
+
+
+def test_round_rate_decays_with_t():
+    cfg = THGSConfig(s0=0.1, alpha=0.9, s_min=0.01, alpha_t=0.8, r_min=0.0001)
+    r_early = round_rate(cfg, 0.1, 0, 100, 1.0, 1.0)
+    r_late = round_rate(cfg, 0.1, 99, 100, 1.0, 1.0)
+    assert r_late < r_early
+
+
+def test_loss_improvement_raises_rate():
+    # beta = (loss_prev - loss_curr)/loss_curr > 0 when improving (paper Alg. 2)
+    cfg = THGSConfig(alpha_t=0.5)
+    improving = round_rate(cfg, 0.1, 0, 100, 2.0, 1.0)
+    flat = round_rate(cfg, 0.1, 0, 100, 1.0, 1.0)
+    assert improving > flat
+
+
+@given(k=st.integers(1, 10**6), size=st.integers(1, 10**7))
+@settings(max_examples=100, deadline=None)
+def test_quantize_k_bounds(k, size):
+    k = min(k, size)
+    kq = quantize_k(k, size, 16)
+    assert 1 <= kq <= size
+
+
+def test_leaf_ks_static_ints():
+    cfg = THGSConfig(s0=0.1, alpha=0.8, s_min=0.01)
+    ks = leaf_ks(cfg, [100, 10_000, 1_000_000])
+    assert all(isinstance(k, int) and k >= 1 for k in ks)

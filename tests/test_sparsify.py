@@ -1,0 +1,78 @@
+"""THGS sparsifier invariants (paper Alg. 1)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.sparsify import (densify, first_occurrence_mask, member_of,
+                                 sparsify_leaf)
+from repro.core.types import THGSConfig
+
+CFG = THGSConfig(s0=0.1, alpha=0.9, s_min=0.01)
+
+
+@given(n=st.integers(4, 500), k=st.integers(1, 50), seed=st.integers(0, 2**20))
+@settings(max_examples=40, deadline=None)
+def test_conservation(n, k, seed):
+    """sparse + residual == residual_in + grad (error feedback loses nothing)."""
+    k = min(k, n)
+    key = jax.random.key(seed)
+    g = jax.random.normal(key, (n,))
+    r = jax.random.normal(jax.random.fold_in(key, 1), (n,)) * 0.3
+    out = sparsify_leaf(g, r, k, CFG)
+    dense = densify(out.stream, n)
+    np.testing.assert_allclose(np.asarray(dense + out.residual),
+                               np.asarray(g + r), rtol=1e-5, atol=1e-5)
+
+
+@given(n=st.integers(4, 500), k=st.integers(1, 50), seed=st.integers(0, 2**20))
+@settings(max_examples=40, deadline=None)
+def test_topk_selects_largest(n, k, seed):
+    k = min(k, n)
+    g = jax.random.normal(jax.random.key(seed), (n,))
+    out = sparsify_leaf(g, jnp.zeros_like(g), k, CFG)
+    sent = np.sort(np.abs(np.asarray(out.stream.values)))
+    kept = np.sort(np.abs(np.asarray(out.residual)))[::-1]
+    # smallest transmitted magnitude >= largest residual magnitude
+    assert sent[0] >= kept[0] - 1e-6
+
+
+def test_residual_accumulates_over_rounds():
+    g = jnp.array([10.0, 0.1, 0.1, 0.1])
+    r = jnp.zeros(4)
+    for _ in range(3):
+        out = sparsify_leaf(g, r, 1, CFG)
+        r = out.residual
+    # the small coordinates accumulated 3 rounds of 0.1
+    np.testing.assert_allclose(np.asarray(r[1:]), 0.3, rtol=1e-5)
+
+
+@given(seed=st.integers(0, 2**20), n=st.integers(2, 200), dup=st.integers(1, 5))
+@settings(max_examples=30, deadline=None)
+def test_first_occurrence(seed, n, dup):
+    rs = np.random.RandomState(seed)
+    idx = jnp.asarray(rs.randint(0, n, size=n * dup), jnp.int32)
+    first = np.asarray(first_occurrence_mask(idx))
+    seen = set()
+    for i, v in enumerate(np.asarray(idx)):
+        assert first[i] == (v not in seen)
+        seen.add(int(v))
+
+
+def test_member_of():
+    table = jnp.array([5, 1, 9, 1], jnp.int32)
+    q = jnp.array([1, 2, 9, 0], jnp.int32)
+    assert list(np.asarray(member_of(q, table))) == [True, False, True, False]
+
+
+def test_sampled_selector_close_to_exact():
+    cfg = THGSConfig(s0=0.1, alpha=0.9, s_min=0.01, selector="sampled",
+                     sample_frac=0.2)
+    g = jax.random.normal(jax.random.key(0), (10_000,))
+    out = sparsify_leaf(g, jnp.zeros_like(g), 100, cfg)
+    exact = jnp.sort(jnp.abs(g))[-100:]
+    got = jnp.sort(jnp.abs(out.stream.values))
+    # sampled threshold keeps at least the top half of the true top-k
+    overlap = np.intersect1d(np.asarray(exact), np.asarray(got)).size
+    assert overlap >= 50
