@@ -14,11 +14,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
-                    help="comma-separated subset: table1,table2,fig1,fig3,roofline")
+                    help="comma-separated subset: "
+                         "table1,table2,fig1,fig3,roofline,agg")
     args = ap.parse_args()
 
-    from benchmarks import (fig1_sparsity_accuracy, fig3_thgs_vs_flat,
-                            roofline, table1_model_sizes, table2_comm_cost)
+    from benchmarks import (bench_agg, fig1_sparsity_accuracy,
+                            fig3_thgs_vs_flat, roofline, table1_model_sizes,
+                            table2_comm_cost)
 
     suites = {
         "table1": table1_model_sizes.run,
@@ -26,6 +28,7 @@ def main() -> None:
         "fig1": fig1_sparsity_accuracy.run,
         "fig3": fig3_thgs_vs_flat.run,
         "roofline": roofline.run,
+        "agg": bench_agg.run,
     }
     chosen = (args.only.split(",") if args.only else list(suites))
 

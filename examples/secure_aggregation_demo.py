@@ -1,10 +1,13 @@
 """Secure-aggregation walkthrough: what the server sees, and why masks cancel.
 
-Reproduces the paper's §4 safety analysis empirically: two banks exchange
-sparsified, masked model updates; the demo shows (1) the server's view of each
-individual update is masked at the mask-support positions, (2) the aggregate is
-exact, (3) the dense Bonawitz baseline costs the full vector while the sparse
-scheme moves only top-k ∪ mask-support.
+Reproduces the paper's §4 safety analysis empirically on the batched stream
+engine (core/streams.py): two banks' sparsified, masked model updates are
+encoded in ONE vmapped program and decoded with ONE fused scatter-add; the
+demo shows (1) the server's view of each individual update is masked at the
+mask-support positions, (2) the aggregate is exact, (3) when a third bank
+drops mid-round the server reconstructs and cancels the survivors' unpaired
+masks (Bonawitz recovery), and (4) the dense Bonawitz baseline costs the full
+vector while the sparse scheme moves only top-k ∪ mask-support.
 
 Run:  PYTHONPATH=src python examples/secure_aggregation_demo.py
 """
@@ -12,53 +15,73 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import streams
 from repro.core.costs import PAPER_BITS
-from repro.core.masks import client_masks, dh_agree
-from repro.core.secure_agg import aggregate_streams, encode_update
-from repro.core.types import SecureAggConfig, THGSConfig, tree_zeros_like
-
+from repro.core.masks import dh_agree
+from repro.core.types import SecureAggConfig
 
 def main():
     n = 4096
-    thgs = THGSConfig(s0=0.02, alpha=1.0, s_min=0.02, time_varying=False)
+    k = int(n * 0.02)
     sa = SecureAggConfig(mask_ratio=0.02, seed=2024)
-    banks = [0, 1]
+    banks = [0, 1, 2]
+    C = len(banks)
+    k_mask = sa.k_mask_for(n, C)
 
     print("1. DH agreement (control plane, once per federation):")
     print(f"   bank0<->bank1 shared secret: {dh_agree(sa.seed, 0, 1):#x} "
           f"(== {dh_agree(sa.seed, 1, 0):#x} from the other side)\n")
 
     key = jax.random.key(7)
-    grads = {b: {"w": jax.random.normal(jax.random.fold_in(key, b), (n,))}
-             for b in banks}
-    streams, resids = {}, {}
-    for b in banks:
-        streams[b], resids[b] = encode_update(
-            grads[b], tree_zeros_like(grads[b]), [int(n * 0.02)], thgs, sa,
-            client=b, participants=banks, round_t=0)
+    grads = jnp.stack([jax.random.normal(jax.random.fold_in(key, b), (n,))
+                       for b in banks])
+    residuals = jnp.zeros_like(grads)
+    pair_keys, pair_signs = streams.pair_key_matrix(sa, banks, round_t=0)
 
-    s0 = streams[0][0]
+    # one jitted program encodes every bank: top-k ∪ mask-support streams
+    st, new_res = streams.encode_leaf_batch(
+        grads, residuals, k=k, nb=1, m=n, size=n,
+        pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
+        mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+
     print("2. what the SERVER sees from bank0 (one leaf):")
-    print(f"   {s0.k} slots of {n} ({s0.k/n:.1%}); "
-          f"first 5 values: {np.asarray(s0.values[:5]).round(3)}")
-    k_mask = sa.k_mask_for(n, 2)
-    mask = client_masks(sa, 0, banks, 0, 0, n, k_mask)
-    raw = np.asarray(grads[0]["w"])[np.asarray(s0.indices)]
-    sent = np.asarray(s0.values)
+    idx0 = np.asarray(st.indices[0, 0])
+    sent = np.asarray(st.values[0, 0])
+    print(f"   {idx0.shape[0]} slots of {n} ({idx0.shape[0]/n:.1%}); "
+          f"first 5 values: {sent[:5].round(3)}")
+    raw = np.asarray(grads[0])[idx0]
     masked_slots = int((np.abs(sent - raw) > 1e-6).sum())
     print(f"   {masked_slots} slots differ from the raw gradient "
-          f"(mask-protected); {s0.k - masked_slots} top-k slots are clear "
-          f"(paper §4 case 1 — sparsity itself is the cover)\n")
+          f"(mask-protected); {idx0.shape[0] - masked_slots} top-k slots are "
+          f"clear (paper §4 case 1 — sparsity itself is the cover)\n")
 
-    agg = aggregate_streams([streams[0], streams[1]], [(n,)], [jnp.float32])
-    expected = sum(
-        (grads[b]["w"] - resids[b]["w"]) / 2 for b in banks)
-    err = float(jnp.max(jnp.abs(agg[0] - expected)))
-    print(f"3. aggregate exactness: max |masked_sum - true_sparse_mean| = {err:.2e}")
+    # one fused scatter-add decodes the whole round; masks cancel exactly
+    dense = streams.decode_leaf_batch(st, nb=1, m=n, size=n)
+    expected = (grads - new_res).sum(0)
+    err = float(jnp.max(jnp.abs(dense - expected)))
+    print(f"3. aggregate exactness: max |masked_sum - true_sparse_sum| = {err:.2e}")
 
-    sparse_bits = 2 * PAPER_BITS.sparse_bits(s0.k)
+    # bank2 drops after mask agreement: the server regenerates the survivors'
+    # pair masks toward it and subtracts them (Bonawitz dropout recovery)
+    alive = jnp.array([True, True, False])
+    dense_drop = streams.decode_leaf_batch(
+        st, nb=1, m=n, size=n, alive=alive,
+        pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
+        mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    expected_drop = ((grads - new_res) * alive[:, None]).sum(0)
+    err_drop = float(jnp.max(jnp.abs(dense_drop - expected_drop)))
+    no_recovery = float(jnp.max(jnp.abs(
+        streams.decode_leaf_batch(st, nb=1, m=n, size=n, alive=alive)
+        - expected_drop)))
+    print(f"4. bank2 drops: survivor sum error {no_recovery:.2f} without "
+          f"recovery -> {err_drop:.2e} with reconstructed-mask cancellation")
+
+    # wire payload: the gated self-pair slot (zero value, duplicated index)
+    # is not transmitted -> k + (C-1)*k_mask slots per client (Eq. 6)
+    k_wire = st.k_total - k_mask
+    sparse_bits = 2 * PAPER_BITS.sparse_bits(k_wire)
     dense_bits = 2 * PAPER_BITS.dense_bits(n)
-    print(f"\n4. communication: sparse+masked = {sparse_bits/8:.0f} B, "
+    print(f"\n5. communication: sparse+masked = {sparse_bits/8:.0f} B, "
           f"dense Bonawitz = {dense_bits/8:.0f} B "
           f"-> {dense_bits/sparse_bits:.1f}x reduction")
 

@@ -17,8 +17,13 @@ from repro.core.secure_agg import (
     encode_leaf,
     encode_update,
 )
-from repro.core.fedavg import FederatedState, client_update, init_state, run_round
+from repro.core.fedavg import (FederatedState, batched_client_update,
+                               client_update, init_state, run_round)
 from repro.core import costs
+from repro.core import streams
+from repro.core.streams import (StreamBatch, decode_leaf_batch,
+                                dropout_cancel_streams, encode_leaf_batch,
+                                pair_key_matrix)
 from repro.core.blocked import (BlockedStream, decode_blocked_sum,
                                 encode_leaf_blocked,
                                 sharding_aligned_transform)
@@ -29,7 +34,9 @@ __all__ = [
     "densify", "first_occurrence_mask", "member_of", "sparsify_leaf",
     "client_masks", "dh_agree", "pair_mask", "aggregate_streams",
     "dense_masked_update", "encode_leaf", "encode_update",
-    "FederatedState", "client_update", "init_state", "run_round", "costs",
+    "FederatedState", "batched_client_update", "client_update", "init_state",
+    "run_round", "costs", "streams", "StreamBatch", "decode_leaf_batch",
+    "dropout_cancel_streams", "encode_leaf_batch", "pair_key_matrix",
     "BlockedStream", "decode_blocked_sum", "encode_leaf_blocked",
     "sharding_aligned_transform",
 ]

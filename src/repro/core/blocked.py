@@ -1,13 +1,17 @@
-"""Block-local THGS encode for the datacenter mesh (jit-native, static shapes).
+"""Block layouts for the datacenter mesh — views, not encode logic.
 
-The single-host path (core/secure_agg.py) does exact per-leaf top-k; at 10^9+
-parameters sharded over 256 devices a global top-k is a giant sort collective.
-The production path splits each leaf into ``n_blocks`` contiguous blocks
-(aligned with the device layout) and runs the identical encode *per block* —
-the standard distributed adaptation of layer-wise top-k (DGC/STC, DESIGN.md §4).
+The single-host path does exact per-leaf top-k; at 10^9+ parameters sharded
+over 256 devices a global top-k is a giant sort collective. The production
+path splits each leaf into ``n_blocks`` contiguous blocks (aligned with the
+device layout) and runs the identical encode *per block* — the standard
+distributed adaptation of layer-wise top-k (DGC/STC, DESIGN.md §4).
 
-Every helper here is shape-static and differentiation-free; it runs inside the
-pjit/shard_map train step.
+Since the stream-engine refactor (DESIGN.md §3) this module owns only the
+*layout* machinery: ``block_layout`` (generic padded row blocks) and
+``sharding_aligned_transform`` (the zero-communication device-aligned view).
+The encode/decode themselves are thin delegations to the one implementation
+in core/streams.py — ``encode_leaf_blocked``/``decode_blocked_sum`` are kept
+as the sharding-aware entry points the shard_map train step calls.
 """
 from __future__ import annotations
 
@@ -16,29 +20,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import streams as se
+from repro.core.streams import block_layout
+
 
 class BlockedStream(NamedTuple):
     indices: jax.Array   # int32[n_blocks, k_total] — global flat indices
     values: jax.Array    # f32[n_blocks, k_total]
-
-
-def _first_occurrence_rows(idx: jax.Array) -> jax.Array:
-    """Per-row first-occurrence mask for [n_blocks, k] index rows."""
-    order = jnp.argsort(idx, axis=-1)
-    sorted_idx = jnp.take_along_axis(idx, order, -1)
-    is_first = jnp.concatenate(
-        [jnp.ones_like(sorted_idx[:, :1], bool),
-         sorted_idx[:, 1:] != sorted_idx[:, :-1]], -1)
-    out = jnp.zeros_like(is_first)
-    return out.at[jnp.arange(idx.shape[0])[:, None], order].set(is_first)
-
-
-def block_layout(size: int, n_blocks: int) -> tuple[int, int, int]:
-    """(n_blocks, block_len, padded) — small leaves collapse to one block."""
-    if size < 4 * n_blocks:
-        n_blocks = 1
-    m = -(-size // n_blocks)
-    return n_blocks, m, n_blocks * m
 
 
 def sharding_aligned_transform(shape, pspec, axis_sizes: dict,
@@ -113,10 +101,14 @@ def encode_leaf_blocked(
 ) -> tuple[BlockedStream, jax.Array]:
     """Error-feedback accumulate -> block-local top-k (∪ pairwise mask support).
 
-    When mask args are given, pairwise masks are generated counter-based per
-    (unordered pair, leaf, block): peer j in [0, n_peers) != self contributes
-    support indices and signed uniform values exactly as core/masks.py, so the
-    cross-participant sum cancels. Returns (stream, new_residual).
+    Sharding-aware wrapper over the engine's single encode
+    (streams.encode_client_blocks): this function owns the block view and the
+    sharding constraints; the top-k ∪ mask-support unified stream itself lives
+    in core/streams.py. When mask args are given, pairwise masks are generated
+    counter-based per (unordered pair, block): peer j in [0, n_peers) != self
+    contributes support indices and signed uniform values exactly as
+    core/masks.py, so the cross-participant sum cancels.
+    Returns (stream, new_residual).
     """
     size = g.size
     if transform is not None:
@@ -142,45 +134,22 @@ def encode_leaf_blocked(
     if block_sharding is not None and n_blocks > 1 and transform is None:
         blocks = jax.lax.with_sharding_constraint(blocks, block_sharding)
 
-    top_abs, idx_t = jax.lax.top_k(jnp.abs(blocks), k_block)   # [nb, kb]
-
     if mask_key is not None and k_mask_block > 0 and n_peers >= 2:
-        pair_idx_list, pair_val_list = [], []
-        for peer in range(n_peers):
-            # unordered pair id; self==peer contributes zeros (masked out below)
-            lo = jnp.minimum(self_id, peer)
-            hi = jnp.maximum(self_id, peer)
-            pk = jax.random.fold_in(jax.random.fold_in(mask_key, lo), hi)
-            k_i, k_v = jax.random.split(pk)
-            pidx = jax.random.randint(k_i, (n_blocks, k_mask_block), 0, m,
-                                      dtype=jnp.int32)
-            pval = jax.random.uniform(k_v, (n_blocks, k_mask_block),
-                                      minval=mask_lo, maxval=mask_lo + mask_q)
-            sign = jnp.where(self_id < peer, 1.0, -1.0)
-            active = (self_id != peer).astype(jnp.float32)
-            pair_idx_list.append(pidx)
-            pair_val_list.append(sign * active * pval)
-        idx_m = jnp.concatenate(pair_idx_list, -1)
-        val_m = jnp.concatenate(pair_val_list, -1)
-        idx = jnp.concatenate([idx_t, idx_m], -1)
-        mask_vals = jnp.concatenate(
-            [jnp.zeros_like(top_abs), val_m], -1)
+        keys_row, signs_row = se.fold_pair_keys_row(mask_key, self_id, n_peers)
     else:
-        idx = idx_t
-        mask_vals = jnp.zeros_like(top_abs)
+        keys_row = signs_row = None
+        k_mask_block = 0
 
-    first = _first_occurrence_rows(idx)
-    gvals = jnp.take_along_axis(blocks, idx, -1)
-    vals = gvals * first.astype(blocks.dtype) + mask_vals
+    global_idx, vals, new_blocks = se.encode_client_blocks(
+        blocks, k_block,
+        pair_keys_row=keys_row, pair_signs_row=signs_row,
+        k_mask=k_mask_block, mask_p=mask_lo, mask_q=mask_q)
 
-    rows = jnp.arange(n_blocks)[:, None]
-    new_blocks = blocks.at[rows, idx].set(0.0)
     if transform is not None:
         new_resid = from_blocks(new_blocks)
     else:
         new_resid = new_blocks.reshape(-1)[:size].reshape(g.shape)
 
-    global_idx = (rows * m + idx).astype(jnp.int32)
     return BlockedStream(indices=global_idx, values=vals), new_resid.astype(
         residual.dtype)
 
@@ -190,9 +159,10 @@ def decode_blocked_sum(streams_idx: jax.Array, streams_vals: jax.Array,
                        block_sharding=None, transform=None) -> jax.Array:
     """Scatter-add gathered streams [n_fed, nb, k] into a dense flat leaf.
 
-    The dense buffer is kept in its [n_blocks, m] device-aligned layout while
-    scattering (a flat replicated f32 buffer of a multi-GiB leaf per device is
-    what this avoids); the caller reshapes/re-constrains to the leaf layout.
+    The GSPMD-sharded counterpart of streams.decode_sum_blocks: the dense
+    buffer is kept in its [n_blocks, m] device-aligned layout while scattering
+    (a flat replicated f32 buffer of a multi-GiB leaf per device is what this
+    avoids); the caller reshapes/re-constrains to the leaf layout.
     """
     if transform is not None:
         from_blocks, nb, m = transform[1], transform[2], transform[3]

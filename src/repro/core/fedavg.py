@@ -4,19 +4,34 @@ The transmitted "gradient update" of the paper is the local model delta after
 ``local_steps`` of SGD (McMahan et al. 2017); THGS + secure aggregation compress
 that delta. This module is the single-host reference implementation used by the
 paper-scale benchmarks and tests; the datacenter-mesh variant lives in
-repro/launch/train.py and shares the encode/aggregate primitives.
+repro/launch/train.py and shares the encode/aggregate engine (core/streams.py).
+
+Since the stream-engine refactor (DESIGN.md §3) a round is three batched,
+jitted programs instead of a per-client Python loop:
+
+  1. ``batched_client_update`` — local SGD for every participant, vmapped over
+     the stacked client batches (one XLA dispatch per round);
+  2. ``streams.encode_leaf_batch`` per leaf — the unified top-k ∪ mask-support
+     encode for all clients at once (pair keys from the DH-agreed secrets);
+  3. ``streams.decode_leaf_batch`` per leaf — one fused scatter-add over every
+     client's stream, with per-client weights, survivor gating and
+     Bonawitz-style reconstruction of dropped clients' unpaired masks.
+
+Weighted aggregation is client-side (weights scale the gradient values before
+masking, so non-uniform weights keep mask cancellation exact); the server
+normalizes by the survivors' total weight after the masks have cancelled.
 """
 from __future__ import annotations
 
 import dataclasses
 from functools import partial
-from typing import Any, Callable, Sequence
+from typing import Any, Callable, Mapping, Sequence
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import costs, schedules
-from repro.core.secure_agg import aggregate_streams, encode_update
+from repro.core import streams as se
 from repro.core.types import (
     CommRecord,
     FedConfig,
@@ -29,8 +44,7 @@ from repro.core.types import (
 LossFn = Callable[[PyTree, Any], jax.Array]
 
 
-@partial(jax.jit, static_argnames=("loss_fn", "local_steps", "prox_mu"))
-def client_update(
+def _client_update(
     params: PyTree,
     batches: Any,  # stacked leading axis = local_steps
     loss_fn: LossFn,
@@ -66,6 +80,36 @@ def client_update(
     return delta, jnp.mean(losses)
 
 
+@partial(jax.jit, static_argnames=("loss_fn", "local_steps", "prox_mu"))
+def client_update(
+    params: PyTree,
+    batches: Any,
+    loss_fn: LossFn,
+    local_steps: int,
+    lr: float,
+    prox_mu: float = 0.0,
+) -> tuple[PyTree, jax.Array]:
+    """Single-client entry (kept for callers that step one client at a time)."""
+    return _client_update(params, batches, loss_fn, local_steps, lr, prox_mu)
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "local_steps", "prox_mu"))
+def batched_client_update(
+    params: PyTree,
+    batches_stacked: Any,   # leading axis = clients, then local_steps
+    loss_fn: LossFn,
+    local_steps: int,
+    lr: float,
+    prox_mu: float = 0.0,
+) -> tuple[PyTree, jax.Array]:
+    """All participants' local SGD in one vmapped program.
+
+    Returns (deltas stacked [C, ...], losses [C])."""
+    return jax.vmap(
+        lambda b: _client_update(params, b, loss_fn, local_steps, lr, prox_mu)
+    )(batches_stacked)
+
+
 @dataclasses.dataclass
 class FederatedState:
     params: PyTree
@@ -83,6 +127,11 @@ def init_state(params: PyTree, fed: FedConfig) -> FederatedState:
     )
 
 
+def _mean_or_none(vals):
+    vals = [v for v in vals if v is not None]
+    return float(sum(vals) / len(vals)) if vals else None
+
+
 def run_round(
     state: FederatedState,
     client_batches: dict[int, Any],
@@ -91,75 +140,144 @@ def run_round(
     thgs: THGSConfig | None,
     sa: SecureAggConfig,
     bits: costs.BitModel = costs.PAPER_BITS,
+    client_weights: Mapping[int, float] | None = None,
+    dropped: Sequence[int] = (),
 ) -> FederatedState:
     """One aggregation round over the provided participating clients.
 
     thgs=None -> dense FedAvg/FedProx baseline (optionally dense-masked SA).
+    ``client_weights`` gives per-client aggregation weights (e.g. local data
+    counts); unweighted clients default to 1. ``dropped`` lists participants
+    that completed the mask agreement but whose upload never arrived — their
+    streams are excluded and the survivors' unpaired masks toward them are
+    reconstructed and cancelled server-side (Bonawitz dropout recovery).
+
+    All participants' batch pytrees must share one structure and one set of
+    array shapes (they are stacked on a leading client axis for the batched
+    local-SGD program); pad ragged local data to fixed [steps, batch] first,
+    as data/federated.py::client_batches does.
     """
     participants = sorted(client_batches.keys())
-    leaves = jax.tree_util.tree_leaves(state.params)
+    C = len(participants)
+    dropped = set(dropped)
+    assert dropped <= set(participants), "dropped must be participants"
+    survivors = [c for c in participants if c not in dropped]
+    assert survivors, "a round needs at least one surviving client"
+    alive = jnp.asarray([c not in dropped for c in participants], bool)
+    w_list = [float(client_weights.get(c, 1.0)) if client_weights else 1.0
+              for c in participants]
+    w_vec = jnp.asarray(w_list, jnp.float32)
+    w_surv_total = sum(w for w, c in zip(w_list, participants)
+                       if c not in dropped)
+
+    leaves, treedef = jax.tree_util.tree_flatten(state.params)
     leaf_shapes = [x.shape for x in leaves]
     leaf_dtypes = [x.dtype for x in leaves]
     model_size = sum(x.size for x in leaves)
 
-    deltas, streams_all = {}, {}
-    for c in participants:
-        delta, loss = client_update(
-            state.params,
-            client_batches[c],
-            loss_fn,
-            fed.local_steps,
-            fed.local_lr,
-            fed.prox_mu if fed.algorithm == "fedprox" else 0.0,
-        )
-        loss = float(loss)
-        if thgs is not None:
-            ks = schedules.leaf_ks(
-                thgs,
-                [x.size for x in leaves],
-                t=state.round,
-                total_rounds=fed.rounds,
-                loss_prev=state.losses.get(c),
-                loss_curr=loss,
-            )
-            streams, new_res = encode_update(
-                delta, state.residuals[c], ks, thgs, sa,
-                client=c, participants=participants, round_t=state.round,
-            )
-            streams_all[c] = streams
-            state.residuals[c] = new_res
-        else:
-            deltas[c] = delta
-        state.losses[c] = loss
+    # ---- 1. all clients' local SGD, one vmapped dispatch ----
+    batches_stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[client_batches[c] for c in participants])
+    deltas_stacked, losses = batched_client_update(
+        state.params,
+        batches_stacked,
+        loss_fn,
+        fed.local_steps,
+        fed.local_lr,
+        fed.prox_mu if fed.algorithm == "fedprox" else 0.0,
+    )
+    losses_list = [float(x) for x in losses]
 
     if thgs is not None:
-        agg_leaves = aggregate_streams(
-            [streams_all[c] for c in participants], leaf_shapes, leaf_dtypes
+        # Eq. 2's beta from the federation-mean loss trajectory: one static
+        # per-leaf k for the whole batched round (per-client k would make the
+        # stacked stream shapes ragged — see DESIGN.md §3).
+        loss_prev = _mean_or_none([state.losses.get(c) for c in participants])
+        loss_curr = _mean_or_none(losses_list)
+        ks = schedules.leaf_ks(
+            thgs,
+            [x.size for x in leaves],
+            t=state.round,
+            total_rounds=fed.rounds,
+            loss_prev=loss_prev,
+            loss_curr=loss_curr,
         )
-        agg = jax.tree_util.tree_unflatten(
-            jax.tree_util.tree_structure(state.params), agg_leaves
-        )
-        ks_acct = [s.k for s in streams_all[participants[0]]]
+        use_masks = sa.enabled and C >= 2
+        if use_masks:
+            pair_keys, pair_signs = se.pair_key_matrix(
+                sa, participants, state.round)
+        else:
+            pair_keys = pair_signs = None
+
+        delta_leaves = jax.tree_util.tree_leaves(deltas_stacked)
+        res_per_client = [jax.tree_util.tree_leaves(state.residuals[c])
+                          for c in participants]
+        res_stacked = [jnp.stack([rl[i] for rl in res_per_client])
+                       for i in range(len(leaves))]
+
+        agg_leaves, new_res_leaves, ks_acct = [], [], []
+        for leaf_id, (d_st, r_st, k, shape) in enumerate(
+                zip(delta_leaves, res_stacked, ks, leaf_shapes)):
+            size = leaves[leaf_id].size
+            k_mask = sa.k_mask_for(size, C) if use_masks else 0
+            # ---- 2. batched unified-stream encode (all clients, one jit) ----
+            streams_b, new_res = se.encode_leaf_batch(
+                d_st, r_st, k=k, nb=1, m=size, size=size,
+                selector=thgs.selector, sample_frac=thgs.sample_frac,
+                pair_keys=pair_keys, pair_signs=pair_signs,
+                k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
+                leaf_id=leaf_id, weights=w_vec)
+            # ---- 3. fused scatter-add decode + dropout recovery ----
+            dense = se.decode_leaf_batch(
+                streams_b, nb=1, m=size, size=size,
+                alive=alive if dropped else None,
+                pair_keys=pair_keys if dropped else None,
+                pair_signs=pair_signs if dropped else None,
+                k_mask=k_mask, mask_p=sa.p, mask_q=sa.q, leaf_id=leaf_id)
+            agg_leaves.append(
+                (dense / w_surv_total).reshape(shape)
+                .astype(leaf_dtypes[leaf_id]))
+            # dropped clients transmitted nothing: their full accumulator
+            # carries over as error feedback (nothing is lost, only delayed)
+            if dropped:
+                keep = alive.reshape((C,) + (1,) * len(shape))
+                new_res = jnp.where(
+                    keep, new_res,
+                    (r_st + d_st).astype(new_res.dtype))
+            new_res_leaves.append(new_res)
+            # wire accounting: the gated self-pair slot (zero value at a
+            # duplicated index) is not transmitted — k + (C-1)*k_mask slots,
+            # matching the paper's Eq. 6 payload
+            ks_acct.append(streams_b.k_total - (k_mask if use_masks else 0))
+
+        agg = jax.tree_util.tree_unflatten(treedef, agg_leaves)
+        for ci, c in enumerate(participants):
+            state.residuals[c] = jax.tree_util.tree_unflatten(
+                treedef, [nr[ci] for nr in new_res_leaves])
         rec = CommRecord(
             round=state.round,
-            upload_bits=len(participants) * bits.sparse_bits(sum(ks_acct)),
+            upload_bits=len(survivors) * bits.sparse_bits(sum(ks_acct)),
             download_bits=len(participants) * bits.dense_bits(model_size),
             dense_upload_bits=len(participants) * bits.dense_bits(model_size),
             n_clients=len(participants),
         )
     else:
+        deltas = {c: jax.tree_util.tree_map(lambda x: x[ci], deltas_stacked)
+                  for ci, c in enumerate(participants)}
         if sa.enabled:
             from repro.core.secure_agg import dense_masked_update
 
+            # dense Bonawitz has no sparse-support reconstruction: masks are
+            # agreed among the survivors (the baseline's re-run assumption)
             masked = []
-            for c in participants:
+            for c in survivors:
                 leaves_c = jax.tree_util.tree_leaves(deltas[c])
                 masked.append([
-                    dense_masked_update(x, sa, c, participants, state.round, i)
+                    dense_masked_update(x, sa, c, survivors, state.round, i)
                     for i, x in enumerate(leaves_c)
                 ])
             summed = [
-                sum(m[i] for m in masked) / len(participants)
+                sum(m[i] for m in masked) / len(survivors)
                 for i in range(len(leaves))
             ]
             agg = jax.tree_util.tree_unflatten(
@@ -168,16 +286,18 @@ def run_round(
             )
         else:
             agg = jax.tree_util.tree_map(
-                lambda *xs: sum(xs) / len(xs), *[deltas[c] for c in participants]
+                lambda *xs: sum(xs) / len(xs), *[deltas[c] for c in survivors]
             )
         rec = CommRecord(
             round=state.round,
-            upload_bits=len(participants) * bits.dense_bits(model_size),
+            upload_bits=len(survivors) * bits.dense_bits(model_size),
             download_bits=len(participants) * bits.dense_bits(model_size),
             dense_upload_bits=len(participants) * bits.dense_bits(model_size),
             n_clients=len(participants),
         )
 
+    for ci, c in enumerate(participants):
+        state.losses[c] = losses_list[ci]
     state.params = jax.tree_util.tree_map(
         lambda p, d: p + fed.server_lr * d, state.params, agg
     )

@@ -13,6 +13,11 @@ Scatter-adding every client's (idx, vals) on the server reproduces
 appears in several slots is counted once (first-occurrence gate), and the pairwise
 mask values cancel because both endpoints of each pair transmit the same support
 (see core/masks.py). This is the property tests/test_secure_agg.py verifies.
+
+This module is the *protocol-reference, single-client* API. The encode/decode
+implementation lives in the unified stream engine (core/streams.py, DESIGN.md
+§3), which also provides the batched/jitted entries the server loop
+(core/fedavg.py) and the datacenter steps (launch/train.py) use.
 """
 from __future__ import annotations
 
@@ -21,8 +26,8 @@ from typing import NamedTuple, Sequence
 import jax
 import jax.numpy as jnp
 
+from repro.core import streams as se
 from repro.core.masks import PairMask, client_masks
-from repro.core.sparsify import first_occurrence_mask
 from repro.core.types import SecureAggConfig, SparseStream, THGSConfig
 
 
@@ -38,35 +43,28 @@ def encode_leaf(
     thgs: THGSConfig,
     mask: PairMask | None,
 ) -> EncodedLeaf:
-    """Error-feedback accumulate -> top-k ∪ mask support -> unified stream."""
+    """Error-feedback accumulate -> top-k ∪ mask support -> unified stream.
+
+    Protocol-reference single-client entry: the mask support arrives as an
+    explicit ``PairMask`` (host-derived via masks.client_masks / dh_agree);
+    the encode itself is the engine's single implementation
+    (streams.unified_stream_rows) on the 1-block view.
+    """
     acc = (residual + grad).astype(jnp.float32)
-    flat = acc.reshape(-1)
-    n = flat.shape[0]
+    flat = acc.reshape(-1)[None, :]          # [nb=1, m=size] block view
+    n = flat.shape[1]
     k = int(min(k, n))
-    abs_flat = jnp.abs(flat)
-    if thgs.selector == "sampled":
-        from repro.core.sparsify import _sampled_topk
-
-        _, idx_t = _sampled_topk(abs_flat, k, thgs.sample_frac)
-    else:
-        _, idx_t = jax.lax.top_k(abs_flat, k)
-    idx_t = idx_t.astype(jnp.int32)
-
     if mask is not None and mask.indices.shape[0] > 0:
-        idx = jnp.concatenate([idx_t, mask.indices])
-        mask_vals = jnp.concatenate(
-            [jnp.zeros((k,), jnp.float32), mask.values]
-        )
+        m_idx = mask.indices[None, :]
+        m_vals = mask.values[None, :]
     else:
-        idx = idx_t
-        mask_vals = jnp.zeros((k,), jnp.float32)
-
-    first = first_occurrence_mask(idx)
-    vals = flat[idx] * first.astype(flat.dtype) + mask_vals
-    new_resid = flat.at[idx].set(0.0).reshape(acc.shape)
+        m_idx = m_vals = None
+    idx, vals, new_acc = se.unified_stream_rows(
+        flat, k, m_idx, m_vals, selector=thgs.selector,
+        sample_frac=thgs.sample_frac)
     return EncodedLeaf(
-        stream=SparseStream(indices=idx, values=vals),
-        residual=new_resid.astype(residual.dtype),
+        stream=SparseStream(indices=idx[0], values=vals[0]),
+        residual=new_acc[0].reshape(acc.shape).astype(residual.dtype),
     )
 
 
@@ -105,23 +103,37 @@ def aggregate_streams(
     leaf_dtypes: Sequence,
     weights: Sequence[float] | None = None,
 ) -> list[jax.Array]:
-    """Server-side decode+sum: scatter-add every client's stream per leaf.
+    """Server-side decode+sum: one fused scatter-add over all clients per leaf.
 
     Pairwise masks cancel in the sum; the result equals
-    ``sum_c w_c * (acc_c ⊙ mask_t_c)`` reshaped to the leaf shapes.
+    ``sum_c w_c * (acc_c ⊙ mask_t_c)`` reshaped to the leaf shapes. Ragged
+    per-client stream lengths are zero-padded (index 0, value 0 — a no-op
+    under scatter-add) so the whole round decodes through the engine's single
+    fused pass (streams.decode_sum_blocks). NOTE: ``weights`` here are applied
+    server-side to the full values (masks included) — exact only when uniform;
+    heterogeneous weighting belongs client-side in the encode (see
+    core/streams.py).
     """
     n_clients = len(client_streams)
     if weights is None:
         weights = [1.0 / n_clients] * n_clients
+    w = jnp.asarray(weights, jnp.float32)
     out = []
     for leaf_id, shape in enumerate(leaf_shapes):
         size = 1
         for d in shape:
             size *= d
-        dense = jnp.zeros((size,), jnp.float32)
-        for c in range(n_clients):
-            s = client_streams[c][leaf_id]
-            dense = dense.at[s.indices].add(weights[c] * s.values)
+        k_max = max(client_streams[c][leaf_id].k for c in range(n_clients))
+        idx = jnp.stack([
+            jnp.pad(client_streams[c][leaf_id].indices,
+                    (0, k_max - client_streams[c][leaf_id].k))
+            for c in range(n_clients)])[:, None, :]
+        vals = jnp.stack([
+            jnp.pad(client_streams[c][leaf_id].values.astype(jnp.float32),
+                    (0, k_max - client_streams[c][leaf_id].k))
+            for c in range(n_clients)])[:, None, :]
+        dense = se.decode_sum_blocks(
+            se.StreamBatch(indices=idx, values=vals), 1, size, weights=w)
         out.append(dense.reshape(shape).astype(leaf_dtypes[leaf_id]))
     return out
 

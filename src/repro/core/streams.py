@@ -1,0 +1,478 @@
+"""The unified sparse-stream engine (paper Alg. 1/2, Eq. 5) — batched + jitted.
+
+This module is the ONE implementation of the THGS ``top-k ∪ mask-support``
+unified-stream encode and of the server-side scatter-add decode (DESIGN.md §3).
+Every consumer — the single-host server (core/fedavg.py via core/secure_agg.py),
+both datacenter step builders (launch/train.py), the blocked helpers
+(core/blocked.py) and the examples — delegates here.
+
+Data model
+----------
+A *stream* for one leaf is a static-shape pair ``(indices, values)``:
+
+    indices : int32[..., n_blocks, k_total]   global indices row*m + col into the
+                                              padded [n_blocks, m] block view
+    values  : f32  [..., n_blocks, k_total]   w·acc[idx]·first_occurrence + mask
+
+with a leading client axis when batched. ``n_blocks == 1, m == size`` recovers
+the flat per-leaf stream of the paper's single-host protocol; ``n_blocks > 1``
+is the device-aligned blocked layout of the datacenter path (core/blocked.py).
+
+Encode is ``vmap``'d over the client axis and ``jit``'d end-to-end: one XLA
+program encodes *all* clients of a round, replacing the per-client Python loop
+of the seed implementation. Decode flattens every client's (weighted, liveness-
+gated) stream into one index/value vector and scatter-adds it in a single pass
+over the dense buffer — on TPU through the fused Pallas kernel
+(kernels/stream_decode.py), elsewhere through XLA's native scatter.
+
+Secure-aggregation semantics
+----------------------------
+Pairwise masks follow core/masks.py exactly (same PRNG draws for n_blocks == 1:
+jax.random draws are reshape-invariant, so ``pairwise_mask_rows`` with the
+dh_agree-derived pair key reproduces ``masks.pair_mask`` bit for bit). Client
+weights are applied to the *gradient* part of the values only — client-side,
+before masking — so non-uniform weighted aggregation keeps mask cancellation
+exact (server-side weighting would scale each endpoint's mask differently).
+Dropout recovery is Bonawitz-style: the server regenerates every
+survivor→dropped pair mask from the pair keys and subtracts it
+(``dropout_cancel_streams``), so the aggregate over survivors equals the
+unmasked weighted sparse sum.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+class StreamBatch(NamedTuple):
+    """Stacked unified streams: leading axis = clients (absent when single)."""
+
+    indices: jax.Array  # int32[..., n_blocks, k_total]
+    values: jax.Array   # f32  [..., n_blocks, k_total]
+
+    @property
+    def k_total(self) -> int:
+        return self.indices.shape[-1]
+
+
+# --------------------------------------------------------------------- layout
+def block_layout(size: int, n_blocks: int) -> tuple[int, int, int]:
+    """(n_blocks, block_len, padded) — small leaves collapse to one block."""
+    if size < 4 * n_blocks:
+        n_blocks = 1
+    m = -(-size // n_blocks)
+    return n_blocks, m, n_blocks * m
+
+
+def to_blocks(x: jax.Array, n_blocks: int, m: int) -> jax.Array:
+    """Flat/leaf tensor -> padded [n_blocks, m] row-major block view."""
+    flat = x.reshape(-1)
+    pad = n_blocks * m - flat.shape[0]
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+    return flat.reshape(n_blocks, m)
+
+
+def from_blocks(blocks: jax.Array, size: int, shape: tuple) -> jax.Array:
+    return blocks.reshape(-1)[:size].reshape(shape)
+
+
+# ------------------------------------------------------- first-occurrence gate
+def first_occurrence_rows(idx: jax.Array) -> jax.Array:
+    """Per-row boolean: True iff the slot is the first occurrence of its index.
+
+    Sort-based O(k log k) per row; duplicates of an index occupy consecutive
+    ranks after sorting, so a slot is first iff its sorted predecessor differs.
+    """
+    order = jnp.argsort(idx, axis=-1)
+    sorted_idx = jnp.take_along_axis(idx, order, -1)
+    is_first = jnp.concatenate(
+        [jnp.ones_like(sorted_idx[..., :1], bool),
+         sorted_idx[..., 1:] != sorted_idx[..., :-1]], -1)
+    out = jnp.zeros_like(is_first)
+    rows = jnp.arange(idx.shape[0])[:, None]
+    return out.at[rows, order].set(is_first)
+
+
+# ------------------------------------------------------------- selector stage
+def select_topk_rows(acc: jax.Array, k: int, selector: str,
+                     sample_frac: float) -> jax.Array:
+    """[n_blocks, m] -> int32[n_blocks, k] per-row top-|.| indices."""
+    abs_acc = jnp.abs(acc)
+    if selector == "sampled":
+        from repro.core.sparsify import _sampled_topk
+
+        _, idx = jax.vmap(lambda r: _sampled_topk(r, k, sample_frac))(abs_acc)
+    else:  # 'exact' and 'local' (the caller pre-blocks for 'local')
+        _, idx = jax.lax.top_k(abs_acc, k)
+    return idx.astype(jnp.int32)
+
+
+# ----------------------------------------------------- THE unified-stream core
+def unified_stream_rows(
+    acc: jax.Array,            # f32[n_blocks, m] error-feedback accumulator
+    k: int,
+    mask_idx: jax.Array | None,    # int32[n_blocks, k_mask_total] | None
+    mask_vals: jax.Array | None,   # f32  [n_blocks, k_mask_total] | None
+    *,
+    selector: str = "exact",
+    sample_frac: float = 0.01,
+    weight: jax.Array | float = 1.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One client, one leaf: ``top-k(|acc|) ∪ support(mask)`` unified stream.
+
+    This is the single implementation of the paper's Eq. 5 encode (Alg. 2
+    lines 10-17). Returns ``(idx, vals, new_acc)`` where ``idx`` is the local
+    per-row column index, ``vals = weight·acc[idx]·first_occurrence + mask``
+    (duplicate indices transmit the gradient once; mask values ride in their
+    dedicated slots), and ``new_acc`` zeroes every transmitted position —
+    including mask-support positions below the top-k threshold.
+    """
+    nb, m = acc.shape
+    k = int(min(k, m))
+    idx_t = select_topk_rows(acc, k, selector, sample_frac)
+    if mask_idx is not None and mask_idx.shape[-1] > 0:
+        idx = jnp.concatenate([idx_t, mask_idx], -1)
+        mvals = jnp.concatenate(
+            [jnp.zeros((nb, k), jnp.float32), mask_vals], -1)
+    else:
+        idx = idx_t
+        mvals = jnp.zeros((nb, k), jnp.float32)
+
+    first = first_occurrence_rows(idx)
+    gvals = jnp.take_along_axis(acc, idx, -1)
+    vals = weight * gvals * first.astype(acc.dtype) + mvals
+    rows = jnp.arange(nb)[:, None]
+    new_acc = acc.at[rows, idx].set(0.0)
+    return idx, vals, new_acc
+
+
+# ------------------------------------------------------------- pairwise masks
+def pair_key_matrix(sa, participant_ids: Sequence[int], round_t: int):
+    """Host-side [C, C] pair keys + signs from the DH-agreed pair secrets.
+
+    ``keys[i, j]`` is ``masks.pair_key(sa, ids[i], ids[j], round_t)`` (folded
+    with the leaf id inside the encode); ``signs[i, j]`` is +1 when
+    ids[i] < ids[j], -1 when >, and 0 on the diagonal (self pair inactive).
+    Both endpoints of a pair hold identical keys, so the generated masks cancel
+    in the aggregate — and the server can regenerate them for dropout recovery.
+    """
+    from repro.core.masks import pair_key
+
+    ids = list(participant_ids)
+    n = len(ids)
+    keys = [[pair_key(sa, ids[i], ids[j], round_t)
+             for j in range(n)] for i in range(n)]
+    keys = jnp.stack([jnp.stack(row) for row in keys])
+    signs = jnp.array(
+        [[0.0 if i == j else (1.0 if ids[i] < ids[j] else -1.0)
+          for j in range(n)] for i in range(n)], jnp.float32)
+    return keys, signs
+
+
+def fold_pair_key_matrix(mask_key: jax.Array, n: int):
+    """In-trace [n, n] pair keys + signs for positional participants 0..n-1.
+
+    The datacenter path has no host-side client ids (participants are mesh
+    positions); the pair secret is a fold_in chain of the round key over the
+    unordered pair — both endpoints derive the same key, as with dh_agree.
+    """
+    keys = [[jax.random.fold_in(jax.random.fold_in(mask_key, min(i, j)),
+                                max(i, j))
+             for j in range(n)] for i in range(n)]
+    keys = jnp.stack([jnp.stack(row) for row in keys])
+    signs = jnp.array(
+        [[0.0 if i == j else (1.0 if i < j else -1.0) for j in range(n)]
+         for i in range(n)], jnp.float32)
+    return keys, signs
+
+
+def fold_pair_keys_row(mask_key: jax.Array, self_id: jax.Array, n: int):
+    """One participant's row of fold_in pair keys/signs, for traced self_id
+    (the shard_map path, where self_id = lax.axis_index). Matches
+    ``fold_pair_key_matrix(mask_key, n)[self_id]``."""
+    keys, signs = [], []
+    for peer in range(n):
+        lo = jnp.minimum(self_id, peer)
+        hi = jnp.maximum(self_id, peer)
+        keys.append(jax.random.fold_in(jax.random.fold_in(mask_key, lo), hi))
+        signs.append(jnp.where(self_id < peer, 1.0, -1.0)
+                     * (self_id != peer).astype(jnp.float32))
+    return jnp.stack(keys), jnp.stack(signs)
+
+
+def pairwise_mask_rows(
+    pair_keys_row: jax.Array,   # [n_peers] typed keys (this client's row)
+    signs_row: jax.Array,       # f32[n_peers], 0 for the self slot
+    nb: int,
+    k_mask: int,
+    m: int,
+    *,
+    p: float,
+    q: float,
+    leaf_id: int | jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """One client's concatenated mask support/values over all peers.
+
+    Per peer: ``k_mask`` pseudo-random positions per block in [0, m) and
+    uniform magnitudes in [p, p+q), signed by the Bonawitz convention.
+    For ``nb == 1`` this reproduces ``masks.pair_mask`` draw-for-draw.
+    Returns (idx int32[nb, n_peers*k_mask], vals f32[nb, n_peers*k_mask]).
+    """
+    n_peers = pair_keys_row.shape[0]
+
+    def one_peer(pk, sign):
+        if leaf_id is not None:
+            pk = jax.random.fold_in(pk, leaf_id)
+        k_i, k_v = jax.random.split(pk)
+        pidx = jax.random.randint(k_i, (nb, k_mask), 0, m, dtype=jnp.int32)
+        pval = jax.random.uniform(k_v, (nb, k_mask), minval=p, maxval=p + q,
+                                  dtype=jnp.float32)
+        return pidx, sign * pval
+
+    pidx, pval = jax.vmap(one_peer)(pair_keys_row, signs_row)  # [n_peers,nb,km]
+    idx = jnp.moveaxis(pidx, 0, 1).reshape(nb, n_peers * k_mask)
+    vals = jnp.moveaxis(pval, 0, 1).reshape(nb, n_peers * k_mask)
+    return idx, vals
+
+
+# ------------------------------------------------------------- batched encode
+def encode_client_blocks(
+    acc: jax.Array,             # f32[nb, m] one client's accumulator
+    k: int,
+    *,
+    selector: str = "exact",
+    sample_frac: float = 0.01,
+    pair_keys_row: jax.Array | None = None,   # [n_peers] typed keys
+    pair_signs_row: jax.Array | None = None,  # f32[n_peers], 0 = self slot
+    k_mask: int = 0,
+    mask_p: float = -1.0,
+    mask_q: float = 2.0,
+    leaf_id: int | jax.Array | None = None,
+    weight: jax.Array | float = 1.0,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """One client's full encode: pairwise masks + unified stream, block view.
+
+    Returns (global_idx int32[nb, k_total], vals, new_acc). ``global_idx`` is
+    ``row*m + col`` — flat into the padded block space (equals the flat leaf
+    index when nb == 1). vmap-polymorphic: both the batched entry below and the
+    shard_map datacenter path (traced self_id) call this.
+    """
+    nb, m = acc.shape
+    if pair_keys_row is not None and k_mask > 0:
+        m_idx, m_vals = pairwise_mask_rows(
+            pair_keys_row, pair_signs_row, nb, k_mask, m,
+            p=mask_p, q=mask_q, leaf_id=leaf_id)
+        # Inactive (self) slots carry zero mask value; point their support
+        # at the block's top-1 position so first-occurrence gating zeroes
+        # the slot entirely — a random support index there would transmit
+        # the raw gradient unmasked.
+        top1 = jnp.argmax(jnp.abs(acc), -1).astype(jnp.int32)[:, None]
+        col_active = jnp.repeat(pair_signs_row != 0.0, k_mask)[None, :]
+        m_idx = jnp.where(col_active, m_idx, top1)
+    else:
+        m_idx = m_vals = None
+    idx, vals, new_acc = unified_stream_rows(
+        acc, k, m_idx, m_vals, selector=selector,
+        sample_frac=sample_frac, weight=weight)
+    rows = jnp.arange(nb, dtype=jnp.int32)[:, None]
+    return (rows * m + idx).astype(jnp.int32), vals, new_acc
+
+
+def encode_batch_blocks(
+    acc: jax.Array,             # f32[C, nb, m] stacked accumulators
+    k: int,
+    *,
+    selector: str = "exact",
+    sample_frac: float = 0.01,
+    pair_keys: jax.Array | None = None,   # [C, C] typed keys
+    pair_signs: jax.Array | None = None,  # f32[C, C]
+    k_mask: int = 0,
+    mask_p: float = -1.0,
+    mask_q: float = 2.0,
+    leaf_id: int | jax.Array | None = None,
+    weights: jax.Array | None = None,     # f32[C] client-side gradient weights
+) -> tuple[StreamBatch, jax.Array]:
+    """Batched client encode: all clients of a round in one vmapped program.
+
+    Returns (StreamBatch with *global* indices row*m + col, new_acc [C, nb, m]).
+    The caller owns the block view (``to_blocks``/``from_blocks`` or the
+    sharding-aligned transform of core/blocked.py) and the error-feedback
+    accumulate ``acc = residual + update``.
+    """
+    C, nb, m = acc.shape
+    if weights is None:
+        weights = jnp.ones((C,), jnp.float32)
+    use_masks = pair_keys is not None and k_mask > 0 and C >= 2
+
+    def one_client(acc_c, keys_row, signs_row, w_c):
+        return encode_client_blocks(
+            acc_c, k, selector=selector, sample_frac=sample_frac,
+            pair_keys_row=keys_row, pair_signs_row=signs_row,
+            k_mask=k_mask if use_masks else 0, mask_p=mask_p, mask_q=mask_q,
+            leaf_id=leaf_id, weight=w_c)
+
+    if use_masks:
+        gidx, vals, new_acc = jax.vmap(one_client)(
+            acc, pair_keys, pair_signs, weights)
+    else:
+        gidx, vals, new_acc = jax.vmap(
+            lambda a, w: one_client(a, None, None, w))(acc, weights)
+    return StreamBatch(indices=gidx, values=vals), new_acc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("k", "nb", "m", "size", "selector", "sample_frac",
+                     "k_mask", "mask_p", "mask_q"))
+def encode_leaf_batch(
+    updates: jax.Array,        # [C, *leaf_shape] stacked client updates
+    residuals: jax.Array,      # [C, *leaf_shape] stacked error feedback
+    *,
+    k: int,
+    nb: int,
+    m: int,
+    size: int,
+    selector: str = "exact",
+    sample_frac: float = 0.01,
+    pair_keys: jax.Array | None = None,
+    pair_signs: jax.Array | None = None,
+    k_mask: int = 0,
+    mask_p: float = -1.0,
+    mask_q: float = 2.0,
+    leaf_id: int | jax.Array = 0,
+    weights: jax.Array | None = None,
+) -> tuple[StreamBatch, jax.Array]:
+    """Jitted leaf-level entry: accumulate -> block view -> batched encode.
+
+    Returns (streams, new_residuals [C, *leaf_shape]). One compiled program per
+    (leaf shape, k, k_mask) covers every client — this is what replaces the
+    seed's serial per-client ``encode_update`` loop. ``leaf_id`` is traced
+    (it only feeds fold_in), so same-shaped leaves share one executable.
+    """
+    C = updates.shape[0]
+    leaf_shape = updates.shape[1:]
+    acc = jax.vmap(lambda u, r: to_blocks(
+        r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
+            updates, residuals)
+    streams, new_acc = encode_batch_blocks(
+        acc, k, selector=selector, sample_frac=sample_frac,
+        pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
+        mask_p=mask_p, mask_q=mask_q, leaf_id=leaf_id, weights=weights)
+    new_res = jax.vmap(lambda b: from_blocks(b, size, leaf_shape))(new_acc)
+    return streams, new_res.astype(residuals.dtype)
+
+
+# ------------------------------------------------------------- server decode
+def _scatter_flat(flat_idx: jax.Array, flat_vals: jax.Array,
+                  padded: int, use_pallas: bool) -> jax.Array:
+    if use_pallas:
+        from repro.kernels import ops
+
+        return ops.stream_scatter_add(flat_idx, flat_vals, size=padded)
+    return jnp.zeros((padded,), jnp.float32).at[flat_idx].add(flat_vals)
+
+
+def decode_sum_blocks(
+    streams: StreamBatch,      # [C, nb, k_total] global indices/values
+    nb: int,
+    m: int,
+    *,
+    alive: jax.Array | None = None,      # bool/f32[C] survivor gate
+    weights: jax.Array | None = None,    # f32[C] server-side weights (uniform
+                                         # protocols only — see module doc)
+    extra: StreamBatch | None = None,    # reconstruction streams, weight 1
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Scatter-add every client's stream into the dense [nb*m] buffer — one
+    fused pass (Pallas on TPU, XLA scatter elsewhere). Returns f32[nb*m]."""
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    C = streams.indices.shape[0]
+    gate = jnp.ones((C,), jnp.float32)
+    if weights is not None:
+        gate = gate * jnp.asarray(weights, jnp.float32)
+    if alive is not None:
+        gate = gate * jnp.asarray(alive, jnp.float32)
+    vals = streams.values * gate[:, None, None]
+    flat_idx = streams.indices.reshape(-1)
+    flat_vals = vals.reshape(-1)
+    if extra is not None:
+        flat_idx = jnp.concatenate([flat_idx, extra.indices.reshape(-1)])
+        flat_vals = jnp.concatenate(
+            [flat_vals, extra.values.reshape(-1).astype(jnp.float32)])
+    return _scatter_flat(flat_idx, flat_vals, nb * m, use_pallas)
+
+
+def dropout_cancel_streams(
+    pair_keys: jax.Array,    # [C, C] typed keys (as used at encode time)
+    pair_signs: jax.Array,   # f32[C, C]
+    alive: jax.Array,        # bool[C]
+    nb: int,
+    k_mask: int,
+    m: int,
+    *,
+    p: float,
+    q: float,
+    leaf_id: int | jax.Array | None = None,
+) -> StreamBatch:
+    """Bonawitz dropout recovery: regenerate every survivor→dropped pair mask
+    and emit its negation, so the survivor sum's unpaired masks cancel.
+
+    In the real protocol the server learns the pair secrets of dropped clients
+    via Shamir shares; here it regenerates them from the same pair keys the
+    encode used. Pairs are gated by ``alive[s] & ~alive[d]`` — survivor/survivor
+    masks already cancel pairwise, dropped/dropped streams never arrived.
+    """
+    C = pair_keys.shape[0]
+    alive_f = jnp.asarray(alive, jnp.float32)
+
+    def one_pair(pk, sign, gate):
+        idx, vals = pairwise_mask_rows(
+            pk[None], sign[None], nb, k_mask, m, p=p, q=q, leaf_id=leaf_id)
+        return idx, -gate * vals
+
+    gates = alive_f[:, None] * (1.0 - alive_f[None, :])   # [C, C] s alive, d not
+    flat_keys = pair_keys.reshape(C * C)
+    flat_signs = pair_signs.reshape(C * C)
+    flat_gates = gates.reshape(C * C)
+    idx, vals = jax.vmap(one_pair)(flat_keys, flat_signs, flat_gates)
+    return StreamBatch(indices=idx.reshape(C * C, nb, k_mask),
+                       values=vals.reshape(C * C, nb, k_mask))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("nb", "m", "size", "k_mask", "mask_p", "mask_q",
+                     "use_pallas"))
+def decode_leaf_batch(
+    streams: StreamBatch,
+    *,
+    nb: int,
+    m: int,
+    size: int,
+    alive: jax.Array | None = None,
+    weights: jax.Array | None = None,
+    pair_keys: jax.Array | None = None,
+    pair_signs: jax.Array | None = None,
+    k_mask: int = 0,
+    mask_p: float = -1.0,
+    mask_q: float = 2.0,
+    leaf_id: int | jax.Array = 0,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Jitted server decode for one leaf: survivor-gated fused scatter-add,
+    plus reconstructed-mask cancellation when ``alive`` marks dropouts.
+    Returns the dense f32[size] aggregate."""
+    extra = None
+    if alive is not None and pair_keys is not None and k_mask > 0:
+        extra = dropout_cancel_streams(
+            pair_keys, pair_signs, alive, nb, k_mask, m,
+            p=mask_p, q=mask_q, leaf_id=leaf_id)
+    dense = decode_sum_blocks(
+        streams, nb, m, alive=alive, weights=weights, extra=extra,
+        use_pallas=use_pallas)
+    return dense[:size]

@@ -21,7 +21,7 @@ class SparseStream:
     """Static-shape sparse encoding of one tensor (one THGS layer/leaf).
 
     ``indices`` index into the *flattened* tensor; ``values`` carry
-    ``acc[idx] * first_occurrence + mask`` per slot (see core/secure_agg.py).
+    ``acc[idx] * first_occurrence + mask`` per slot (see core/streams.py).
     Duplicate indices are allowed; scatter-add semantics resolve them.
     """
 

@@ -13,6 +13,7 @@ import jax
 
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mask_prng import mask_prng_apply as _mask
+from repro.kernels.stream_decode import stream_scatter_add as _scatter
 from repro.kernels.thgs_sparsify import thgs_sparsify as _thgs
 
 
@@ -39,3 +40,11 @@ def mask_prng_apply(g, *, seed: int, p: float = -1.0, q: float = 2.0,
                     sigma: float, sign: float = 1.0):
     return _mask(g, seed, p=p, q=q, sigma=sigma, sign=sign,
                  interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("size", "tile_rows", "chunk"))
+def stream_scatter_add(indices, values, *, size: int, tile_rows: int = 64,
+                       chunk: int = 512):
+    """Fused server decode: flat stream -> dense f32[size] in one HBM pass."""
+    return _scatter(indices, values, size, tile_rows=tile_rows, chunk=chunk,
+                    interpret=_interpret())

@@ -51,6 +51,15 @@ def _mix32(x: jax.Array) -> jax.Array:
     return x
 
 
+def stream_scatter_add_ref(indices, values, size: int):
+    """Scatter-add a flat stream into dense f32[size]; out-of-range dropped."""
+    idx = indices.reshape(-1).astype(jnp.int32)
+    val = values.reshape(-1).astype(jnp.float32)
+    valid = (idx >= 0) & (idx < size)
+    return jnp.zeros((size,), jnp.float32).at[
+        jnp.where(valid, idx, 0)].add(jnp.where(valid, val, 0.0))
+
+
 def mask_prng_ref(g, seed: int, *, p: float, q: float, sigma: float,
                   sign: float = 1.0):
     """Counter-based sparse-mask generation + add (paper Eq. 3-5 data plane).

@@ -8,7 +8,8 @@ Two step builders (DESIGN.md §2, §6):
   * ``make_fl_train_step`` — the paper's technique as the collective schedule:
     shard_map over the federation axis ('pod' on the multi-pod mesh, 'data'
     otherwise); each participant computes its local update, encodes it with
-    block-local THGS top-k + sparse pairwise masks (core/blocked.py), and the
+    the unified stream engine (core/streams.py via core/blocked.py — block-
+    local THGS top-k + sparse pairwise masks, DESIGN.md §3), and the
     cross-participant exchange is an all_gather of the small static streams +
     scatter-add — instead of a dense psum. The federation axis is excluded from
     fsdp so every participant owns a full logical model copy.
@@ -28,6 +29,7 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core import schedules
+from repro.core import streams as se
 from repro.core.blocked import decode_blocked_sum, encode_leaf_blocked
 from repro.core.types import SecureAggConfig, THGSConfig
 from repro.launch import shardings as shd
@@ -36,6 +38,24 @@ from repro.models import transformer as tf
 from repro.models.sharding import logical_axis_rules
 
 PyTree = Any
+
+
+def _shard_map(f, *, mesh, in_specs, out_specs, manual_axes):
+    """Partial-manual shard_map across jax versions.
+
+    jax >= 0.6 exposes jax.shard_map(axis_names=manual set, check_vma=);
+    earlier versions have jax.experimental.shard_map(auto=complement set,
+    check_rep=). Both mean the same: manual only over ``manual_axes``.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False,
+                             axis_names=set(manual_axes))
+    from jax.experimental.shard_map import shard_map
+
+    auto = frozenset(mesh.axis_names) - frozenset(manual_axes)
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False, auto=auto)
 
 
 def loss_fn(params: PyTree, cfg: ArchConfig, batch: dict) -> jax.Array:
@@ -116,8 +136,7 @@ def make_fl_train_step_v2(
     replicated dense buffer — GSPMD lowers it to an all-gather of exactly the
     sparse streams (the paper's communication claim, visible in the HLO).
     """
-    from repro.core.blocked import (_first_occurrence_rows, block_layout,
-                                    sharding_aligned_transform)
+    from repro.core.blocked import block_layout, sharding_aligned_transform
     from repro.launch.mesh import logical_rules
 
     n_fed = dict(zip(mesh.axis_names, mesh.devices.shape))[fed_axis]
@@ -136,10 +155,10 @@ def make_fl_train_step_v2(
 
         # ---- per-participant grads (the only manual-region piece) ----
         @functools.partial(
-            jax.shard_map, mesh=mesh,
+            _shard_map, mesh=mesh,
             in_specs=(P(), P(fed_axis)),
             out_specs=(P(fed_axis), P(fed_axis)),
-            check_vma=False, axis_names={fed_axis})
+            manual_axes=(fed_axis,))
         def per_pod_grads(p, b):
             if n_micro == 1:
                 loss, grads = jax.value_and_grad(loss_fn)(p, cfg, b)
@@ -176,7 +195,6 @@ def make_fl_train_step_v2(
                               pspecs)]
         r_leaves = jax.tree_util.tree_leaves(residuals)
         p_leaves, treedef = jax.tree_util.tree_flatten(params)
-        pod_ids = jnp.arange(n_fed)
         new_params, new_res = [], []
         for leaf_id, (gs, rs, pl, gspec) in enumerate(
                 zip(g_leaves, r_leaves, p_leaves, pspecs)):
@@ -206,61 +224,31 @@ def make_fl_train_step_v2(
             acc = jax.lax.with_sharding_constraint(
                 acc, NamedSharding(mesh, stacked_spec))  # [n_fed, nb, m]
 
-            top_abs, idx_t = jax.lax.top_k(jnp.abs(acc), kb)
-
+            # ---- batched unified-stream encode: all pods in one vmapped
+            # program (core/streams.py is the single implementation; pair
+            # keys are the fold_in chain both endpoints can derive) ----
             k_mask = (max(1, int(pl.size * sa.mask_ratio / n_fed / nb))
                       if (sa.enabled and n_fed >= 2) else 0)
             if k_mask > 0:
                 mkey = jax.random.fold_in(round_key, leaf_id)
-
-                def pod_masks(self_id, _nb=nb, _m=m, _km=k_mask, _mk=None):
-                    mk = jax.random.fold_in(round_key, leaf_id)
-                    idxs, vals = [], []
-                    for peer in range(n_fed):
-                        lo = jnp.minimum(self_id, peer)
-                        hi = jnp.maximum(self_id, peer)
-                        pk = jax.random.fold_in(jax.random.fold_in(mk, lo), hi)
-                        k_i, k_v = jax.random.split(pk)
-                        pidx = jax.random.randint(
-                            k_i, (_nb, _km), 0, _m, dtype=jnp.int32)
-                        pval = jax.random.uniform(
-                            k_v, (_nb, _km), minval=sa.p, maxval=sa.p + sa.q)
-                        sign = jnp.where(self_id < peer, 1.0, -1.0)
-                        active = (self_id != peer).astype(jnp.float32)
-                        idxs.append(pidx)
-                        vals.append(sign * active * pval)
-                    return (jnp.concatenate(idxs, -1),
-                            jnp.concatenate(vals, -1))
-
-                m_idx, m_val = jax.vmap(pod_masks)(pod_ids)
-                idx = jnp.concatenate([idx_t, m_idx], -1)
-                mask_vals = jnp.concatenate(
-                    [jnp.zeros_like(top_abs), m_val], -1)
+                pair_keys, pair_signs = se.fold_pair_key_matrix(mkey, n_fed)
             else:
-                idx = idx_t
-                mask_vals = jnp.zeros_like(top_abs)
-
-            ktot = idx.shape[-1]
-            first = _first_occurrence_rows(
-                idx.reshape(n_fed * nb, ktot)).reshape(n_fed, nb, ktot)
-            gvals = jnp.take_along_axis(acc, idx, -1)
-            vals = gvals * first.astype(acc.dtype) + mask_vals
-
-            # zero the transmitted positions per pod (vmapped scatter)
-            new_blocks = jax.vmap(
-                lambda a, i: a.at[jnp.arange(a.shape[0])[:, None], i].set(0.0)
-            )(acc, idx)
+                pair_keys = pair_signs = None
+            streams_b, new_blocks = se.encode_batch_blocks(
+                acc, kb, pair_keys=pair_keys, pair_signs=pair_signs,
+                k_mask=k_mask, mask_p=sa.p, mask_q=sa.q)
             nr = jax.vmap(from_b)(new_blocks).astype(rs.dtype)
             new_res.append(jax.lax.with_sharding_constraint(
                 nr, NamedSharding(mesh, P(fed_axis, *gspec))))
 
             # ---- the sparse federation exchange: pod-sharded streams ->
             # pod-replicated dense sum (GSPMD: all-gathers only the streams)
-            rows = jnp.broadcast_to(jnp.arange(nb)[None, :, None], idx.shape)
+            gidx = streams_b.indices              # [n_fed, nb, ktot] global
             dense = jnp.zeros((nb, m), jnp.float32)
             dense = jax.lax.with_sharding_constraint(
                 dense, NamedSharding(mesh, P(front if front else None, None)))
-            dense = dense.at[rows, idx].add(vals / n_fed)
+            dense = dense.at[gidx // m, gidx % m].add(
+                streams_b.values / n_fed)
             agg = from_b(dense).astype(jnp.float32)
             agg = jax.lax.with_sharding_constraint(
                 agg, NamedSharding(mesh, gspec))
@@ -329,12 +317,11 @@ def make_fl_train_step(
                 params_shape)[0]]
 
         @functools.partial(
-            jax.shard_map,
+            _shard_map,
             mesh=mesh,
             in_specs=(P(), P(fed_axis), P(fed_axis), P()),
             out_specs=(P(), P(fed_axis), P(fed_axis)),
-            check_vma=False,
-            axis_names={fed_axis},
+            manual_axes=(fed_axis,),
         )
         def fed_step(p, res, b, key):
             # inside: manual over fed_axis; data/model axes still GSPMD-auto.

@@ -1,5 +1,8 @@
 """Federated partitioner + synthetic dataset properties."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.data import (MNIST, client_batches, dirichlet, iid, make_dataset,

@@ -69,6 +69,27 @@ def test_mask_prng_matches_ref_and_cancels(shape):
     assert float(jnp.max(jnp.abs(m_k + m_neg))) == 0.0
 
 
+@pytest.mark.parametrize("n,size", [(100, 1000), (700, 257), (2048, 100_000),
+                                    (5, 64)])
+def test_stream_scatter_add_matches_ref(n, size):
+    k1, k2 = jax.random.split(jax.random.fold_in(KEY, 20))
+    # include duplicates, the -1 padding sentinel, and out-of-range indices
+    idx = jax.random.randint(k1, (n,), -2, size + 3)
+    val = jax.random.normal(k2, (n,))
+    out = ops.stream_scatter_add(idx, val, size=size)
+    exp = ref.stream_scatter_add_ref(idx, val, size)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(exp), rtol=1e-5,
+                               atol=1e-5)
+
+
+def test_stream_scatter_add_duplicates_accumulate():
+    idx = jnp.array([3, 3, 3, 0, 9], jnp.int32)
+    val = jnp.array([1.0, 2.0, 4.0, 5.0, -1.0])
+    out = ops.stream_scatter_add(idx, val, size=10)
+    assert float(out[3]) == 7.0 and float(out[0]) == 5.0
+    assert float(out[9]) == -1.0 and float(out.sum()) == 11.0
+
+
 def test_mask_prng_support_fraction():
     g = jnp.zeros((100_000,))
     _, m = ops.mask_prng_apply(g, seed=7, sigma=-0.5, sign=1.0)

