@@ -1,54 +1,21 @@
-"""Shared FL-experiment driver for the paper-scale benchmarks.
+"""Protocol -> repro.sim adapter for the paper-scale benchmarks.
 
-Runs the full federated pipeline (repro.core.fedavg) on the synthetic
-MNIST/Fashion-MNIST/CIFAR-10 stand-ins with the paper's §5 protocol scaled to a
-single CPU core: the client population, Non-IID partitioning, local steps and
-batch sizes follow the paper; rounds and dataset sizes are reduced (relative
-claims, not absolute accuracies, are what EXPERIMENTS.md validates).
+The multi-round driver is ``repro.sim.Simulation`` (DESIGN.md §9); this module
+only translates the benchmark modules' protocol kwargs (the paper's §5 setup
+scaled to a single CPU core: client population, Non-IID partitioning, local
+steps and batch sizes follow the paper; rounds and dataset sizes are reduced)
+into a :class:`~repro.sim.SimConfig` and runs it. Relative claims, not
+absolute accuracies, are what EXPERIMENTS.md validates.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import costs
-from repro.core.fedavg import init_state, run_round
-from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
-from repro.data import client_batches, iid, make_dataset, noniid_label_k
-from repro.data.datasets import SPECS
-from repro.models.paper_models import (PAPER_MODELS, accuracy,
-                                       cross_entropy_loss)
+from repro.core.types import SecureAggConfig, THGSConfig
+from repro.sim import SimConfig, SimResult, Simulation
 
 
-@dataclasses.dataclass
-class RunResult:
-    name: str
-    accuracies: list
-    losses: list
-    upload_bits_total: int
-    dense_upload_bits_total: int
-    rounds: int
-    wall_s: float
-
-    @property
-    def final_acc(self) -> float:
-        return float(np.mean(self.accuracies[-3:])) if self.accuracies else 0.0
-
-    def rounds_to_reach(self, target_acc: float) -> Optional[int]:
-        for r, a in enumerate(self.accuracies):
-            if a >= target_acc:
-                return (r + 1) * max(1, self._eval_every)
-        return None
-
-    _eval_every: int = 1
-
-
-def run_fl(
+def sim_config(
     model_name: str = "mnist_mlp",
     dataset: str = "mnist",
     *,
@@ -67,48 +34,33 @@ def run_fl(
     eval_every: int = 3,
     seed: int = 0,
     label: str = "",
-) -> RunResult:
-    model = PAPER_MODELS[model_name]
-    spec = SPECS[dataset]
-    x, y = make_dataset(spec, n_train, seed=seed)
-    xt, yt = make_dataset(spec, n_test, seed=seed + 1, train=False)
-    if noniid_k is None:
-        parts = iid(y, n_clients, seed=seed)
-    else:
-        parts = noniid_label_k(y, n_clients, noniid_k, seed=seed)
-
-    fed = FedConfig(n_clients=n_clients, clients_per_round=clients_per_round,
-                    local_steps=local_steps, local_batch=local_batch,
-                    local_lr=lr, rounds=rounds, algorithm=algorithm,
-                    prox_mu=0.01 if algorithm == "fedprox" else 0.0)
-    params = model.init(jax.random.key(seed))
-    loss_fn = cross_entropy_loss(model)
-    st = init_state(params, fed)
-
-    rs = np.random.RandomState(seed)
-    accs, losses = [], []
-    t0 = time.time()
-    for r in range(rounds):
-        chosen = rs.choice(n_clients, clients_per_round, replace=False)
-        batches = {}
-        for c in chosen:
-            xb, yb = client_batches(x, y, parts[int(c)], local_batch,
-                                    local_steps, seed=r * 1000 + int(c))
-            batches[int(c)] = (jnp.asarray(xb), jnp.asarray(yb))
-        st = run_round(st, batches, loss_fn, fed, thgs, sa)
-        losses.append(float(np.mean([st.losses[c] for c in batches])))
-        if (r + 1) % eval_every == 0:
-            accs.append(accuracy(model, st.params, xt, yt))
-    res = RunResult(
+) -> SimConfig:
+    """The benchmarks' historical protocol-kwarg surface, as a SimConfig."""
+    return SimConfig(
         name=label or f"{model_name}:{algorithm}"
         f"{':thgs' if thgs else ''}{':sa' if sa.enabled else ''}",
-        accuracies=accs,
-        losses=losses,
-        upload_bits_total=sum(rec.upload_bits for rec in st.comm_log),
-        dense_upload_bits_total=sum(rec.dense_upload_bits
-                                    for rec in st.comm_log),
+        model=model_name,
+        dataset=dataset,
+        partition="iid" if noniid_k is None else "noniid",
+        noniid_k=noniid_k if noniid_k is not None else 4,
+        n_train=n_train,
+        n_test=n_test,
         rounds=rounds,
-        wall_s=time.time() - t0,
+        n_clients=n_clients,
+        clients_per_round=clients_per_round,
+        local_steps=local_steps,
+        local_batch=local_batch,
+        local_lr=lr,
+        algorithm=algorithm,
+        prox_mu=0.01 if algorithm == "fedprox" else 0.0,
+        thgs=thgs,
+        sa=sa,
+        eval_every=eval_every,
+        seed=seed,
     )
-    res._eval_every = eval_every
-    return res
+
+
+def simulate(model_name: str = "mnist_mlp", dataset: str = "mnist",
+             **protocol) -> SimResult:
+    """Build the SimConfig and run it through the sim engine."""
+    return Simulation(sim_config(model_name, dataset, **protocol)).run()

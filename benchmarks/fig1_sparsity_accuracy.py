@@ -2,7 +2,7 @@
 s = 1 (dense), 0.1, 0.01, 0.001 — IID and Non-IID."""
 from __future__ import annotations
 
-from benchmarks.common import run_fl
+from benchmarks.common import simulate
 from repro.core.types import SecureAggConfig, THGSConfig
 
 
@@ -16,10 +16,10 @@ def run(quick: bool = False):
         for s in sweeps:
             thgs = None if s is None else THGSConfig(
                 s0=s, alpha=1.0, s_min=s, time_varying=False)
-            r = run_fl("mnist_mlp", "mnist", thgs=thgs,
-                       sa=SecureAggConfig(enabled=False),
-                       noniid_k=noniid, **proto)
-            comp = r.dense_upload_bits_total / max(r.upload_bits_total, 1)
+            r = simulate("mnist_mlp", "mnist", thgs=thgs,
+                         sa=SecureAggConfig(enabled=False),
+                         noniid_k=noniid, **proto)
+            comp = r.ledger.totals("paper")["compression_x"] or 1.0
             rows.append((
                 f"fig1/{tag}/s={s if s else 'dense'}",
                 r.wall_s / r.rounds * 1e6,

@@ -4,8 +4,8 @@ The paper's claim: THGS >= flat everywhere, and the gap to dense closes as
 beta -> 0.8."""
 from __future__ import annotations
 
-from benchmarks.common import run_fl
-from repro.core.types import SecureAggConfig, THGSConfig
+from benchmarks.common import simulate
+from repro.core.types import THGSConfig
 
 
 def run(quick: bool = False):
@@ -15,16 +15,16 @@ def run(quick: bool = False):
     noniids = (4,) if quick else (4, 6, 8)
     betas = (0.8,) if quick else (0.2, 0.5, 0.8)
     for k in noniids:
-        dense = run_fl("mnist_mlp", "mnist", thgs=None, noniid_k=k, **proto)
+        dense = simulate("mnist_mlp", "mnist", thgs=None, noniid_k=k, **proto)
         rows.append((f"fig3/noniid{k}/dense", dense.wall_s / dense.rounds * 1e6,
                      f"final_acc={dense.final_acc:.3f}"))
         for beta in betas:
-            flat = run_fl(  # conventional: one global rate, no hierarchy
+            flat = simulate(  # conventional: one global rate, no hierarchy
                 "mnist_mlp", "mnist",
                 thgs=THGSConfig(s0=0.05, alpha=1.0, s_min=0.05,
                                 alpha_t=beta, time_varying=True),
                 noniid_k=k, **proto)
-            thgs = run_fl(  # ours: hierarchical layer schedule (Eq. 1)
+            thgs = simulate(  # ours: hierarchical layer schedule (Eq. 1)
                 "mnist_mlp", "mnist",
                 thgs=THGSConfig(s0=0.08, alpha=0.6, s_min=0.02,
                                 alpha_t=beta, time_varying=True),

@@ -1,10 +1,15 @@
-"""Paper Table 1: model parameter sizes and update volumes (exact)."""
+"""Paper Table 1: model parameter sizes and update volumes (exact).
+
+Volumes are reported under both bit accountings (core/costs): the paper's
+64-bit elements and the float32 TPU wire format the sim ledger also tracks.
+"""
 import time
 
 import jax
 
 from repro.core import costs
 from repro.models.paper_models import PAPER_MODELS, TABLE1_PARAMS
+from repro.sim.ledger import mib
 
 # Table 1 "update volume" column: m * 64bit (double-precision accounting)
 TABLE1_VOLUMES = {"mnist_mlp": "1.2M", "mnist_cnn": "4.44M",
@@ -18,11 +23,13 @@ def run(quick: bool = False):
         p = jax.eval_shape(model.init, jax.random.key(0))
         n = sum(x.size for x in jax.tree_util.tree_leaves(p))
         us = (time.time() - t0) * 1e6
-        dense_mb = costs.PAPER_BITS.dense_bits(n) / 8 / 2**20
+        dense_mb = mib(costs.PAPER_BITS.dense_bits(n))
+        tpu_mb = mib(costs.TPU_BITS.dense_bits(n))
         ok = n == TABLE1_PARAMS[name]
         rows.append((f"table1/{name}", us,
                      f"params={n};published={TABLE1_PARAMS[name]};match={ok};"
                      f"update_volume={dense_mb:.2f}MiB;"
+                     f"update_volume_tpu={tpu_mb:.2f}MiB;"
                      f"published_volume={TABLE1_VOLUMES[name]}"))
         assert ok, f"Table 1 mismatch for {name}"
     return rows

@@ -1,13 +1,16 @@
 """Paper Table 2: upload communication cost to reach 95% of the final
 convergence accuracy under Non-IID — FedAvg vs FedProx vs ours (THGS + sparse
 secure aggregation). The paper's headline: ours = 2.9%-18.9% of FedAvg upload
-at sparsity 0.01 (x5.3-x34 compression)."""
+at sparsity 0.01 (x5.3-x34 compression).
+
+Driven by the repro.sim engine: each arm is one Simulation whose CommLedger
+provides the cumulative rounds-to-target upload bits (paper accounting).
+"""
 from __future__ import annotations
 
-import numpy as np
-
-from benchmarks.common import run_fl
+from benchmarks.common import simulate
 from repro.core.types import SecureAggConfig, THGSConfig
+from repro.sim.ledger import mib
 
 
 def _protocol(quick):
@@ -26,28 +29,28 @@ def run(quick: bool = False):
         if quick and dataset == "fashion_mnist":
             continue
         runs = {}
-        runs["fedavg"] = run_fl(model, dataset, thgs=None, **proto)
-        runs["fedprox"] = run_fl(model, dataset, thgs=None,
-                                 algorithm="fedprox", **proto)
-        runs["ours"] = run_fl(
+        runs["fedavg"] = simulate(model, dataset, thgs=None, **proto)
+        runs["fedprox"] = simulate(model, dataset, thgs=None,
+                                   algorithm="fedprox", **proto)
+        runs["ours"] = simulate(
             model, dataset,
             thgs=THGSConfig(s0=0.05, alpha=0.9, s_min=0.01),
             sa=SecureAggConfig(mask_ratio=0.01), **proto)
 
         # rounds to reach 95% of the dense final accuracy (Table 2 protocol)
         target = 0.95 * runs["fedavg"].final_acc
-        base_r = runs["fedavg"].rounds_to_reach(target) or runs["fedavg"].rounds
-        base_bits = (runs["fedavg"].upload_bits_total / runs["fedavg"].rounds
-                     * base_r)
+        base_r = (runs["fedavg"].rounds_to_reach(target)
+                  or runs["fedavg"].rounds)
+        base_bits = runs["fedavg"].ledger.upload_bits_through(base_r)
         for name, r in runs.items():
             reach = r.rounds_to_reach(target)
             rounds_used = reach or r.rounds
-            bits = r.upload_bits_total / r.rounds * rounds_used
+            bits = r.ledger.upload_bits_through(rounds_used)
             ratio = bits / base_bits
             rows.append((
                 f"table2/{model}-{dataset}/{name}",
                 r.wall_s / r.rounds * 1e6,
                 f"acc={r.final_acc:.3f};rounds_to_95pct={reach};"
-                f"upload_MiB={bits/8/2**20:.1f};vs_fedavg={ratio:.3f};"
+                f"upload_MiB={mib(bits):.1f};vs_fedavg={ratio:.3f};"
                 f"compression_x={1/max(ratio,1e-9):.1f}"))
     return rows

@@ -10,6 +10,7 @@ Run:  PYTHONPATH=src python examples/federated_llm_training.py \
           --arch xlstm-125m --reduced --steps 50
 """
 import argparse
+import dataclasses
 import os
 
 if __name__ == "__main__" and "XLA_FLAGS" not in os.environ:
@@ -21,13 +22,34 @@ import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import checkpoint, configs
+from repro.core import costs
 from repro.core.types import SecureAggConfig, THGSConfig
 from repro.data import make_lm_tokens
 from repro.launch import shardings as shd
 from repro.launch.mesh import logical_rules, make_debug_mesh
-from repro.launch.train import make_fl_train_step
+from repro.launch.train import fl_leaf_plan, make_fl_train_step
 from repro.models import transformer as tf
 from repro.models.sharding import logical_axis_rules
+from repro.sim import CommLedger, mib
+
+
+def step_wire_record(step_t, params, thgs, sa, n_fed, n_blocks):
+    """One CommRecord for a datacenter FL step, mirroring the step builder's
+    static plan: per leaf, ``nb`` blocks of ``kb`` top-k slots plus
+    ``k_mask_block`` mask slots per block toward each of the n_fed-1 peers
+    (launch/train.py::fl_leaf_plan + the Eq. 4 per-block mask count)."""
+    pshapes = jax.tree_util.tree_map(
+        lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+    plan = fl_leaf_plan(pshapes, thgs, n_blocks)
+    sizes = [x.size for x in jax.tree_util.tree_leaves(pshapes)]
+    ks, k_masks = [], []
+    for size, (kb, nb) in zip(sizes, plan):
+        ks.append(nb * kb)
+        k_masks.append(
+            nb * max(1, int(size * sa.mask_ratio / n_fed / nb))
+            if (sa.enabled and n_fed >= 2) else 0)
+    return costs.round_record(step_t, sum(sizes), ks, k_masks,
+                              n_clients=n_fed, bits=costs.TPU_BITS)
 
 
 def main():
@@ -68,17 +90,42 @@ def main():
         {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)},
         NamedSharding(mesh, P(("pod", "data"), None)))
 
+    # resume from the latest checkpoint when one exists; the THGS error-
+    # feedback residuals are part of the training state (dropping them would
+    # lose every sparsified-away gradient accumulated so far)
+    start = checkpoint.latest_step(args.ckpt) or 0
+    if start:
+        tree = checkpoint.restore(
+            args.ckpt, start,
+            like={"params": params, "residuals": residuals})
+        params, residuals = tree["params"], tree["residuals"]
+        print(f"resumed from {args.ckpt} at step {start}")
+
+    n_fed = 2
+    n_blocks = mesh.devices.size // n_fed
+    ledger = CommLedger()
+    rec = step_wire_record(0, params, thgs, sa, n_fed, n_blocks)
+
     with logical_axis_rules(mesh, rules):
         jstep = jax.jit(step, donate_argnums=(0, 1))
-        for i in range(args.steps):
+        for i in range(start, args.steps):
             params, residuals, loss = jstep(params, residuals, batch,
                                             jax.random.key(i))
+            ledger.record(dataclasses.replace(rec, round=i))
             if (i + 1) % 10 == 0:
                 print(f"step {i+1:4d}  loss={float(loss):.4f}")
 
-    checkpoint.save(args.ckpt, args.steps, params)
+    checkpoint.save(args.ckpt, args.steps,
+                    {"params": params, "residuals": residuals})
     print(f"checkpoint written to {args.ckpt} "
           f"(step {checkpoint.latest_step(args.ckpt)})")
+    t = ledger.totals("tpu")
+    print(f"federation exchange (tpu accounting): "
+          f"{mib(t['upload_bits']):.1f} MiB uploaded vs "
+          f"{mib(t['dense_upload_bits']):.1f} MiB dense "
+          f"-> {t['upload_vs_dense']:.1%} ({t['compression_x']:.1f}x)")
+    ledger.to_json(os.path.join(args.ckpt, "comm_ledger.json"),
+                   extra={"arch": args.arch, "steps": args.steps})
 
 
 if __name__ == "__main__":

@@ -1,58 +1,44 @@
-"""Quickstart: THGS + sparse-mask secure aggregation in 60 lines.
+"""Quickstart: THGS + sparse-mask secure aggregation through the sim engine.
 
 Trains the paper's MNIST-MLP federated across 10 clients (Non-IID-4) with the
-efficient+secure pipeline, and prints the round-by-round accuracy and the
-upload compression vs conventional FedAvg.
+efficient+secure pipeline — one `repro.sim` preset — and prints the round-by-
+round accuracy plus the upload compression vs conventional FedAvg under both
+bit accountings (paper 64-bit elements / float32 TPU wire format).
 
-Run:  PYTHONPATH=src python examples/quickstart.py
+Run:  PYTHONPATH=src python examples/quickstart.py [--rounds N]
 """
-import jax
-import jax.numpy as jnp
-import numpy as np
+import argparse
 
-from repro.core.fedavg import init_state, run_round
-from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
-from repro.data import MNIST, client_batches, make_dataset, noniid_label_k
-from repro.models.paper_models import MNIST_MLP, accuracy, cross_entropy_loss
+from repro.sim import Simulation, mib, presets
 
 
 def main():
-    # --- data: synthetic MNIST stand-in, Non-IID-4 across 10 clients
-    x, y = make_dataset(MNIST, 4000, seed=0)
-    xt, yt = make_dataset(MNIST, 800, seed=1, train=False)
-    parts = noniid_label_k(y, n_clients=10, k=4, seed=0)
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=None,
+                    help="shrink/extend the run (default: the preset's 30)")
+    args = ap.parse_args()
 
-    # --- the paper's two mechanisms
-    thgs = THGSConfig(s0=0.05, alpha=0.9, s_min=0.01)     # Alg. 1 / Eq. 1-2
-    sa = SecureAggConfig(mask_ratio=0.01)                 # Alg. 2 / Eq. 3-5
-    fed = FedConfig(n_clients=10, clients_per_round=5, local_steps=5,
-                    local_batch=50, local_lr=0.05, rounds=30)
+    cfg = presets.get("quickstart")
+    if args.rounds:
+        cfg = cfg.replace(rounds=args.rounds,
+                          eval_every=min(cfg.eval_every, args.rounds))
 
-    params = MNIST_MLP.init(jax.random.key(0))
-    loss_fn = cross_entropy_loss(MNIST_MLP)
-    state = init_state(params, fed)
-
-    rs = np.random.RandomState(0)
-    for r in range(fed.rounds):
-        chosen = rs.choice(fed.n_clients, fed.clients_per_round, replace=False)
-        batches = {}
-        for c in chosen:
-            xb, yb = client_batches(x, y, parts[int(c)], fed.local_batch,
-                                    fed.local_steps, seed=r * 100 + int(c))
-            batches[int(c)] = (jnp.asarray(xb), jnp.asarray(yb))
-        state = run_round(state, batches, loss_fn, fed, thgs, sa)
-        if (r + 1) % 5 == 0:
-            acc = accuracy(MNIST_MLP, state.params, xt, yt)
-            rec = state.comm_log[-1]
-            print(f"round {r+1:3d}  acc={acc:.3f}  "
-                  f"upload={rec.upload_bits/8/2**20:.2f} MiB "
+    def show(round_t, info):
+        if "acc" in info:
+            rec = info["record"]
+            print(f"round {round_t + 1:3d}  acc={info['acc']:.3f}  "
+                  f"upload={mib(rec.upload_bits):.2f} MiB "
                   f"({rec.compression:.1f}x smaller than FedAvg)")
 
-    total_up = sum(r.upload_bits for r in state.comm_log)
-    total_dense = sum(r.dense_upload_bits for r in state.comm_log)
-    print(f"\ntotal upload: {total_up/8/2**20:.1f} MiB vs FedAvg "
-          f"{total_dense/8/2**20:.1f} MiB -> {total_up/total_dense:.1%} "
+    res = Simulation(cfg).run(hooks=[show])
+
+    t = res.ledger.totals("paper")
+    print(f"\ntotal upload: {t['upload_mib']:.1f} MiB vs FedAvg "
+          f"{t['dense_upload_mib']:.1f} MiB -> {t['upload_vs_dense']:.1%} "
           f"(paper: 2.9%-18.9% at s=0.01)")
+    t = res.ledger.totals("tpu")
+    print(f"tpu accounting: {t['upload_mib']:.1f} MiB vs "
+          f"{t['dense_upload_mib']:.1f} MiB -> {t['upload_vs_dense']:.1%}")
 
 
 if __name__ == "__main__":

@@ -4,24 +4,45 @@ The paper counts a sparse element as 96 bit (64-bit float value + 32-bit index)
 and a dense element as 64 bit. On TPU we transmit float32 values (64 bit/element
 sparse, 32 bit dense); both accountings are reported so EXPERIMENTS.md can compare
 against the paper's Table 2 like-for-like.
+
+This module is the single source of truth for bits-on-the-wire: the reference
+server (core/fedavg.py) logs each round through :func:`round_record` /
+:func:`dense_round_record`, and the simulation ledger
+(repro/sim/ledger.py) replays the same formulas under both
+:data:`PAPER_BITS` and :data:`TPU_BITS`, so ledger totals and per-round
+records can never drift apart.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence
+from typing import Optional, Sequence
 
 from repro.core.types import CommRecord
 
 
 @dataclasses.dataclass(frozen=True)
 class BitModel:
+    """Wire format of one transmitted element.
+
+    Parameters
+    ----------
+    value_bits : int
+        Bits per transmitted value (64 in the paper's double-precision
+        accounting, 32 for the float32 TPU wire format).
+    index_bits : int
+        Bits per sparse index (int32 everywhere).
+    """
+
     value_bits: int = 64
     index_bits: int = 32
 
     def sparse_bits(self, k_total: int) -> int:
+        """Bits for ``k_total`` sparse (index, value) slots — Eq. 6's
+        per-element cost times the slot count."""
         return k_total * (self.value_bits + self.index_bits)
 
     def dense_bits(self, size: int) -> int:
+        """Bits for a dense tensor of ``size`` elements (values only)."""
         return size * self.value_bits
 
 
@@ -31,12 +52,36 @@ TPU_BITS = BitModel(value_bits=32, index_bits=32)     # f32 + int32
 
 def upload_bits_sparse(ks: Sequence[int], k_masks: Sequence[int], n_pairs: int,
                        bits: BitModel = PAPER_BITS) -> int:
-    """Per-client upload for one round: top-k slots + per-pair mask slots (Eq. 6)."""
+    """Per-client upload bits for one sparse round (Eq. 6).
+
+    One client transmits, per leaf, its ``k`` top-k slots plus ``k_mask``
+    mask-support slots toward each of its ``n_pairs`` active peers (the gated
+    self-pair slot is never on the wire), i.e.
+    ``sum(ks) + n_pairs * sum(k_masks)`` unified-stream slots in total.
+
+    Parameters
+    ----------
+    ks : sequence of int
+        Per-leaf top-k slot counts for this round.
+    k_masks : sequence of int
+        Per-leaf *per-pair* mask-support slot counts (zeros when secure
+        aggregation is off).
+    n_pairs : int
+        Active mask pairs per client — ``n_participants - 1``.
+    bits : BitModel
+        Wire format; defaults to the paper's 96-bit sparse element.
+
+    Returns
+    -------
+    int
+        Upload bits for one client.
+    """
     total_slots = sum(ks) + n_pairs * sum(k_masks)
     return bits.sparse_bits(total_slots)
 
 
 def upload_bits_dense(model_size: int, bits: BitModel = PAPER_BITS) -> int:
+    """Per-client dense (FedAvg baseline) upload bits: ``model_size`` values."""
     return bits.dense_bits(model_size)
 
 
@@ -47,9 +92,41 @@ def round_record(
     k_masks: Sequence[int],
     n_clients: int,
     bits: BitModel = PAPER_BITS,
+    *,
+    n_survivors: Optional[int] = None,
 ) -> CommRecord:
-    """Eq. 7-8 for one aggregation round: uploads are sparse, downloads dense."""
-    up = n_clients * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits)
+    """Eq. 7-8 accounting for one sparse aggregation round.
+
+    Uploads are sparse unified streams from the ``n_survivors`` clients whose
+    upload actually arrived (every participant still *transmits toward*
+    ``n_clients - 1`` peers — the pair count is agreed before dropout is
+    known); downloads are the dense model to every participant. The dense
+    baseline column charges every participant a full dense upload.
+
+    Parameters
+    ----------
+    round_t : int
+        Round index (stored in the record).
+    model_size : int
+        Dense parameter count of the model.
+    ks, k_masks : sequence of int
+        Per-leaf top-k and per-pair mask slot counts (see
+        :func:`upload_bits_sparse`).
+    n_clients : int
+        Participants in the round (selected cohort, ``C*K`` in Eq. 7).
+    bits : BitModel
+        Wire format for the logged totals.
+    n_survivors : int, optional
+        Clients whose upload arrived; defaults to ``n_clients`` (no dropout).
+
+    Returns
+    -------
+    CommRecord
+        Totals under ``bits`` plus the slot-level facts, so any other
+        accounting can be re-derived later (repro/sim/ledger.py).
+    """
+    surv = n_clients if n_survivors is None else n_survivors
+    up = surv * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits)
     down = n_clients * upload_bits_dense(model_size, bits)
     dense_up = n_clients * upload_bits_dense(model_size, bits)
     return CommRecord(
@@ -58,6 +135,36 @@ def round_record(
         download_bits=down,
         dense_upload_bits=dense_up,
         n_clients=n_clients,
+        n_survivors=surv,
+        model_size=model_size,
+        ks=tuple(int(k) for k in ks),
+        k_masks=tuple(int(k) for k in k_masks),
+    )
+
+
+def dense_round_record(
+    round_t: int,
+    model_size: int,
+    n_clients: int,
+    bits: BitModel = PAPER_BITS,
+    *,
+    n_survivors: Optional[int] = None,
+) -> CommRecord:
+    """Accounting for one dense (no-THGS) round: FedAvg/FedProx baselines.
+
+    Survivors upload the full dense delta; every participant downloads the
+    dense model. ``ks``/``k_masks`` stay empty, which is how downstream
+    consumers distinguish dense from sparse rounds.
+    """
+    surv = n_clients if n_survivors is None else n_survivors
+    return CommRecord(
+        round=round_t,
+        upload_bits=surv * upload_bits_dense(model_size, bits),
+        download_bits=n_clients * upload_bits_dense(model_size, bits),
+        dense_upload_bits=n_clients * upload_bits_dense(model_size, bits),
+        n_clients=n_clients,
+        n_survivors=surv,
+        model_size=model_size,
     )
 
 

@@ -215,7 +215,8 @@ def run_round(
         res_stacked = [jnp.stack([rl[i] for rl in res_per_client])
                        for i in range(len(leaves))]
 
-        agg_leaves, new_res_leaves, ks_acct = [], [], []
+        agg_leaves, new_res_leaves = [], []
+        ks_acct, k_masks_acct = [], []
         for leaf_id, (d_st, r_st, k, shape) in enumerate(
                 zip(delta_leaves, res_stacked, ks, leaf_shapes)):
             size = leaves[leaf_id].size
@@ -246,21 +247,19 @@ def run_round(
                     (r_st + d_st).astype(new_res.dtype))
             new_res_leaves.append(new_res)
             # wire accounting: the gated self-pair slot (zero value at a
-            # duplicated index) is not transmitted — k + (C-1)*k_mask slots,
-            # matching the paper's Eq. 6 payload
-            ks_acct.append(streams_b.k_total - (k_mask if use_masks else 0))
+            # duplicated index) is not transmitted — k + (C-1)*k_mask slots
+            # per leaf, matching the paper's Eq. 6 payload
+            ks_acct.append(min(int(k), size))
+            k_masks_acct.append(k_mask)
 
         agg = jax.tree_util.tree_unflatten(treedef, agg_leaves)
         for ci, c in enumerate(participants):
             state.residuals[c] = jax.tree_util.tree_unflatten(
                 treedef, [nr[ci] for nr in new_res_leaves])
-        rec = CommRecord(
-            round=state.round,
-            upload_bits=len(survivors) * bits.sparse_bits(sum(ks_acct)),
-            download_bits=len(participants) * bits.dense_bits(model_size),
-            dense_upload_bits=len(participants) * bits.dense_bits(model_size),
-            n_clients=len(participants),
-        )
+        rec = costs.round_record(
+            state.round, model_size, ks_acct, k_masks_acct,
+            n_clients=len(participants), bits=bits,
+            n_survivors=len(survivors))
     else:
         deltas = {c: jax.tree_util.tree_map(lambda x: x[ci], deltas_stacked)
                   for ci, c in enumerate(participants)}
@@ -288,13 +287,9 @@ def run_round(
             agg = jax.tree_util.tree_map(
                 lambda *xs: sum(xs) / len(xs), *[deltas[c] for c in survivors]
             )
-        rec = CommRecord(
-            round=state.round,
-            upload_bits=len(survivors) * bits.dense_bits(model_size),
-            download_bits=len(participants) * bits.dense_bits(model_size),
-            dense_upload_bits=len(participants) * bits.dense_bits(model_size),
-            n_clients=len(participants),
-        )
+        rec = costs.dense_round_record(
+            state.round, model_size, n_clients=len(participants), bits=bits,
+            n_survivors=len(survivors))
 
     for ci, c in enumerate(participants):
         state.losses[c] = losses_list[ci]

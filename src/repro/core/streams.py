@@ -346,12 +346,57 @@ def encode_leaf_batch(
     leaf_id: int | jax.Array = 0,
     weights: jax.Array | None = None,
 ) -> tuple[StreamBatch, jax.Array]:
-    """Jitted leaf-level entry: accumulate -> block view -> batched encode.
+    """Jitted leaf-level encode: accumulate -> block view -> batched encode.
 
-    Returns (streams, new_residuals [C, *leaf_shape]). One compiled program per
-    (leaf shape, k, k_mask) covers every client — this is what replaces the
-    seed's serial per-client ``encode_update`` loop. ``leaf_id`` is traced
-    (it only feeds fold_in), so same-shaped leaves share one executable.
+    The single entry point the reference server (core/fedavg.py) uses per
+    leaf and round. One compiled program per (leaf shape, ``k``, ``k_mask``)
+    covers every client — this replaced the seed's serial per-client
+    ``encode_update`` loop. ``leaf_id`` is traced (it only feeds ``fold_in``),
+    so same-shaped leaves share one executable; the time-varying ``k``
+    schedule is the only remaining re-specialization source (quantized by
+    ``THGSConfig.k_levels`` — see DESIGN.md §9 for the sim engine's
+    compile-once contract).
+
+    Parameters
+    ----------
+    updates : f32-castable[C, *leaf_shape]
+        Stacked client updates (local model deltas) for one leaf.
+    residuals : [C, *leaf_shape]
+        Stacked per-client error-feedback accumulators; the encode operates
+        on ``residuals + updates``.
+    k : int
+        Top-k slots per block (static; one value serves all clients).
+    nb, m, size : int
+        Block layout: ``nb`` blocks of length ``m`` covering the ``size``
+        -element leaf (``nb == 1, m == size`` is the flat single-host
+        protocol; see ``block_layout``).
+    selector : {'exact', 'sampled', 'local'}
+        Top-k selector (THGSConfig.selector).
+    sample_frac : float
+        Subsample fraction for ``selector='sampled'``.
+    pair_keys, pair_signs : [C, C] typed keys / f32[C, C], optional
+        Pairwise-mask key matrix and Bonawitz signs from
+        ``pair_key_matrix``; ``None`` encodes without secure aggregation.
+    k_mask : int
+        Mask-support slots per pair per block (Eq. 4); 0 disables masking.
+    mask_p, mask_q : float
+        Uniform mask support ``[p, p + q)`` (paper §3.2).
+    leaf_id : int or traced int
+        Folded into every pair key so leaves draw independent masks.
+    weights : f32[C], optional
+        Client-side aggregation weights applied to the gradient values
+        *before* masking (module docstring); None means uniform.
+
+    Returns
+    -------
+    streams : StreamBatch
+        ``indices`` int32[C, nb, k_total] global (``row*m + col``) indices and
+        ``values`` f32[C, nb, k_total], where ``k_total = k + C*k_mask``
+        (the gated self-pair slot is never counted on the wire — Eq. 6
+        accounting uses ``k + (C-1)*k_mask``).
+    new_residuals : [C, *leaf_shape]
+        Updated error feedback: transmitted positions zeroed, same dtype as
+        ``residuals``.
     """
     C = updates.shape[0]
     leaf_shape = updates.shape[1:]
@@ -466,7 +511,38 @@ def decode_leaf_batch(
 ) -> jax.Array:
     """Jitted server decode for one leaf: survivor-gated fused scatter-add,
     plus reconstructed-mask cancellation when ``alive`` marks dropouts.
-    Returns the dense f32[size] aggregate."""
+
+    Parameters
+    ----------
+    streams : StreamBatch
+        All clients' unified streams for the leaf, as produced by
+        ``encode_leaf_batch`` (global indices, leading client axis).
+    nb, m, size : int
+        Block layout the streams were encoded under; the dense buffer is
+        ``nb * m`` padded elements, truncated to ``size`` on return.
+    alive : bool[C], optional
+        Survivor gate: False rows' streams are excluded (their upload never
+        arrived). When given together with ``pair_keys``/``k_mask``, the
+        survivors' unpaired masks toward the dropped clients are regenerated
+        and cancelled (``dropout_cancel_streams`` — Bonawitz recovery).
+    weights : f32[C], optional
+        Server-side per-stream scaling. Only correct for protocols whose
+        masks cancel under it (uniform weighting); weighted FL applies
+        weights client-side at encode time instead (module docstring).
+    pair_keys, pair_signs, k_mask, mask_p, mask_q, leaf_id
+        The mask parameters the encode used; needed only for dropout
+        recovery.
+    use_pallas : bool, optional
+        Force the fused Pallas scatter kernel (TPU default) or the XLA
+        scatter fallback; ``None`` picks by backend.
+
+    Returns
+    -------
+    f32[size]
+        The dense aggregate of the surviving clients' weighted sparse
+        updates, masks cancelled. The caller normalizes by the survivors'
+        total weight (core/fedavg.py).
+    """
     extra = None
     if alive is not None and pair_keys is not None and k_mask > 0:
         extra = dropout_cancel_streams(

@@ -100,13 +100,27 @@ class FedConfig:
 
 @dataclasses.dataclass
 class CommRecord:
-    """Byte accounting for one round (Eq. 6-8)."""
+    """Bit accounting for one aggregation round (Eq. 6-8).
+
+    ``upload_bits``/``download_bits``/``dense_upload_bits`` are totals under
+    the ``BitModel`` the round was logged with (``costs.PAPER_BITS`` unless the
+    caller chose otherwise). The remaining fields are the *slot-level facts* of
+    the round — per-leaf top-k counts ``ks``, per-leaf per-pair mask slots
+    ``k_masks``, participant/survivor counts and the dense model size — from
+    which ``repro.sim.ledger.CommLedger`` re-derives the totals under any
+    accounting (64-bit paper elements vs 32-bit TPU wire format) without
+    re-running the round. ``ks`` is empty for dense (no-THGS) rounds.
+    """
 
     round: int = 0
     upload_bits: int = 0
     download_bits: int = 0
     dense_upload_bits: int = 0   # what FedAvg would have uploaded
     n_clients: int = 0
+    n_survivors: int = 0         # participants whose upload arrived
+    model_size: int = 0          # dense parameter count
+    ks: tuple = ()               # per-leaf top-k slots (sparse rounds only)
+    k_masks: tuple = ()          # per-leaf per-pair mask-support slots
 
     @property
     def compression(self) -> float:

@@ -1,0 +1,15 @@
+"""repro.sim — the config-driven multi-round federated simulation engine.
+
+The single driver for every paper-scale experiment (DESIGN.md §9): round
+scheduling + client sampling + dropout injection (sampler.py), the
+communication-cost ledger under both bit accountings (ledger.py), streaming
+eval hooks and checkpoint/resume (engine.py), named experiment presets
+(presets.py) and a CLI (``python -m repro.sim --preset table2_quick``).
+"""
+from repro.sim.config import SimConfig
+from repro.sim.engine import SimResult, Simulation, simulate
+from repro.sim.ledger import CommLedger, LedgerEntry, mib
+from repro.sim.sampler import ClientSampler
+
+__all__ = ["SimConfig", "SimResult", "Simulation", "simulate",
+           "CommLedger", "LedgerEntry", "mib", "ClientSampler"]

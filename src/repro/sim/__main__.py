@@ -1,0 +1,109 @@
+"""CLI for the simulation engine.
+
+    python -m repro.sim --preset table2_quick
+    python -m repro.sim --list
+    python -m repro.sim --preset quickstart --rounds 6 --out /tmp/run.json
+
+Runs the named preset (with any overrides), prints per-eval progress and the
+final ledger summary under both bit accountings, and writes the JSON ledger to
+``--out`` (or the preset's default path).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+from repro.sim import presets
+from repro.sim.engine import Simulation
+from repro.sim.ledger import mib
+
+
+def _progress_hook(round_t: int, info: dict) -> None:
+    if "acc" in info:
+        rec = info["record"]
+        drop = f" dropped={list(info['dropped'])}" if info["dropped"] else ""
+        print(f"round {round_t + 1:4d}  acc={info['acc']:.3f}  "
+              f"loss={info['loss']:.4f}  "
+              f"upload={mib(rec.upload_bits):.2f} MiB "
+              f"({rec.compression:.1f}x vs dense){drop}", flush=True)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.sim",
+        description="Run a named federated-simulation preset.")
+    ap.add_argument("--preset", default=None,
+                    help=f"one of: {', '.join(presets.names())}")
+    ap.add_argument("--list", action="store_true",
+                    help="list presets and exit")
+    ap.add_argument("--rounds", type=int, default=None)
+    ap.add_argument("--seed", type=int, default=None)
+    ap.add_argument("--dropout", type=float, default=None,
+                    help="override dropout_rate")
+    ap.add_argument("--ckpt-dir", default=None,
+                    help="enable checkpoint/resume in this directory")
+    ap.add_argument("--ckpt-every", type=int, default=None)
+    ap.add_argument("--out", default=None,
+                    help="JSON ledger path (default: the preset's out_json)")
+    ap.add_argument("--quick", action="store_true",
+                    help="shrink the run for CI smoke (3 rounds, small data)")
+    ap.add_argument("--no-resume", action="store_true",
+                    help="ignore existing checkpoints")
+    args = ap.parse_args(argv)
+
+    if args.list or not args.preset:
+        for name in presets.names():
+            cfg = presets.get(name)
+            mech = ("thgs+sa" if cfg.thgs and cfg.sa.enabled
+                    else "thgs" if cfg.thgs else "dense")
+            print(f"{name:22s} {cfg.model}/{cfg.dataset} "
+                  f"{cfg.partition:9s} rounds={cfg.rounds:<3d} "
+                  f"cohort={cfg.clients_per_round}/{cfg.n_clients} {mech}")
+        return 0 if args.list else 2
+
+    try:
+        cfg = presets.get(args.preset)
+    except KeyError as e:
+        print(f"error: {e.args[0]}", file=sys.stderr)
+        return 2
+    over = {}
+    if args.rounds is not None:
+        over["rounds"] = args.rounds
+    if args.seed is not None:
+        over["seed"] = args.seed
+    if args.dropout is not None:
+        over["dropout_rate"] = args.dropout
+    if args.ckpt_dir is not None:
+        over["ckpt_dir"] = args.ckpt_dir
+    if args.ckpt_every is not None:
+        over["ckpt_every"] = args.ckpt_every
+    if args.out is not None:
+        over["out_json"] = args.out
+    if args.quick:
+        over.setdefault("rounds", min(3, cfg.rounds))
+        over.setdefault("n_train", min(600, cfg.n_train))
+        over.setdefault("n_test", min(200, cfg.n_test))
+        over["eval_every"] = 1
+    cfg = cfg.replace(**over)
+
+    print(f"# preset={args.preset} model={cfg.model} dataset={cfg.dataset} "
+          f"partition={cfg.partition} rounds={cfg.rounds} "
+          f"cohort={cfg.clients_per_round}/{cfg.n_clients}", flush=True)
+    res = Simulation(cfg).run(resume=not args.no_resume,
+                              hooks=[_progress_hook])
+
+    for acct in ("paper", "tpu"):
+        t = res.ledger.totals(acct)
+        print(f"[{acct:5s}] upload {t['upload_mib']:9.2f} MiB vs dense "
+              f"{t['dense_upload_mib']:9.2f} MiB -> "
+              f"{t['upload_vs_dense']:6.1%} of FedAvg "
+              f"({t['compression_x']:.1f}x)")
+    print(f"final_acc={res.final_acc:.3f}  wall={res.wall_s:.1f}s")
+    if cfg.out_json:
+        path = res.to_json(cfg.out_json)
+        print(f"ledger written to {path}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,144 @@
+"""Simulation configuration (the one object that names an experiment).
+
+A :class:`SimConfig` fully determines a multi-round federated run: model,
+dataset + partition, federated protocol, THGS/secure-aggregation mechanisms,
+client sampling + dropout injection, evaluation cadence, checkpointing and
+output paths. Two runs from the same config and seed are bit-identical
+(sampling is counter-based per round, not sequential — see sampler.py), which
+is what makes checkpoint/resume and the EXPERIMENTS.md protocols reproducible.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+
+PARTITIONS = ("iid", "noniid", "dirichlet")
+SAMPLERS = ("uniform", "weighted")
+ACCOUNTINGS = ("paper", "tpu")
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    """Everything a `repro.sim.Simulation` needs, as one frozen record.
+
+    Parameters
+    ----------
+    name : str
+        Experiment name; stamped into results/ledger JSON.
+    model, dataset : str
+        Keys into ``models.paper_models.PAPER_MODELS`` / ``data.SPECS``.
+    partition : {'iid', 'noniid', 'dirichlet'}
+        Client data partition scheme; ``noniid`` is the paper's Non-IID-k
+        (``noniid_k`` labels per client), ``dirichlet`` uses
+        ``dirichlet_alpha``.
+    rounds, n_clients, clients_per_round, local_steps, local_batch,
+    local_lr, server_lr, algorithm, prox_mu
+        The §5 federated protocol (mirrors ``core.types.FedConfig``).
+    thgs : THGSConfig or None
+        ``None`` runs the dense FedAvg/FedProx baseline.
+    sa : SecureAggConfig
+        Sparse-mask secure aggregation settings.
+    sampler : {'uniform', 'weighted'}
+        Cohort sampling: uniform without replacement, or weighted by each
+        client's local data count.
+    weight_by_data_count : bool
+        Aggregate with per-client weights equal to local data counts
+        (client-side weighting — DESIGN.md §3); False averages uniformly.
+    dropout_rate : float
+        Per-round probability that a sampled client's upload is lost after
+        mask agreement (Bonawitz dropout). At least one client always
+        survives.
+    eval_every : int
+        Evaluate test accuracy every this many rounds.
+    accounting : {'paper', 'tpu'}
+        BitModel used for the round records logged by the server; the ledger
+        reports both regardless.
+    ckpt_dir : str, optional
+        Directory for checkpoint/resume through ``checkpoint.store``;
+        ``None`` disables checkpointing.
+    ckpt_every : int
+        Checkpoint cadence in rounds (0 = only implicit final state).
+    out_json : str, optional
+        Path the CLI writes the ledger/result JSON to.
+    """
+
+    name: str = "sim"
+    # model + data
+    model: str = "mnist_mlp"
+    dataset: str = "mnist"
+    partition: str = "iid"
+    noniid_k: int = 4
+    dirichlet_alpha: float = 0.5
+    n_train: int = 4000
+    n_test: int = 800
+    # federated protocol (paper §5)
+    rounds: int = 30
+    n_clients: int = 20
+    clients_per_round: int = 5
+    local_steps: int = 5
+    local_batch: int = 50
+    local_lr: float = 0.05
+    server_lr: float = 1.0
+    algorithm: str = "fedavg"
+    prox_mu: float = 0.0
+    # mechanisms
+    thgs: Optional[THGSConfig] = None
+    sa: SecureAggConfig = SecureAggConfig(enabled=False)
+    # scheduling
+    sampler: str = "uniform"
+    weight_by_data_count: bool = False
+    dropout_rate: float = 0.0
+    eval_every: int = 3
+    seed: int = 0
+    # accounting + I/O
+    accounting: str = "paper"
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 0
+    out_json: Optional[str] = None
+
+    def fed(self) -> FedConfig:
+        """The ``core``-layer federated config this simulation drives."""
+        return FedConfig(
+            n_clients=self.n_clients,
+            clients_per_round=self.clients_per_round,
+            local_steps=self.local_steps,
+            local_batch=self.local_batch,
+            local_lr=self.local_lr,
+            server_lr=self.server_lr,
+            prox_mu=self.prox_mu,
+            rounds=self.rounds,
+            algorithm=self.algorithm,
+        )
+
+    def validate(self) -> None:
+        if self.partition not in PARTITIONS:
+            raise ValueError(f"partition must be one of {PARTITIONS}, "
+                             f"got {self.partition!r}")
+        if self.sampler not in SAMPLERS:
+            raise ValueError(f"sampler must be one of {SAMPLERS}, "
+                             f"got {self.sampler!r}")
+        if self.accounting not in ACCOUNTINGS:
+            raise ValueError(f"accounting must be one of {ACCOUNTINGS}, "
+                             f"got {self.accounting!r}")
+        if not (1 <= self.clients_per_round <= self.n_clients):
+            raise ValueError("need 1 <= clients_per_round <= n_clients, got "
+                             f"{self.clients_per_round} vs {self.n_clients}")
+        if not (0.0 <= self.dropout_rate <= 1.0):
+            raise ValueError(f"dropout_rate in [0, 1], got {self.dropout_rate}")
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if self.algorithm not in ("fedavg", "fedprox"):
+            raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        if self.thgs is not None:
+            self.thgs.validate()
+
+    def replace(self, **kw) -> "SimConfig":
+        """A copy with fields overridden (presets -> CLI overrides)."""
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        """JSON-safe dict (nested mechanism configs flattened to dicts)."""
+        d = dataclasses.asdict(self)
+        return d

@@ -1,0 +1,278 @@
+"""The multi-round federated simulation engine.
+
+``Simulation`` owns everything `benchmarks/common.run_fl` used to improvise:
+data synthesis + partitioning, the per-round cohort schedule (sampler.py),
+dropout injection, driving ``core.fedavg.run_round``, the communication
+ledger (ledger.py), streaming eval/metrics hooks, and checkpoint/resume
+through ``checkpoint.store``.
+
+Compile-once contract (DESIGN.md §9)
+------------------------------------
+The round program is jitted per *shape signature*: cohort size, batch shapes
+and the per-leaf ``k``s. The scheduler therefore keeps the cohort shape fixed
+— every round samples exactly ``clients_per_round`` clients, and a dropped
+client still occupies its slot in the stacked batch (its upload is discarded
+server-side, which is exactly the Bonawitz semantics: local compute happened,
+the upload never arrived). With the cohort shape pinned, the only remaining
+re-trace source is the time-varying ``k`` schedule, which THGSConfig already
+quantizes to ``k_levels`` geometric levels. The seed driver re-traced whenever
+the cohort size wobbled; this engine makes the fixed shape a checked invariant.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import re
+import time
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import checkpoint
+from repro.core import costs
+from repro.core.fedavg import FederatedState, init_state, run_round
+from repro.data import (client_batches, dirichlet, iid, make_dataset,
+                        noniid_label_k)
+from repro.data.datasets import SPECS
+from repro.models.paper_models import PAPER_MODELS, accuracy, cross_entropy_loss
+from repro.sim.config import SimConfig
+from repro.sim.ledger import CommLedger
+from repro.sim.sampler import ClientSampler
+
+# hook(round_t, info) with info keys:
+#   state, cohort, dropped, loss, record, acc (only on eval rounds)
+RoundHook = Callable[[int, dict], None]
+
+
+@dataclasses.dataclass
+class SimResult:
+    """Outcome of one simulation: metric trajectories + the comm ledger."""
+
+    name: str
+    rounds: int
+    eval_every: int
+    accuracies: list          # test accuracy, one entry per eval point
+    losses: list              # federation-mean local loss, one per round
+    wall_s: float
+    ledger: CommLedger
+    config: dict
+
+    @property
+    def final_acc(self) -> float:
+        """Mean of the last three eval points (the Table 2 convergence acc)."""
+        return float(np.mean(self.accuracies[-3:])) if self.accuracies else 0.0
+
+    def rounds_to_reach(self, target_acc: float) -> Optional[int]:
+        """First round (1-indexed, eval-cadence resolution) whose test
+        accuracy reached ``target_acc``; None if never reached."""
+        for i, a in enumerate(self.accuracies):
+            if a >= target_acc:
+                return (i + 1) * max(1, self.eval_every)
+        return None
+
+    def upload_bits_to_reach(self, target_acc: float,
+                             accounting: str = "paper") -> Optional[int]:
+        """Cumulative upload bits until ``target_acc`` (Table 2's
+        rounds-to-target costing); None if the target was never reached."""
+        r = self.rounds_to_reach(target_acc)
+        if r is None:
+            return None
+        return self.ledger.upload_bits_through(r, accounting)
+
+    def summary(self) -> dict:
+        return {
+            "name": self.name,
+            "rounds": self.rounds,
+            "eval_every": self.eval_every,
+            "final_acc": self.final_acc,
+            "accuracies": [float(a) for a in self.accuracies],
+            "losses": [float(x) for x in self.losses],
+            "wall_s": self.wall_s,
+            "config": self.config,
+            "ledger": self.ledger.summary(),
+        }
+
+    def to_json(self, path: str) -> str:
+        return self.ledger.to_json(path, extra={
+            "name": self.name,
+            "rounds": self.rounds,
+            "eval_every": self.eval_every,
+            "final_acc": self.final_acc,
+            "accuracies": [float(a) for a in self.accuracies],
+            "losses": [float(x) for x in self.losses],
+            "wall_s": self.wall_s,
+            "config": self.config,
+        })
+
+
+class Simulation:
+    """Config-driven multi-round federated simulation (see module docstring).
+
+    Build once, ``run()`` to completion; ``run(resume=True)`` (the default)
+    picks up from the latest checkpoint in ``cfg.ckpt_dir`` when one exists.
+    """
+
+    def __init__(self, cfg: SimConfig):
+        cfg.validate()
+        self.cfg = cfg
+        self.model = PAPER_MODELS[cfg.model]
+        spec = SPECS[cfg.dataset]
+        self.x, self.y = make_dataset(spec, cfg.n_train, seed=cfg.seed)
+        self.xt, self.yt = make_dataset(spec, cfg.n_test, seed=cfg.seed + 1,
+                                        train=False)
+        if cfg.partition == "iid":
+            self.parts = iid(self.y, cfg.n_clients, seed=cfg.seed)
+        elif cfg.partition == "noniid":
+            self.parts = noniid_label_k(self.y, cfg.n_clients, cfg.noniid_k,
+                                        seed=cfg.seed)
+        else:
+            self.parts = dirichlet(self.y, cfg.n_clients,
+                                   cfg.dirichlet_alpha, seed=cfg.seed)
+        self.data_counts = {c: int(len(idx)) for c, idx in self.parts.items()}
+        self.sampler = ClientSampler(
+            cfg.n_clients, cfg.clients_per_round, mode=cfg.sampler,
+            weights=self.data_counts if cfg.sampler == "weighted" else None,
+            dropout_rate=cfg.dropout_rate, seed=cfg.seed)
+        self.fed = cfg.fed()
+        self.bits = (costs.PAPER_BITS if cfg.accounting == "paper"
+                     else costs.TPU_BITS)
+        self.loss_fn = cross_entropy_loss(self.model)
+        self.client_weights = (self.data_counts if cfg.weight_by_data_count
+                               else None)
+        self.ledger = CommLedger()
+
+    # ----------------------------------------------------------------- state
+    def _fresh_state(self) -> FederatedState:
+        params = self.model.init(jax.random.key(self.cfg.seed))
+        return init_state(params, self.fed)
+
+    def _batches_for(self, round_t: int, cohort: Sequence[int]) -> dict:
+        """Fixed-shape [steps, batch, ...] stacks for every cohort member.
+
+        Seeded by (seed, round, client): resume-safe and cohort-order
+        independent.
+        """
+        cfg = self.cfg
+        out = {}
+        for c in cohort:
+            xb, yb = client_batches(
+                self.x, self.y, self.parts[int(c)], cfg.local_batch,
+                cfg.local_steps,
+                seed=cfg.seed * 7919 + round_t * 1000 + int(c))
+            out[int(c)] = (jnp.asarray(xb), jnp.asarray(yb))
+        return out
+
+    # ------------------------------------------------------------ checkpoint
+    def _sidecar_path(self, step: int) -> str:
+        return os.path.join(self.cfg.ckpt_dir, f"sim_{step:08d}.json")
+
+    def _save_ckpt(self, round_done: int, state: FederatedState,
+                   accs: list, losses: list) -> None:
+        checkpoint.save(self.cfg.ckpt_dir, round_done,
+                        {"params": state.params,
+                         "residuals": state.residuals})
+        sidecar = {
+            "round": round_done,
+            "client_losses": {str(c): float(v)
+                              for c, v in state.losses.items()},
+            "accuracies": [float(a) for a in accs],
+            "losses": [float(x) for x in losses],
+            "ledger_entries": self.ledger.summary()["entries"],
+        }
+        with open(self._sidecar_path(round_done), "w") as f:
+            json.dump(sidecar, f)
+
+    def _try_resume(self, state: FederatedState,
+                    accs: list, losses: list) -> int:
+        """Restore the latest checkpoint; returns the round to start from."""
+        cfg = self.cfg
+        if not cfg.ckpt_dir or not os.path.isdir(cfg.ckpt_dir):
+            return 0
+        # newest (npz, sidecar)-consistent pair: a crash between the npz
+        # write and the sidecar write must not orphan the earlier good ones
+        steps = sorted(
+            (int(m.group(1)) for f in os.listdir(cfg.ckpt_dir)
+             if (m := re.match(r"step_(\d+)\.npz$", f))), reverse=True)
+        step = next((s for s in steps
+                     if os.path.exists(self._sidecar_path(s))), None)
+        if step is None:
+            return 0
+        if step > cfg.rounds:
+            raise ValueError(
+                f"checkpoint at round {step} > rounds={cfg.rounds}; "
+                "refusing to resume past the configured horizon")
+        side = self._sidecar_path(step)
+        tree = checkpoint.restore(
+            cfg.ckpt_dir, step,
+            like={"params": state.params, "residuals": state.residuals})
+        state.params = tree["params"]
+        state.residuals = tree["residuals"]
+        with open(side) as f:
+            meta = json.load(f)
+        state.losses = {int(c): float(v)
+                        for c, v in meta["client_losses"].items()}
+        state.round = step
+        accs[:] = meta["accuracies"]
+        losses[:] = meta["losses"]
+        self.ledger.entries = CommLedger.from_entry_dicts(
+            meta["ledger_entries"]).entries
+        return step
+
+    # ------------------------------------------------------------------- run
+    def run(self, *, resume: bool = True,
+            hooks: Sequence[RoundHook] = ()) -> SimResult:
+        cfg = self.cfg
+        # fresh ledger per run: calling run() twice must not double-count
+        # (and must not mutate a previously returned SimResult's ledger)
+        self.ledger = CommLedger()
+        state = self._fresh_state()
+        accs: list = []
+        losses: list = []
+        start = self._try_resume(state, accs, losses) if resume else 0
+        t0 = time.time()
+        for r in range(start, cfg.rounds):
+            cohort = self.sampler.cohort_for(r)
+            # the compile-once contract: the stacked shapes never change
+            assert len(cohort) == cfg.clients_per_round, (
+                "fixed-cohort contract violated: "
+                f"{len(cohort)} != {cfg.clients_per_round}")
+            dropped = self.sampler.dropouts_for(r, cohort)
+            batches = self._batches_for(r, cohort)
+            state = run_round(
+                state, batches, self.loss_fn, self.fed,
+                cfg.thgs, cfg.sa, bits=self.bits,
+                client_weights=self.client_weights, dropped=dropped)
+            rec = state.comm_log[-1]
+            self.ledger.record(rec)
+            loss = float(np.mean([state.losses[c] for c in batches]))
+            losses.append(loss)
+            info = {"state": state, "cohort": cohort, "dropped": dropped,
+                    "loss": loss, "record": rec}
+            if (r + 1) % max(1, cfg.eval_every) == 0:
+                acc = accuracy(self.model, state.params, self.xt, self.yt)
+                accs.append(acc)
+                info["acc"] = acc
+            if (cfg.ckpt_dir and cfg.ckpt_every
+                    and (r + 1) % cfg.ckpt_every == 0):
+                self._save_ckpt(r + 1, state, accs, losses)
+            for hook in hooks:
+                hook(r, info)
+        self.state = state
+        return SimResult(
+            name=cfg.name,
+            rounds=cfg.rounds,
+            eval_every=cfg.eval_every,
+            accuracies=accs,
+            losses=losses,
+            wall_s=time.time() - t0,
+            ledger=self.ledger,
+            config=cfg.to_dict(),
+        )
+
+
+def simulate(cfg: SimConfig, **run_kw) -> SimResult:
+    """One-call convenience: build the Simulation and run it."""
+    return Simulation(cfg).run(**run_kw)

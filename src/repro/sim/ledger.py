@@ -1,0 +1,184 @@
+"""The communication-cost ledger: per-round bits, both accountings, JSON.
+
+The server (core/fedavg.py) logs one ``CommRecord`` per round under a single
+``BitModel``. The ledger keeps the slot-level facts of those records — per-leaf
+top-k counts, per-pair mask slots, participant/survivor counts, model size —
+and replays ``core.costs``'s Eq. 6-8 formulas under *both* accountings
+(:data:`costs.PAPER_BITS` 96-bit sparse elements, :data:`costs.TPU_BITS`
+float32 wire format), so one run yields both the paper-comparable and the
+hardware-realistic Table 2 columns. ``CommLedger.totals() ==`` a hand-summed
+``costs.round_record`` sequence by construction; tests/test_sim.py pins it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, Optional, Sequence
+
+from repro.core import costs
+from repro.core.types import CommRecord
+
+ACCOUNTINGS = {"paper": costs.PAPER_BITS, "tpu": costs.TPU_BITS}
+
+
+def mib(bits: float) -> float:
+    """Bits -> MiB (the unit of the paper's Table 2 and our summaries)."""
+    return bits / 8 / 2**20
+
+
+@dataclasses.dataclass(frozen=True)
+class LedgerEntry:
+    """Slot-level facts of one round, independent of any BitModel.
+
+    ``ks``/``k_masks`` are the per-leaf top-k and per-pair mask slot counts of
+    a sparse round (empty for dense rounds); bits under a given accounting are
+    *derived*, never stored, so the two accountings cannot disagree with the
+    facts.
+    """
+
+    round: int
+    n_clients: int
+    n_survivors: int
+    model_size: int
+    ks: tuple
+    k_masks: tuple
+
+    @property
+    def sparse(self) -> bool:
+        return bool(self.ks)
+
+    def upload_bits(self, bits: costs.BitModel) -> int:
+        """Round upload total (Eq. 6 x survivors, or dense x survivors)."""
+        if self.sparse:
+            return self.n_survivors * costs.upload_bits_sparse(
+                self.ks, self.k_masks, max(self.n_clients - 1, 0), bits)
+        return self.n_survivors * costs.upload_bits_dense(
+            self.model_size, bits)
+
+    def download_bits(self, bits: costs.BitModel) -> int:
+        """Dense model broadcast to every participant (Eq. 8)."""
+        return self.n_clients * costs.upload_bits_dense(self.model_size, bits)
+
+    def dense_upload_bits(self, bits: costs.BitModel) -> int:
+        """What dense FedAvg would have uploaded for the same cohort."""
+        return self.n_clients * costs.upload_bits_dense(self.model_size, bits)
+
+    @classmethod
+    def from_record(cls, rec: CommRecord) -> "LedgerEntry":
+        return cls(round=rec.round, n_clients=rec.n_clients,
+                   n_survivors=rec.n_survivors or rec.n_clients,
+                   model_size=rec.model_size,
+                   ks=tuple(rec.ks), k_masks=tuple(rec.k_masks))
+
+
+class CommLedger:
+    """Accumulates per-round communication and emits run-level summaries.
+
+    Usage: feed it every round's ``CommRecord`` (``record()`` or
+    ``extend()``), then read ``totals(accounting)``, ``summary()`` or
+    serialize with ``to_json()``. ``rounds_to_target`` utilities live on
+    ``engine.SimResult`` which also owns the accuracy trajectory.
+    """
+
+    def __init__(self, entries: Optional[Sequence[LedgerEntry]] = None):
+        self.entries: list[LedgerEntry] = list(entries or [])
+
+    # ------------------------------------------------------------- ingestion
+    def record(self, rec: CommRecord) -> LedgerEntry:
+        if rec.model_size <= 0:
+            raise ValueError(
+                "CommRecord carries no slot-level facts (model_size == 0); "
+                "was it built by costs.round_record/dense_round_record?")
+        entry = LedgerEntry.from_record(rec)
+        self.entries.append(entry)
+        return entry
+
+    def extend(self, recs: Iterable[CommRecord]) -> None:
+        for rec in recs:
+            self.record(rec)
+
+    # --------------------------------------------------------------- queries
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def totals(self, accounting: str = "paper") -> dict:
+        """Run totals under one accounting.
+
+        Returns a dict with ``upload_bits``, ``download_bits``,
+        ``dense_upload_bits`` (the FedAvg baseline for the same cohorts),
+        ``upload_vs_dense`` (the paper's headline ratio; 2.9%-18.9% at
+        s = 0.01) and ``compression_x`` (its inverse).
+        """
+        bits = ACCOUNTINGS[accounting]
+        up = sum(e.upload_bits(bits) for e in self.entries)
+        down = sum(e.download_bits(bits) for e in self.entries)
+        dense = sum(e.dense_upload_bits(bits) for e in self.entries)
+        return {
+            "accounting": accounting,
+            "rounds": len(self.entries),
+            "upload_bits": up,
+            "download_bits": down,
+            "dense_upload_bits": dense,
+            "upload_mib": mib(up),
+            "dense_upload_mib": mib(dense),
+            "upload_vs_dense": up / dense if dense else 0.0,
+            "compression_x": dense / up if up else 0.0,
+        }
+
+    def upload_bits_through(self, n_rounds: int,
+                            accounting: str = "paper") -> int:
+        """Cumulative upload bits over the first ``n_rounds`` rounds (the
+        rounds-to-target-accuracy costing of Table 2)."""
+        bits = ACCOUNTINGS[accounting]
+        return sum(e.upload_bits(bits) for e in self.entries[:n_rounds])
+
+    def per_round(self, accounting: str = "paper") -> list[dict]:
+        bits = ACCOUNTINGS[accounting]
+        return [
+            {
+                "round": e.round,
+                "n_clients": e.n_clients,
+                "n_survivors": e.n_survivors,
+                "sparse": e.sparse,
+                "upload_bits": e.upload_bits(bits),
+                "download_bits": e.download_bits(bits),
+                "dense_upload_bits": e.dense_upload_bits(bits),
+            }
+            for e in self.entries
+        ]
+
+    def summary(self) -> dict:
+        """Both accountings side by side, plus the raw slot facts."""
+        return {
+            "paper": self.totals("paper"),
+            "tpu": self.totals("tpu"),
+            "entries": [dataclasses.asdict(e) for e in self.entries],
+        }
+
+    # ----------------------------------------------------------------- (de)io
+    def to_json(self, path: str, *, extra: Optional[dict] = None) -> str:
+        """Serialize the ledger (and optional run metadata) for the benchmark
+        tables; returns the path written."""
+        payload = {"ledger": self.summary()}
+        if extra:
+            payload.update(extra)
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(payload, f, indent=2, default=float)
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def from_entry_dicts(cls, dicts: Sequence[dict]) -> "CommLedger":
+        """Rebuild from ``summary()['entries']`` (checkpoint resume path)."""
+        return cls([LedgerEntry(round=int(d["round"]),
+                                n_clients=int(d["n_clients"]),
+                                n_survivors=int(d["n_survivors"]),
+                                model_size=int(d["model_size"]),
+                                ks=tuple(int(k) for k in d["ks"]),
+                                k_masks=tuple(int(k) for k in d["k_masks"]))
+                    for d in dicts])

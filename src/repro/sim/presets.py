@@ -1,0 +1,79 @@
+"""Named experiment presets for ``python -m repro.sim``.
+
+Each preset is a complete :class:`~repro.sim.config.SimConfig`; the CLI (and
+any caller) can override fields with ``preset.replace(...)``. The *protocols*
+match EXPERIMENTS.md: ``*_quick`` variants shrink rounds/data for CI, the
+unsuffixed ones are the paper-scale (CPU-reduced) runs the tables quote.
+"""
+from __future__ import annotations
+
+from repro.core.types import SecureAggConfig, THGSConfig
+from repro.sim.config import SimConfig
+
+# The paper's mechanism settings used across Table 2 (s = 0.01 regime).
+_THGS = THGSConfig(s0=0.05, alpha=0.9, s_min=0.01)
+_SA = SecureAggConfig(mask_ratio=0.01)
+
+
+def _table2(quick: bool) -> dict:
+    """The Table 2 protocol (Non-IID-4, 10 clients, 5 per round)."""
+    return dict(
+        partition="noniid", noniid_k=4, n_clients=10, clients_per_round=5,
+        rounds=12 if quick else 28, n_train=1500 if quick else 4000,
+        n_test=400, eval_every=2, local_steps=5, local_batch=50,
+        local_lr=0.05)
+
+
+PRESETS: dict[str, SimConfig] = {
+    # the quickstart example: THGS + sparse-mask SA end to end
+    "quickstart": SimConfig(
+        name="quickstart", partition="noniid", noniid_k=4,
+        n_clients=10, clients_per_round=5, rounds=30, n_train=4000,
+        n_test=800, eval_every=5, thgs=_THGS, sa=_SA),
+    # Table 2 "ours" arm (the headline 2.9%-18.9% upload ratio)
+    "table2_quick": SimConfig(
+        name="table2_quick", thgs=_THGS, sa=_SA,
+        out_json="experiments/sim/table2_quick.json", **_table2(True)),
+    "table2": SimConfig(
+        name="table2", thgs=_THGS, sa=_SA,
+        out_json="experiments/sim/table2.json", **_table2(False)),
+    # Table 2 dense baselines, for side-by-side ledgers
+    "table2_fedavg_quick": SimConfig(
+        name="table2_fedavg_quick", thgs=None,
+        sa=SecureAggConfig(enabled=False),
+        out_json="experiments/sim/table2_fedavg_quick.json", **_table2(True)),
+    # Fig. 1 single arm: flat s = 0.01, no SA, IID
+    "fig1_s001_quick": SimConfig(
+        name="fig1_s001_quick", partition="iid", n_clients=10,
+        clients_per_round=5, rounds=10, n_train=1200, n_test=400,
+        eval_every=2, sa=SecureAggConfig(enabled=False),
+        thgs=THGSConfig(s0=0.01, alpha=1.0, s_min=0.01, time_varying=False),
+        out_json="experiments/sim/fig1_s001_quick.json"),
+    # dropout + weighted-cohort stress: exercises Bonawitz recovery and
+    # data-count sampling/weighting in one run
+    "dropout_quick": SimConfig(
+        name="dropout_quick", partition="noniid", noniid_k=4, n_clients=12,
+        clients_per_round=5, rounds=8, n_train=1200, n_test=400,
+        eval_every=2, thgs=_THGS, sa=_SA, sampler="weighted",
+        weight_by_data_count=True, dropout_rate=0.2,
+        out_json="experiments/sim/dropout_quick.json"),
+    # tiny smoke config for tests/CI plumbing checks (~seconds)
+    "ci_smoke": SimConfig(
+        name="ci_smoke", partition="noniid", noniid_k=4, n_clients=6,
+        clients_per_round=4, rounds=3, n_train=400, n_test=200,
+        local_steps=2, local_batch=16, eval_every=1, thgs=_THGS, sa=_SA,
+        out_json="experiments/sim/ci_smoke.json"),
+}
+
+
+def names() -> list[str]:
+    return sorted(PRESETS)
+
+
+def get(name: str) -> SimConfig:
+    try:
+        return PRESETS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown preset {name!r}; available: {', '.join(names())}"
+        ) from None

@@ -1,0 +1,33 @@
+"""Dead-link check over the markdown docs: every relative link/image target
+in the repo-root *.md files must exist in the tree."""
+import re
+from pathlib import Path
+
+import pytest
+
+ROOT = Path(__file__).resolve().parents[1]
+DOCS = sorted(ROOT.glob("*.md"))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+_SKIP_SCHEMES = ("http://", "https://", "mailto:", "#")
+
+
+def _relative_targets(text):
+    for m in _LINK.finditer(text):
+        target = m.group(1)
+        if target.startswith(_SKIP_SCHEMES):
+            continue
+        yield target.split("#", 1)[0]
+
+
+@pytest.mark.parametrize("doc", DOCS, ids=[d.name for d in DOCS])
+def test_markdown_relative_links_resolve(doc):
+    missing = [t for t in _relative_targets(doc.read_text())
+               if t and not (doc.parent / t).exists()]
+    assert not missing, f"{doc.name} has dead links: {missing}"
+
+
+def test_docs_exist():
+    # the docs the code/docstrings point at must be present
+    for name in ("README.md", "EXPERIMENTS.md", "DESIGN.md", "ROADMAP.md"):
+        assert (ROOT / name).exists(), name

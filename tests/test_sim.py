@@ -1,0 +1,226 @@
+"""The simulation engine: sampler determinism, ledger exactness (Eq. 6-8),
+end-to-end runs, checkpoint/resume (DESIGN.md §9)."""
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs, schedules
+from repro.core.fedavg import init_state, run_round
+from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+from repro.sim import (CommLedger, ClientSampler, SimConfig, Simulation,
+                       presets)
+
+
+# ------------------------------------------------------------------- sampler
+def test_sampler_deterministic_and_fixed_cohort():
+    a = ClientSampler(20, 5, dropout_rate=0.3, seed=7)
+    b = ClientSampler(20, 5, dropout_rate=0.3, seed=7)
+    seen = set()
+    for t in range(12):
+        ca, cb = a.cohort_for(t), b.cohort_for(t)
+        np.testing.assert_array_equal(ca, cb)          # same seed -> same trace
+        assert len(ca) == 5 and len(set(ca.tolist())) == 5
+        assert all(0 <= c < 20 for c in ca)
+        assert a.dropouts_for(t, ca) == b.dropouts_for(t, cb)
+        seen.add(tuple(ca.tolist()))
+    assert len(seen) > 1                               # rounds actually differ
+    c = ClientSampler(20, 5, dropout_rate=0.3, seed=8)
+    assert any(tuple(c.cohort_for(t).tolist()) not in seen for t in range(12))
+
+
+def test_sampler_resume_invariance():
+    # counter-based draws: round t's cohort does not depend on whether
+    # earlier rounds were sampled from this instance
+    a = ClientSampler(10, 3, seed=3)
+    for t in range(6):
+        a.cohort_for(t)
+    b = ClientSampler(10, 3, seed=3)
+    np.testing.assert_array_equal(a.cohort_for(6), b.cohort_for(6))
+
+
+def test_sampler_weighted_bias():
+    weights = {c: (1000.0 if c == 0 else 1.0) for c in range(10)}
+    s = ClientSampler(10, 3, mode="weighted", weights=weights, seed=0)
+    hits = sum(0 in s.cohort_for(t) for t in range(30))
+    assert hits >= 28                                  # ~always sampled
+
+
+def test_sampler_dropout_keeps_one_survivor():
+    s = ClientSampler(8, 4, dropout_rate=1.0, seed=1)
+    for t in range(5):
+        cohort = s.cohort_for(t)
+        dropped = s.dropouts_for(t, cohort)
+        assert len(dropped) == len(cohort) - 1         # one always survives
+
+
+# -------------------------------------------------------------------- ledger
+def _linreg_model(dim):
+    params = {"b": jnp.zeros((1,)), "w": jnp.zeros((dim, 1))}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] + p["b"] - y) ** 2)
+
+    return params, loss_fn
+
+
+def test_ledger_totals_match_round_record_sum():
+    """CommLedger totals == a hand-computed costs.round_record sum over a
+    scripted 3-round run, including a round with a dropped client; the
+    sparse/dense ratio matches Eq. 6-8 exactly under both accountings."""
+    dim, C = 120, 4
+    params, loss_fn = _linreg_model(dim)
+    thgs = THGSConfig(s0=0.2, alpha=0.8, s_min=0.05, time_varying=False)
+    sa = SecureAggConfig(mask_ratio=0.1)
+    fed = FedConfig(n_clients=C, clients_per_round=C, local_steps=2,
+                    local_batch=8, local_lr=0.01, rounds=3)
+    st = init_state(params, fed)
+    key = jax.random.key(0)
+    dropped_per_round = [(), (), (2,)]
+    for r in range(3):
+        batches = {}
+        for c in range(C):
+            k = jax.random.fold_in(key, r * 100 + c)
+            x = jax.random.normal(k, (2, 8, dim))
+            batches[c] = (x, x @ jnp.ones((dim, 1)) + 0.1)
+        st = run_round(st, batches, loss_fn, fed, thgs, sa,
+                       dropped=dropped_per_round[r])
+
+    ledger = CommLedger()
+    ledger.extend(st.comm_log)
+    assert len(ledger) == 3
+
+    # hand-computed expectation straight from Eq. 6-8 (core/costs)
+    leaves = jax.tree_util.tree_leaves(params)
+    sizes = [x.size for x in leaves]
+    model_size = sum(sizes)
+    ks = schedules.leaf_ks(thgs, sizes)
+    k_masks = [sa.k_mask_for(s, C) for s in sizes]
+    for acct, bits in (("paper", costs.PAPER_BITS), ("tpu", costs.TPU_BITS)):
+        expect = [costs.round_record(r, model_size, ks, k_masks, C, bits,
+                                     n_survivors=C - len(dropped_per_round[r]))
+                  for r in range(3)]
+        t = ledger.totals(acct)
+        assert t["upload_bits"] == sum(e.upload_bits for e in expect)
+        assert t["download_bits"] == sum(e.download_bits for e in expect)
+        assert t["dense_upload_bits"] == sum(e.dense_upload_bits
+                                             for e in expect)
+        # the reported ratio IS the Eq. 6-8 quotient, exactly
+        assert t["upload_vs_dense"] == (
+            sum(e.upload_bits for e in expect)
+            / sum(e.dense_upload_bits for e in expect))
+    # the round with a dropped client uploads strictly less
+    e0, e2 = ledger.entries[0], ledger.entries[2]
+    assert e2.n_survivors == C - 1
+    assert e2.upload_bits(costs.PAPER_BITS) < e0.upload_bits(costs.PAPER_BITS)
+    # slot facts recorded faithfully
+    assert list(e0.ks) == ks and list(e0.k_masks) == k_masks
+    # what the server logged is what the ledger re-derives
+    for rec, e in zip(st.comm_log, ledger.entries):
+        assert rec.upload_bits == e.upload_bits(costs.PAPER_BITS)
+
+
+def test_ledger_dense_rounds_and_rejects_factless_records():
+    from repro.core.types import CommRecord
+
+    rec = costs.dense_round_record(0, 1000, n_clients=5, n_survivors=4)
+    led = CommLedger()
+    e = led.record(rec)
+    assert not e.sparse
+    assert e.upload_bits(costs.PAPER_BITS) == 4 * 1000 * 64
+    assert e.dense_upload_bits(costs.PAPER_BITS) == 5 * 1000 * 64
+    with pytest.raises(ValueError):
+        led.record(CommRecord(round=1, upload_bits=123))
+
+
+# -------------------------------------------------------------------- engine
+_TINY = SimConfig(
+    name="tiny", partition="noniid", noniid_k=4, n_clients=5,
+    clients_per_round=3, rounds=4, n_train=300, n_test=120,
+    local_steps=2, local_batch=8, eval_every=1,
+    thgs=THGSConfig(s0=0.1, alpha=0.9, s_min=0.02),
+    sa=SecureAggConfig(mask_ratio=0.02), dropout_rate=0.25, seed=3)
+
+
+def test_engine_end_to_end_writes_ledger_json(tmp_path):
+    res = Simulation(_TINY).run()
+    assert len(res.ledger) == _TINY.rounds
+    assert len(res.accuracies) == _TINY.rounds          # eval_every=1
+    assert res.ledger.totals("paper")["compression_x"] > 1.0
+    path = res.to_json(str(tmp_path / "ledger.json"))
+    data = json.loads(open(path).read())
+    assert data["name"] == "tiny"
+    assert len(data["ledger"]["entries"]) == _TINY.rounds
+    assert (data["ledger"]["paper"]["upload_bits"]
+            == res.ledger.totals("paper")["upload_bits"])
+    assert data["config"]["thgs"]["s0"] == 0.1
+
+
+def test_engine_checkpoint_resume_replays_identically(tmp_path):
+    # NB: the interrupted leg must run under the SAME rounds horizon — Eq. 2's
+    # time-varying factor is (alpha + beta - t/T), so truncating T would
+    # change the k schedule, not just stop early.
+    ck = str(tmp_path / "ck")
+    cfg = _TINY.replace(ckpt_dir=ck, ckpt_every=1)
+
+    class _Killed(Exception):
+        pass
+
+    def die_after_round_1(r, info):
+        if r == 1:
+            raise _Killed
+
+    with pytest.raises(_Killed):
+        Simulation(cfg).run(hooks=[die_after_round_1])
+    # resume from the round-2 checkpoint and finish
+    resumed = Simulation(cfg).run()
+    # ...and compare against an uninterrupted run
+    full = Simulation(_TINY).run()
+    assert [e == f for e, f in zip(resumed.ledger.entries,
+                                   full.ledger.entries)] == [True] * 4
+    np.testing.assert_allclose(resumed.accuracies, full.accuracies, atol=0)
+    np.testing.assert_allclose(resumed.losses, full.losses, rtol=1e-6)
+
+
+def test_engine_run_twice_is_idempotent():
+    sim = Simulation(_TINY.replace(rounds=2))
+    r1 = sim.run()
+    n1 = len(r1.ledger)
+    r2 = sim.run()
+    assert len(r2.ledger) == 2 and n1 == 2     # no double-counting
+    assert r1.ledger is not r2.ledger          # r1's result stays frozen
+
+
+def test_engine_resume_skips_orphaned_checkpoint(tmp_path):
+    import os
+
+    ck = str(tmp_path / "ck")
+    cfg = _TINY.replace(rounds=2, ckpt_dir=ck, ckpt_every=1)
+    full = Simulation(cfg).run()
+    # simulate a crash between the step-2 npz write and its sidecar write
+    os.remove(ck + "/sim_00000002.json")
+    resumed = Simulation(cfg).run()            # resumes from step 1
+    assert len(resumed.ledger) == 2
+    assert resumed.ledger.entries == full.ledger.entries
+    np.testing.assert_allclose(resumed.losses, full.losses, rtol=1e-6)
+
+
+def test_engine_weighted_aggregation_runs():
+    cfg = _TINY.replace(rounds=2, sampler="weighted",
+                        weight_by_data_count=True, dropout_rate=0.0)
+    res = Simulation(cfg).run()
+    assert len(res.ledger) == 2 and res.losses[-1] < res.losses[0] * 5
+
+
+# ------------------------------------------------------------------- presets
+def test_presets_validate():
+    for name in presets.names():
+        cfg = presets.get(name)
+        cfg.validate()
+        assert cfg.fed().clients_per_round == cfg.clients_per_round
+    with pytest.raises(KeyError):
+        presets.get("nope")
+    assert presets.get("table2_quick").out_json
