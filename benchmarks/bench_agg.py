@@ -58,12 +58,14 @@ def _one_size(size: int, n_clients: int, reps: int):
     grads = jax.random.normal(key, (n_clients, size))
     residuals = jnp.zeros_like(grads)
     k_mask = sa.k_mask_for(size, n_clients)
-    pair_keys, pair_signs = streams.pair_key_matrix(sa, participants, 0)
+    # the production data plane: counter-based pair seeds (repro/secagg),
+    # not the legacy jax.random pair_keys path
+    pair_seeds, pair_signs = streams.pair_seed_matrix(sa, participants, 0)
 
     def batched_round():
         st, _ = streams.encode_leaf_batch(
             grads, residuals, k=k, nb=1, m=size, size=size,
-            pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
+            pair_seeds=pair_seeds, pair_signs=pair_signs, k_mask=k_mask,
             mask_p=sa.p, mask_q=sa.q, leaf_id=0)
         return streams.decode_leaf_batch(
             st, nb=1, m=size, size=size).block_until_ready()

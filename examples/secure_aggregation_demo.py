@@ -1,13 +1,14 @@
 """Secure-aggregation walkthrough: what the server sees, and why masks cancel.
 
 Reproduces the paper's §4 safety analysis empirically on the batched stream
-engine (core/streams.py): two banks' sparsified, masked model updates are
-encoded in ONE vmapped program and decoded with ONE fused scatter-add; the
-demo shows (1) the server's view of each individual update is masked at the
-mask-support positions, (2) the aggregate is exact, (3) when a third bank
-drops mid-round the server reconstructs and cancels the survivors' unpaired
-masks (Bonawitz recovery), and (4) the dense Bonawitz baseline costs the full
-vector while the sparse scheme moves only top-k ∪ mask-support.
+engine (core/streams.py) driven by the repro/secagg round protocol: three
+banks run the Bonawitz phase sequence (DH key agreement, Shamir key sharing,
+masked upload, unmasking); the demo shows (1) the server's view of each
+individual update is masked at the mask-support positions, (2) the aggregate
+is exact, (3) when a bank drops mid-round the server reconstructs its DH key
+from the survivors' Shamir shares and cancels the unpaired masks, and (4) the
+dense Bonawitz baseline costs the full vector while the sparse scheme moves
+only top-k ∪ mask-support plus a few control-plane shares.
 
 Run:  PYTHONPATH=src python examples/secure_aggregation_demo.py
 """
@@ -19,6 +20,7 @@ from repro.core import streams
 from repro.core.costs import PAPER_BITS
 from repro.core.masks import dh_agree
 from repro.core.types import SecureAggConfig
+from repro.secagg import RoundProtocol
 
 def main():
     n = 4096
@@ -28,20 +30,25 @@ def main():
     C = len(banks)
     k_mask = sa.k_mask_for(n, C)
 
-    print("1. DH agreement (control plane, once per federation):")
-    print(f"   bank0<->bank1 shared secret: {dh_agree(sa.seed, 0, 1):#x} "
-          f"(== {dh_agree(sa.seed, 1, 0):#x} from the other side)\n")
+    print("1. round protocol setup (control plane):")
+    print(f"   DH: bank0<->bank1 shared secret {dh_agree(sa.seed, 0, 1):#x} "
+          f"(== {dh_agree(sa.seed, 1, 0):#x} from the other side)")
+    proto = RoundProtocol.setup(sa, banks, round_t=0)
+    print(f"   Shamir: each bank splits its key into {C} shares, "
+          f"threshold t={proto.t} ({proto.n_phase1_shares} shares cross "
+          f"the wire)\n")
 
     key = jax.random.key(7)
     grads = jnp.stack([jax.random.normal(jax.random.fold_in(key, b), (n,))
                        for b in banks])
     residuals = jnp.zeros_like(grads)
-    pair_keys, pair_signs = streams.pair_key_matrix(sa, banks, round_t=0)
+    pair_seeds, pair_signs = proto.pair_seed_matrix()
 
-    # one jitted program encodes every bank: top-k ∪ mask-support streams
+    # one jitted program encodes every bank: top-k ∪ mask-support streams,
+    # all pair masks generated counter-based in one fused pass
     st, new_res = streams.encode_leaf_batch(
         grads, residuals, k=k, nb=1, m=n, size=n,
-        pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
+        pair_seeds=pair_seeds, pair_signs=pair_signs, k_mask=k_mask,
         mask_p=sa.p, mask_q=sa.q, leaf_id=0)
 
     print("2. what the SERVER sees from bank0 (one leaf):")
@@ -61,29 +68,39 @@ def main():
     err = float(jnp.max(jnp.abs(dense - expected)))
     print(f"3. aggregate exactness: max |masked_sum - true_sparse_sum| = {err:.2e}")
 
-    # bank2 drops after mask agreement: the server regenerates the survivors'
-    # pair masks toward it and subtracts them (Bonawitz dropout recovery)
+    # bank2 drops after mask agreement: the survivors hand the server their
+    # Shamir shares of bank2's key; the server reconstructs it, re-derives
+    # the pair seeds and subtracts the unpaired masks (Bonawitz recovery)
     alive = jnp.array([True, True, False])
+    recovered_seeds = proto.recover_seeds(survivors=[0, 1], dropped=[2])
     dense_drop = streams.decode_leaf_batch(
         st, nb=1, m=n, size=n, alive=alive,
-        pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
+        pair_seeds=recovered_seeds, pair_signs=pair_signs, k_mask=k_mask,
         mask_p=sa.p, mask_q=sa.q, leaf_id=0)
     expected_drop = ((grads - new_res) * alive[:, None]).sum(0)
     err_drop = float(jnp.max(jnp.abs(dense_drop - expected_drop)))
     no_recovery = float(jnp.max(jnp.abs(
         streams.decode_leaf_batch(st, nb=1, m=n, size=n, alive=alive)
         - expected_drop)))
+    n_rec = proto.n_recovery_shares(1)
     print(f"4. bank2 drops: survivor sum error {no_recovery:.2f} without "
-          f"recovery -> {err_drop:.2e} with reconstructed-mask cancellation")
+          f"recovery -> {err_drop:.2e} after reconstructing its key from "
+          f"{n_rec} survivor shares")
 
     # wire payload: the gated self-pair slot (zero value, duplicated index)
-    # is not transmitted -> k + (C-1)*k_mask slots per client (Eq. 6)
+    # is not transmitted -> k + (C-1)*k_mask slots per client (Eq. 6).
+    # All three arms are whole-cohort uploads for the round (C banks'
+    # gradients, all C·(C-1) phase-1 shares plus the recovery shares bank2's
+    # drop just cost) so the ratio compares like scopes.
     k_wire = st.k_total - k_mask
-    sparse_bits = 2 * PAPER_BITS.sparse_bits(k_wire)
-    dense_bits = 2 * PAPER_BITS.dense_bits(n)
-    print(f"\n5. communication: sparse+masked = {sparse_bits/8:.0f} B, "
+    sparse_bits = C * PAPER_BITS.sparse_bits(k_wire)
+    share_bits = ((proto.n_phase1_shares + proto.n_recovery_shares(1))
+                  * PAPER_BITS.share_bits())
+    dense_bits = C * PAPER_BITS.dense_bits(n)
+    print(f"\n5. communication: sparse+masked = {sparse_bits/8:.0f} B "
+          f"(+ {share_bits/8:.0f} B Shamir shares), "
           f"dense Bonawitz = {dense_bits/8:.0f} B "
-          f"-> {dense_bits/sparse_bits:.1f}x reduction")
+          f"-> {dense_bits/(sparse_bits + share_bits):.1f}x reduction")
 
 
 if __name__ == "__main__":

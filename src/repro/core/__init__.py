@@ -10,7 +10,8 @@ from repro.core.types import (
 )
 from repro.core.schedules import layer_rates, leaf_ks, round_rate
 from repro.core.sparsify import densify, first_occurrence_mask, member_of, sparsify_leaf
-from repro.core.masks import client_masks, dh_agree, pair_mask
+from repro.core.masks import (client_masks, dh_agree, dh_private, dh_public,
+                              pair_mask, pair_seed)
 from repro.core.secure_agg import (
     aggregate_streams,
     dense_masked_update,
@@ -22,8 +23,10 @@ from repro.core.fedavg import (FederatedState, batched_client_update,
 from repro.core import costs
 from repro.core import streams
 from repro.core.streams import (StreamBatch, decode_leaf_batch,
-                                dropout_cancel_streams, encode_leaf_batch,
-                                pair_key_matrix)
+                                dropout_cancel_streams,
+                                dropout_cancel_streams_seeded,
+                                encode_leaf_batch, mask_streams_all_pairs,
+                                pair_key_matrix, pair_seed_matrix)
 from repro.core.blocked import (BlockedStream, decode_blocked_sum,
                                 encode_leaf_blocked,
                                 sharding_aligned_transform)
@@ -32,11 +35,14 @@ __all__ = [
     "CommRecord", "FedConfig", "SecureAggConfig", "SparseStream", "THGSConfig",
     "tree_size", "tree_zeros_like", "layer_rates", "leaf_ks", "round_rate",
     "densify", "first_occurrence_mask", "member_of", "sparsify_leaf",
-    "client_masks", "dh_agree", "pair_mask", "aggregate_streams",
+    "client_masks", "dh_agree", "dh_private", "dh_public", "pair_mask",
+    "pair_seed", "aggregate_streams",
     "dense_masked_update", "encode_leaf", "encode_update",
     "FederatedState", "batched_client_update", "client_update", "init_state",
     "run_round", "costs", "streams", "StreamBatch", "decode_leaf_batch",
-    "dropout_cancel_streams", "encode_leaf_batch", "pair_key_matrix",
+    "dropout_cancel_streams", "dropout_cancel_streams_seeded",
+    "encode_leaf_batch", "mask_streams_all_pairs", "pair_key_matrix",
+    "pair_seed_matrix",
     "BlockedStream", "decode_blocked_sum", "encode_leaf_blocked",
     "sharding_aligned_transform",
 ]

@@ -45,6 +45,13 @@ class BitModel:
         """Bits for a dense tensor of ``size`` elements (values only)."""
         return size * self.value_bits
 
+    def share_bits(self) -> int:
+        """Bits for one Shamir share on the wire: a GF(2^61-1) field element
+        (64-bit) plus the holder/owner tag at ``index_bits``. Identical under
+        both accountings' value widths — shares are control-plane integers,
+        not gradient values."""
+        return 64 + self.index_bits
+
 
 PAPER_BITS = BitModel(value_bits=64, index_bits=32)   # Eq. 6: 96 bit / element
 TPU_BITS = BitModel(value_bits=32, index_bits=32)     # f32 + int32
@@ -85,6 +92,20 @@ def upload_bits_dense(model_size: int, bits: BitModel = PAPER_BITS) -> int:
     return bits.dense_bits(model_size)
 
 
+def share_upload_bits(n_clients: int, bits: BitModel = PAPER_BITS) -> int:
+    """Phase-1 Shamir traffic: every participant uploads one share of its DH
+    private key per peer (the self-share stays local) — ``C·(C-1)`` shares.
+    The server's relay of the same shares is the matching download."""
+    return n_clients * max(n_clients - 1, 0) * bits.share_bits()
+
+
+def recovery_upload_bits(threshold: int, n_dropped: int,
+                         bits: BitModel = PAPER_BITS) -> int:
+    """Phase-3 unmasking traffic: the server queries exactly ``threshold``
+    survivors for their share of each dropped client's key."""
+    return threshold * n_dropped * bits.share_bits()
+
+
 def round_record(
     round_t: int,
     model_size: int,
@@ -94,6 +115,7 @@ def round_record(
     bits: BitModel = PAPER_BITS,
     *,
     n_survivors: Optional[int] = None,
+    threshold: int = 0,
 ) -> CommRecord:
     """Eq. 7-8 accounting for one sparse aggregation round.
 
@@ -101,7 +123,10 @@ def round_record(
     upload actually arrived (every participant still *transmits toward*
     ``n_clients - 1`` peers — the pair count is agreed before dropout is
     known); downloads are the dense model to every participant. The dense
-    baseline column charges every participant a full dense upload.
+    baseline column charges every participant a full dense upload. When the
+    round ran secure aggregation (any ``k_masks`` > 0), the Bonawitz control
+    traffic is charged separately: phase-1 Shamir shares + relay, and — with
+    ``threshold`` set and dropouts present — the phase-3 recovery shares.
 
     Parameters
     ----------
@@ -118,6 +143,9 @@ def round_record(
         Wire format for the logged totals.
     n_survivors : int, optional
         Clients whose upload arrived; defaults to ``n_clients`` (no dropout).
+    threshold : int
+        The round protocol's Shamir t (repro/secagg); 0 when secure
+        aggregation (or its recovery path) is off.
 
     Returns
     -------
@@ -129,13 +157,21 @@ def round_record(
     up = surv * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits)
     down = n_clients * upload_bits_dense(model_size, bits)
     dense_up = n_clients * upload_bits_dense(model_size, bits)
+    secagg = any(km > 0 for km in k_masks)
+    share_up = share_upload_bits(n_clients, bits) if secagg else 0
+    recovery_up = (recovery_upload_bits(threshold, n_clients - surv, bits)
+                   if secagg else 0)
     return CommRecord(
         round=round_t,
         upload_bits=up,
         download_bits=down,
         dense_upload_bits=dense_up,
+        share_upload_bits=share_up,
+        share_download_bits=share_up,
+        recovery_upload_bits=recovery_up,
         n_clients=n_clients,
         n_survivors=surv,
+        threshold=threshold if secagg else 0,
         model_size=model_size,
         ks=tuple(int(k) for k in ks),
         k_masks=tuple(int(k) for k in k_masks),

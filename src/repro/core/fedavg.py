@@ -12,10 +12,13 @@ jitted programs instead of a per-client Python loop:
   1. ``batched_client_update`` — local SGD for every participant, vmapped over
      the stacked client batches (one XLA dispatch per round);
   2. ``streams.encode_leaf_batch`` per leaf — the unified top-k ∪ mask-support
-     encode for all clients at once (pair keys from the DH-agreed secrets);
+     encode for all clients at once (counter-based pair seeds from the
+     repro/secagg round protocol: DH-agreed pair secrets, Shamir-shared for
+     dropout recovery);
   3. ``streams.decode_leaf_batch`` per leaf — one fused scatter-add over every
-     client's stream, with per-client weights, survivor gating and
-     Bonawitz-style reconstruction of dropped clients' unpaired masks.
+     client's stream, with per-client weights, survivor gating and Bonawitz
+     reconstruction of dropped clients' unpaired masks from their
+     Shamir-recombined keys (protocol phase 3).
 
 Weighted aggregation is client-side (weights scale the gradient values before
 masking, so non-uniform weights keep mask cancellation exact); the server
@@ -142,6 +145,7 @@ def run_round(
     bits: costs.BitModel = costs.PAPER_BITS,
     client_weights: Mapping[int, float] | None = None,
     dropped: Sequence[int] = (),
+    protocol=None,
 ) -> FederatedState:
     """One aggregation round over the provided participating clients.
 
@@ -150,7 +154,11 @@ def run_round(
     counts); unweighted clients default to 1. ``dropped`` lists participants
     that completed the mask agreement but whose upload never arrived — their
     streams are excluded and the survivors' unpaired masks toward them are
-    reconstructed and cancelled server-side (Bonawitz dropout recovery).
+    regenerated from Shamir-reconstructed pair seeds and cancelled server-side
+    (Bonawitz dropout recovery, repro/secagg/protocol.py; raises
+    ``secagg.ThresholdError`` when fewer than the Shamir threshold survive).
+    ``protocol`` injects a pre-built ``RoundProtocol`` (tests); by default the
+    round runs its own setup over the participants.
 
     All participants' batch pytrees must share one structure and one set of
     array shapes (they are stacked on a leading client axis for the batched
@@ -204,10 +212,19 @@ def run_round(
         )
         use_masks = sa.enabled and C >= 2
         if use_masks:
-            pair_keys, pair_signs = se.pair_key_matrix(
-                sa, participants, state.round)
+            # the round protocol: DH pair secrets + Shamir shares (phases
+            # 0-1); layering note — secagg sits beside core, this local
+            # import is the one sanctioned upward edge (DESIGN.md §10)
+            from repro.secagg.protocol import RoundProtocol
+
+            proto = (protocol if protocol is not None
+                     else RoundProtocol.setup(sa, participants, state.round))
+            pair_seeds, pair_signs = proto.pair_seed_matrix()
+            recovery_seeds = (proto.recover_seeds(survivors, sorted(dropped))
+                              if dropped else None)
         else:
-            pair_keys = pair_signs = None
+            proto = None
+            pair_seeds = pair_signs = recovery_seeds = None
 
         delta_leaves = jax.tree_util.tree_leaves(deltas_stacked)
         res_per_client = [jax.tree_util.tree_leaves(state.residuals[c])
@@ -225,14 +242,14 @@ def run_round(
             streams_b, new_res = se.encode_leaf_batch(
                 d_st, r_st, k=k, nb=1, m=size, size=size,
                 selector=thgs.selector, sample_frac=thgs.sample_frac,
-                pair_keys=pair_keys, pair_signs=pair_signs,
+                pair_seeds=pair_seeds, pair_signs=pair_signs,
                 k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
                 leaf_id=leaf_id, weights=w_vec)
             # ---- 3. fused scatter-add decode + dropout recovery ----
             dense = se.decode_leaf_batch(
                 streams_b, nb=1, m=size, size=size,
                 alive=alive if dropped else None,
-                pair_keys=pair_keys if dropped else None,
+                pair_seeds=recovery_seeds if dropped else None,
                 pair_signs=pair_signs if dropped else None,
                 k_mask=k_mask, mask_p=sa.p, mask_q=sa.q, leaf_id=leaf_id)
             agg_leaves.append(
@@ -259,7 +276,8 @@ def run_round(
         rec = costs.round_record(
             state.round, model_size, ks_acct, k_masks_acct,
             n_clients=len(participants), bits=bits,
-            n_survivors=len(survivors))
+            n_survivors=len(survivors),
+            threshold=proto.t if use_masks else 0)
     else:
         deltas = {c: jax.tree_util.tree_map(lambda x: x[ci], deltas_stacked)
                   for ci, c in enumerate(participants)}

@@ -1,18 +1,28 @@
 """Pairwise encryption masks with sparse support (paper §3.2, Eq. 3-5).
 
-Bonawitz-style secure aggregation: clients a<b agree (via a DH exchange, which is
-control-plane and simulated host-side by ``dh_agree``) on a common seed; each round
-both derive the SAME pseudo-random sparse support S_ab and mask values m_ab, and
-client a adds +m_ab while b adds -m_ab, so the server-side sum cancels exactly.
+Bonawitz-style secure aggregation: clients a<b agree — via an actual (toy-
+parameter) Diffie-Hellman exchange over GF(2^61-1), see ``dh_agree`` — on a
+common pair secret; each round both derive the SAME pseudo-random sparse
+support S_ab and mask values m_ab, and client a adds +m_ab while b adds -m_ab,
+so the server-side sum cancels exactly.
 
 Sparse-mask adaptation (the paper's contribution): the mask is nonzero only on
-``k_mask`` pseudo-random positions (expected fraction ``mask_ratio / x`` per pair,
-matching Eq. 4's threshold sigma = p + (k/x) q on a uniform [p, p+q) matrix). Both
-endpoints transmit every support position, so no mask is ever left uncancelled —
-the failure mode of naive sparsify-then-mask that §2.2 analyses.
+``k_mask`` pseudo-random positions (expected fraction ``mask_ratio / x`` per
+pair, matching Eq. 4's threshold sigma = p + (k/x) q on a uniform [p, p+q)
+matrix). Both endpoints transmit every support position, so no mask is ever
+left uncancelled — the failure mode of naive sparsify-then-mask that §2.2
+analyses.
 
-Masks are counter-based (jax.random.fold_in chains): regenerated on the fly each
-round, never stored, which is also how the TPU kernel variant works.
+Masks are **counter-based** (murmur-avalanched uint32 streams keyed by the
+pair seed — kernels/ref.py::pair_mask_stream_ref, Pallas twin in
+kernels/mask_prng.py): regenerated on the fly each round, never stored. The
+same draws power this host-side reference path, the batched engine
+(core/streams.py) and the round protocol (repro/secagg/protocol.py), so
+reference, engine and Shamir-reconstructed recovery masks are bit-identical.
+
+This module is the *single-pair reference* — ``client_masks`` walks peers in
+a host loop. The production data plane generates every pair of every client
+in one fused pass (streams.encode_leaf_batch with ``pair_seeds``).
 """
 from __future__ import annotations
 
@@ -21,32 +31,110 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core.types import SecureAggConfig
+from repro.kernels import ref as kref
+
+# Toy-parameter DH group: arithmetic is the real protocol's (modular
+# exponentiation, shared secret g^(x_a x_b)), the parameters are NOT a secure
+# choice — the threat-model boundary is documented in DESIGN.md §10.
+DH_PRIME = (1 << 61) - 1   # Mersenne prime; also the Shamir field (secagg)
+DH_GEN = 5
 
 
-class PairMask(NamedTuple):
-    indices: jax.Array  # int32[k_mask] support positions (flat, may repeat)
-    values: jax.Array   # float32[k_mask] signed mask values in +-[p, p+q)
+def dh_private(seed: int, u: int) -> int:
+    """Client ``u``'s simulated DH private key in [1, DH_PRIME - 1).
+
+    Derived from the federation seed so every party of the *simulation* can
+    recompute it; a real deployment draws it from a CSPRNG. This is the
+    secret that repro/secagg Shamir-shares for dropout recovery.
+    """
+    h = hashlib.sha256(f"dhpriv:{seed}:{u}".encode()).digest()
+    return int.from_bytes(h[:16], "little") % (DH_PRIME - 2) + 1
+
+
+def dh_public(x: int) -> int:
+    """g^x mod p — the advertised public key of the key-agreement phase."""
+    return pow(DH_GEN, x, DH_PRIME)
 
 
 def dh_agree(seed: int, a: int, b: int) -> int:
-    """Simulated Diffie-Hellman agreement -> shared pair secret (host-side).
+    """Diffie-Hellman agreement -> shared pair secret g^(x_a x_b) (host-side).
 
-    Stands in for the DH exchange of the secure-aggregation protocol; both parties
-    can compute it independently (here: a keyed hash of the unordered pair).
-    The data-plane cost of the protocol — mask transmission — is what the
-    framework models; DH itself is a once-per-federation control-plane exchange.
+    Both parties compute it independently (a from x_a and b's public key, b
+    symmetrically); the server can recover it for a dropped client only via
+    the Shamir shares of that client's private key (repro/secagg). The
+    data-plane cost of the protocol — mask transmission — is what the
+    framework models; DH itself is control-plane.
     """
-    lo, hi = (a, b) if a < b else (b, a)
-    h = hashlib.sha256(f"{seed}:{lo}:{hi}".encode()).digest()
-    return int.from_bytes(h[:8], "little")
+    return pow(dh_public(dh_private(seed, b)), dh_private(seed, a), DH_PRIME)
+
+
+def seed_from_secret(secret: int, round_t: int) -> int:
+    """Per-round uint32 mask seed from a pair secret — no federation seed
+    involved, so whoever holds the pair secret (both endpoints; the server
+    after Shamir reconstruction) derives the identical counter stream."""
+    h = hashlib.sha256(f"mask:{secret}:{round_t}".encode()).digest()
+    return int.from_bytes(h[:4], "little")
+
+
+def pair_seed(cfg: SecureAggConfig, a: int, b: int, round_t: int) -> int:
+    """The round's uint32 counter seed for the unordered pair (a, b)."""
+    return seed_from_secret(dh_agree(cfg.seed, a, b), round_t)
+
+
+def seed_matrix_from_keys(ids: Sequence[int], privs: Sequence[int],
+                          pubs: Sequence[int], round_t: int):
+    """[C, C] uint32 pair-seed + f32 sign matrices from ordered key lists.
+
+    ``seeds[i, j] = seed_from_secret(pubs[j] ** privs[i] mod p, round_t)`` —
+    symmetric by DH, filled once per unordered pair. THE single derivation
+    shared by the protocol-free engine entry (streams.pair_seed_matrix,
+    which derives the keys from the federation seed), the round protocol's
+    encode (RoundProtocol.pair_seed_matrix, from its stored key state) and
+    the recovery replay (RoundProtocol.recover_seeds, from the Shamir-
+    reconstructed key) — so encode and recovery masks cannot desynchronize.
+    The diagonal (self pair) is seed 0 with sign 0; the encode value-gates
+    its slots to zero and support-gates them onto the block's top-1 index.
+    """
+    n = len(ids)
+    if not (len(privs) == len(pubs) == n):
+        raise ValueError("ids, privs, pubs must be aligned")
+    seeds = np.zeros((n, n), np.uint32)
+    signs = np.zeros((n, n), np.float32)
+    for i in range(n):
+        for j in range(i + 1, n):
+            secret = pow(pubs[j], privs[i], DH_PRIME)
+            sd = seed_from_secret(secret, round_t)
+            seeds[i, j] = seeds[j, i] = sd
+            sgn = 1.0 if ids[i] < ids[j] else -1.0
+            signs[i, j] = sgn
+            signs[j, i] = -sgn
+    return jnp.asarray(seeds), jnp.asarray(signs)
 
 
 def pair_key(cfg: SecureAggConfig, a: int, b: int, round_t: int) -> jax.Array:
+    """Legacy jax.random pair key (dense Bonawitz baseline + blocked path)."""
     secret = dh_agree(cfg.seed, a, b)
     key = jax.random.key(secret % (2**31 - 1))
     return jax.random.fold_in(key, round_t)
+
+
+class PairMask(NamedTuple):
+    """One pair's sparse mask: ``k_mask`` (index, signed value) slots.
+
+    ``indices`` are flat positions and MAY repeat (mod-size collisions of the
+    counter stream). Duplicates are part of the contract, not a bug: both
+    endpoints generate identical duplicates (each slot cancels against its
+    twin), and the unified-stream encode transmits the underlying *gradient*
+    value only at a slot's first occurrence (streams.first_occurrence_rows),
+    so a double-hit position is never double-counted — pinned end-to-end by
+    tests/test_secagg_protocol.py::test_duplicate_support_not_double_counted.
+    """
+
+    indices: jax.Array  # int32[k_mask] support positions (flat, may repeat)
+    values: jax.Array   # float32[k_mask] signed mask values in +-[p, p+q)
 
 
 def pair_mask(
@@ -61,17 +149,17 @@ def pair_mask(
     """Mask of client ``a`` towards client ``b`` for one leaf, one round.
 
     Deterministic in (unordered pair, round, leaf): both endpoints generate
-    identical (indices, |values|); the endpoint with the smaller id adds +values,
-    the other -values (Bonawitz sign convention), so sums cancel.
+    identical (indices, |values|); the endpoint with the smaller id adds
+    +values, the other -values (Bonawitz sign convention), so sums cancel.
+    Counter-based draws — bit-identical to the batched engine and the Pallas
+    kernel (kernels/mask_prng.py::pair_mask_streams).
     """
-    key = jax.random.fold_in(pair_key(cfg, a, b, round_t), leaf_id)
-    k_idx, k_val = jax.random.split(key)
-    idx = jax.random.randint(k_idx, (k_mask,), 0, size, dtype=jnp.int32)
-    mag = jax.random.uniform(
-        k_val, (k_mask,), minval=cfg.p, maxval=cfg.p + cfg.q, dtype=jnp.float32
-    )
+    seed = kref.fold_leaf_seed(
+        jnp.uint32(pair_seed(cfg, a, b, round_t)), leaf_id)
     sign = 1.0 if a < b else -1.0
-    return PairMask(indices=idx, values=sign * mag)
+    idx, vals = kref.pair_mask_stream_ref(
+        seed, jnp.float32(sign), 1, k_mask, size, p=cfg.p, q=cfg.q)
+    return PairMask(indices=idx[0], values=vals[0])
 
 
 def client_masks(
@@ -83,7 +171,12 @@ def client_masks(
     size: int,
     k_mask: int,
 ) -> PairMask:
-    """Concatenated masks of ``client`` towards every other participant."""
+    """Concatenated masks of ``client`` towards every other participant.
+
+    Protocol-reference host loop over peers; the batched data plane
+    (streams.encode_leaf_batch with ``pair_seeds``) produces the same slots
+    for all clients in one fused pass.
+    """
     parts = [
         pair_mask(cfg, client, b, round_t, leaf_id, size, k_mask)
         for b in others

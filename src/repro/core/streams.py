@@ -27,16 +27,23 @@ over the dense buffer — on TPU through the fused Pallas kernel
 
 Secure-aggregation semantics
 ----------------------------
-Pairwise masks follow core/masks.py exactly (same PRNG draws for n_blocks == 1:
-jax.random draws are reshape-invariant, so ``pairwise_mask_rows`` with the
-dh_agree-derived pair key reproduces ``masks.pair_mask`` bit for bit). Client
-weights are applied to the *gradient* part of the values only — client-side,
-before masking — so non-uniform weighted aggregation keeps mask cancellation
-exact (server-side weighting would scale each endpoint's mask differently).
+Pairwise masks follow core/masks.py exactly. The default data plane is
+**counter-based**: per-pair uint32 seeds (``pair_seed_matrix``, DH-derived in
+masks.py / reconstructed via Shamir shares in repro/secagg) drive the murmur
+streams of ``kernels/ref.pair_mask_stream_ref`` — Pallas twin
+``kernels/mask_prng.pair_mask_streams`` on TPU — generating every client's
+pair masks for a leaf in ONE fused pass (``mask_streams_all_pairs``), instead
+of the per-pair host loop of the seed implementation. The legacy jax.random
+path (``pair_key_matrix``/``pairwise_mask_rows``) remains for the in-trace
+fold-key variants the datacenter shard_map step uses. Client weights are
+applied to the *gradient* part of the values only — client-side, before
+masking — so non-uniform weighted aggregation keeps mask cancellation exact
+(server-side weighting would scale each endpoint's mask differently).
 Dropout recovery is Bonawitz-style: the server regenerates every
-survivor→dropped pair mask from the pair keys and subtracts it
-(``dropout_cancel_streams``), so the aggregate over survivors equals the
-unmasked weighted sparse sum.
+survivor→dropped pair mask — from Shamir-reconstructed seeds
+(``dropout_cancel_streams_seeded``, the repro/secagg protocol path) or from
+the legacy pair keys (``dropout_cancel_streams``) — and subtracts it, so the
+aggregate over survivors equals the unmasked weighted sparse sum.
 """
 from __future__ import annotations
 
@@ -45,6 +52,7 @@ from typing import NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 class StreamBatch(NamedTuple):
@@ -173,6 +181,75 @@ def pair_key_matrix(sa, participant_ids: Sequence[int], round_t: int):
     return keys, signs
 
 
+def pair_seed_matrix(sa, participant_ids: Sequence[int], round_t: int):
+    """Host-side [C, C] uint32 counter seeds + signs for the round's pairs.
+
+    ``seeds[i, j]`` is ``masks.pair_seed(sa, ids[i], ids[j], round_t)`` — the
+    DH-agreed pair secret hashed with the round, identical from both ends, so
+    the counter-based mask streams cancel in the aggregate. The diagonal
+    (self pair) is seed 0 with sign 0; its slots are value-gated to zero and
+    support-gated onto the block's top-1 index by the encode. This is what
+    the repro/secagg round protocol hands the data plane; the server re-derives
+    exactly these seeds for dropped clients from their Shamir shares.
+    """
+    from repro.core import masks
+
+    ids = list(participant_ids)
+    # one key derivation per participant and one modexp per unordered pair
+    # (the seed is symmetric), not per matrix entry — at paper-scale cohorts
+    # the per-entry sha256+modexp re-derivation dominates round setup
+    privs = [masks.dh_private(sa.seed, u) for u in ids]
+    pubs = [masks.dh_public(x) for x in privs]
+    return masks.seed_matrix_from_keys(ids, privs, pubs, round_t)
+
+
+def mask_streams_all_pairs(
+    pair_seeds: jax.Array,   # uint32[C, C] counter seeds (0 on the diagonal)
+    pair_signs: jax.Array,   # f32[C, C] Bonawitz signs (0 on the diagonal)
+    nb: int,
+    k_mask: int,
+    m: int,
+    *,
+    p: float,
+    q: float,
+    leaf_id: int | jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Every client's concatenated pair-mask streams in ONE fused pass.
+
+    Counter-based data plane: all C*C pair streams are generated by a single
+    kernel/oracle dispatch (kernels/ops.pair_mask_streams) and reshaped to the
+    engine's per-client layout ``[C, nb, C * k_mask]`` (peer-major within a
+    row, self slot included — the encode gates it). Replaces the per-pair
+    host loop of masks.client_masks on the batched path.
+    """
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    C = pair_seeds.shape[0]
+    seeds = jnp.asarray(pair_seeds, jnp.uint32)
+    if leaf_id is not None:
+        seeds = kref.fold_leaf_seed(seeds, leaf_id)
+    # the seed matrix is symmetric and a stream's idx/|val| depend only on
+    # the seed, so generate each unordered pair (upper triangle incl. the
+    # diagonal) once and mirror via a static gather — halving the mask-PRNG
+    # work of the per-leaf hot path. Signs are applied outside the
+    # generator (sign * (p + q*u), exact for sign in {-1, 0, +1}), so the
+    # mirrored copy is the bit-exact negation the cancellation needs.
+    iu, ju = np.triu_indices(C)
+    tri = np.zeros((C, C), np.int64)
+    tri[iu, ju] = np.arange(len(iu))
+    tri[ju, iu] = tri[iu, ju]
+    idx_u, mag_u = ops.pair_mask_streams(
+        seeds[iu, ju], jnp.ones((len(iu),), jnp.float32),
+        nb=nb, k_mask=k_mask, m=m, p=p, q=q)
+    idx = idx_u[tri]                                   # [C, C, nb, k_mask]
+    vals = (jnp.asarray(pair_signs, jnp.float32)[:, :, None, None]
+            * mag_u[tri])
+    idx = idx.transpose(0, 2, 1, 3)
+    vals = vals.transpose(0, 2, 1, 3)
+    return (idx.reshape(C, nb, C * k_mask), vals.reshape(C, nb, C * k_mask))
+
+
 def fold_pair_key_matrix(mask_key: jax.Array, n: int):
     """In-trace [n, n] pair keys + signs for positional participants 0..n-1.
 
@@ -248,6 +325,8 @@ def encode_client_blocks(
     sample_frac: float = 0.01,
     pair_keys_row: jax.Array | None = None,   # [n_peers] typed keys
     pair_signs_row: jax.Array | None = None,  # f32[n_peers], 0 = self slot
+    mask_idx: jax.Array | None = None,   # precomputed int32[nb, n_peers*k_mask]
+    mask_vals: jax.Array | None = None,  # precomputed f32 (counter-based path)
     k_mask: int = 0,
     mask_p: float = -1.0,
     mask_q: float = 2.0,
@@ -256,16 +335,24 @@ def encode_client_blocks(
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One client's full encode: pairwise masks + unified stream, block view.
 
-    Returns (global_idx int32[nb, k_total], vals, new_acc). ``global_idx`` is
+    Mask support arrives either precomputed (``mask_idx``/``mask_vals`` from
+    the fused counter-based pass, plus ``pair_signs_row`` for the self gate)
+    or is generated here from legacy jax.random pair keys. Returns
+    (global_idx int32[nb, k_total], vals, new_acc). ``global_idx`` is
     ``row*m + col`` — flat into the padded block space (equals the flat leaf
     index when nb == 1). vmap-polymorphic: both the batched entry below and the
     shard_map datacenter path (traced self_id) call this.
     """
     nb, m = acc.shape
-    if pair_keys_row is not None and k_mask > 0:
+    if mask_idx is not None and k_mask > 0:
+        m_idx, m_vals = mask_idx, mask_vals
+    elif pair_keys_row is not None and k_mask > 0:
         m_idx, m_vals = pairwise_mask_rows(
             pair_keys_row, pair_signs_row, nb, k_mask, m,
             p=mask_p, q=mask_q, leaf_id=leaf_id)
+    else:
+        m_idx = m_vals = None
+    if m_idx is not None:
         # Inactive (self) slots carry zero mask value; point their support
         # at the block's top-1 position so first-occurrence gating zeroes
         # the slot entirely — a random support index there would transmit
@@ -273,8 +360,6 @@ def encode_client_blocks(
         top1 = jnp.argmax(jnp.abs(acc), -1).astype(jnp.int32)[:, None]
         col_active = jnp.repeat(pair_signs_row != 0.0, k_mask)[None, :]
         m_idx = jnp.where(col_active, m_idx, top1)
-    else:
-        m_idx = m_vals = None
     idx, vals, new_acc = unified_stream_rows(
         acc, k, m_idx, m_vals, selector=selector,
         sample_frac=sample_frac, weight=weight)
@@ -288,8 +373,9 @@ def encode_batch_blocks(
     *,
     selector: str = "exact",
     sample_frac: float = 0.01,
-    pair_keys: jax.Array | None = None,   # [C, C] typed keys
+    pair_keys: jax.Array | None = None,   # [C, C] typed keys (legacy path)
     pair_signs: jax.Array | None = None,  # f32[C, C]
+    pair_seeds: jax.Array | None = None,  # uint32[C, C] counter seeds
     k_mask: int = 0,
     mask_p: float = -1.0,
     mask_q: float = 2.0,
@@ -298,24 +384,46 @@ def encode_batch_blocks(
 ) -> tuple[StreamBatch, jax.Array]:
     """Batched client encode: all clients of a round in one vmapped program.
 
-    Returns (StreamBatch with *global* indices row*m + col, new_acc [C, nb, m]).
-    The caller owns the block view (``to_blocks``/``from_blocks`` or the
-    sharding-aligned transform of core/blocked.py) and the error-feedback
-    accumulate ``acc = residual + update``.
+    With ``pair_seeds`` (the repro/secagg protocol path) every pair mask of
+    the round is generated counter-based in one fused pass *before* the vmap
+    (``mask_streams_all_pairs``); ``pair_keys`` selects the legacy jax.random
+    per-client generation instead. Returns (StreamBatch with *global* indices
+    row*m + col, new_acc [C, nb, m]). The caller owns the block view
+    (``to_blocks``/``from_blocks`` or the sharding-aligned transform of
+    core/blocked.py) and the error-feedback accumulate ``acc = residual +
+    update``.
     """
     C, nb, m = acc.shape
     if weights is None:
         weights = jnp.ones((C,), jnp.float32)
-    use_masks = pair_keys is not None and k_mask > 0 and C >= 2
+    use_seeds = pair_seeds is not None and k_mask > 0 and C >= 2
+    use_keys = (not use_seeds and pair_keys is not None and k_mask > 0
+                and C >= 2)
+
+    if use_seeds:
+        m_idx, m_vals = mask_streams_all_pairs(
+            pair_seeds, pair_signs, nb, k_mask, m,
+            p=mask_p, q=mask_q, leaf_id=leaf_id)
+
+        def one_seeded(acc_c, m_idx_c, m_vals_c, signs_row, w_c):
+            return encode_client_blocks(
+                acc_c, k, selector=selector, sample_frac=sample_frac,
+                mask_idx=m_idx_c, mask_vals=m_vals_c,
+                pair_signs_row=signs_row, k_mask=k_mask,
+                mask_p=mask_p, mask_q=mask_q, weight=w_c)
+
+        gidx, vals, new_acc = jax.vmap(one_seeded)(
+            acc, m_idx, m_vals, pair_signs, weights)
+        return StreamBatch(indices=gidx, values=vals), new_acc
 
     def one_client(acc_c, keys_row, signs_row, w_c):
         return encode_client_blocks(
             acc_c, k, selector=selector, sample_frac=sample_frac,
             pair_keys_row=keys_row, pair_signs_row=signs_row,
-            k_mask=k_mask if use_masks else 0, mask_p=mask_p, mask_q=mask_q,
+            k_mask=k_mask if use_keys else 0, mask_p=mask_p, mask_q=mask_q,
             leaf_id=leaf_id, weight=w_c)
 
-    if use_masks:
+    if use_keys:
         gidx, vals, new_acc = jax.vmap(one_client)(
             acc, pair_keys, pair_signs, weights)
     else:
@@ -340,6 +448,7 @@ def encode_leaf_batch(
     sample_frac: float = 0.01,
     pair_keys: jax.Array | None = None,
     pair_signs: jax.Array | None = None,
+    pair_seeds: jax.Array | None = None,
     k_mask: int = 0,
     mask_p: float = -1.0,
     mask_q: float = 2.0,
@@ -375,8 +484,12 @@ def encode_leaf_batch(
     sample_frac : float
         Subsample fraction for ``selector='sampled'``.
     pair_keys, pair_signs : [C, C] typed keys / f32[C, C], optional
-        Pairwise-mask key matrix and Bonawitz signs from
+        Legacy jax.random pairwise-mask key matrix and Bonawitz signs from
         ``pair_key_matrix``; ``None`` encodes without secure aggregation.
+    pair_seeds : uint32[C, C], optional
+        Counter-based pair seeds from ``pair_seed_matrix`` (the repro/secagg
+        protocol path); takes precedence over ``pair_keys`` and routes mask
+        generation through the fused kernel/oracle data plane.
     k_mask : int
         Mask-support slots per pair per block (Eq. 4); 0 disables masking.
     mask_p, mask_q : float
@@ -405,8 +518,9 @@ def encode_leaf_batch(
             updates, residuals)
     streams, new_acc = encode_batch_blocks(
         acc, k, selector=selector, sample_frac=sample_frac,
-        pair_keys=pair_keys, pair_signs=pair_signs, k_mask=k_mask,
-        mask_p=mask_p, mask_q=mask_q, leaf_id=leaf_id, weights=weights)
+        pair_keys=pair_keys, pair_signs=pair_signs, pair_seeds=pair_seeds,
+        k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, leaf_id=leaf_id,
+        weights=weights)
     new_res = jax.vmap(lambda b: from_blocks(b, size, leaf_shape))(new_acc)
     return streams, new_res.astype(residuals.dtype)
 
@@ -485,8 +599,52 @@ def dropout_cancel_streams(
     flat_signs = pair_signs.reshape(C * C)
     flat_gates = gates.reshape(C * C)
     idx, vals = jax.vmap(one_pair)(flat_keys, flat_signs, flat_gates)
-    return StreamBatch(indices=idx.reshape(C * C, nb, k_mask),
+    idx = idx.reshape(C * C, nb, k_mask)
+    # decode consumes GLOBAL indices (row*m + col); nb == 1 leaves this a
+    # no-op, the blocked layout needs the row offset
+    idx = jnp.arange(nb, dtype=jnp.int32)[None, :, None] * m + idx
+    return StreamBatch(indices=idx,
                        values=vals.reshape(C * C, nb, k_mask))
+
+
+def dropout_cancel_streams_seeded(
+    pair_seeds: jax.Array,   # uint32[C, C] counter seeds (reconstructed or
+                             # original — only survivor→dropped entries used)
+    pair_signs: jax.Array,   # f32[C, C]
+    alive: jax.Array,        # bool[C]
+    nb: int,
+    k_mask: int,
+    m: int,
+    *,
+    p: float,
+    q: float,
+    leaf_id: int | jax.Array | None = None,
+) -> StreamBatch:
+    """Bonawitz dropout recovery on the counter-based data plane.
+
+    Regenerates every survivor→dropped pair mask from the (Shamir-
+    reconstructed) pair seeds in one fused pass and emits its negation; pairs
+    outside the ``alive[s] & ~alive[d]`` gate contribute zero values, so a
+    seed matrix filled only at the recovered entries is sufficient. Survivor/
+    survivor masks already cancel pairwise, dropped/dropped streams never
+    arrived. Bit-identical to the masks the encode applied — the property
+    tests/test_secagg_protocol.py pins.
+    """
+    from repro.kernels import ops
+    from repro.kernels import ref as kref
+
+    C = pair_seeds.shape[0]
+    alive_f = jnp.asarray(alive, jnp.float32)
+    seeds = jnp.asarray(pair_seeds, jnp.uint32).reshape(C * C)
+    if leaf_id is not None:
+        seeds = kref.fold_leaf_seed(seeds, leaf_id)
+    idx, vals = ops.pair_mask_streams(
+        seeds, jnp.asarray(pair_signs, jnp.float32).reshape(C * C),
+        nb=nb, k_mask=k_mask, m=m, p=p, q=q)
+    gates = (alive_f[:, None] * (1.0 - alive_f[None, :])).reshape(C * C)
+    vals = -gates[:, None, None] * vals
+    idx = jnp.arange(nb, dtype=jnp.int32)[None, :, None] * m + idx
+    return StreamBatch(indices=idx, values=vals)
 
 
 @functools.partial(
@@ -503,6 +661,7 @@ def decode_leaf_batch(
     weights: jax.Array | None = None,
     pair_keys: jax.Array | None = None,
     pair_signs: jax.Array | None = None,
+    pair_seeds: jax.Array | None = None,
     k_mask: int = 0,
     mask_p: float = -1.0,
     mask_q: float = 2.0,
@@ -522,9 +681,12 @@ def decode_leaf_batch(
         ``nb * m`` padded elements, truncated to ``size`` on return.
     alive : bool[C], optional
         Survivor gate: False rows' streams are excluded (their upload never
-        arrived). When given together with ``pair_keys``/``k_mask``, the
-        survivors' unpaired masks toward the dropped clients are regenerated
-        and cancelled (``dropout_cancel_streams`` — Bonawitz recovery).
+        arrived). When given together with ``pair_seeds`` (or legacy
+        ``pair_keys``) and ``k_mask``, the survivors' unpaired masks toward
+        the dropped clients are regenerated and cancelled
+        (``dropout_cancel_streams_seeded`` / ``dropout_cancel_streams`` —
+        Bonawitz recovery). On the protocol path the seeds are the Shamir-
+        reconstructed ones (repro/secagg), not the encode-time originals.
     weights : f32[C], optional
         Server-side per-stream scaling. Only correct for protocols whose
         masks cancel under it (uniform weighting); weighted FL applies
@@ -544,7 +706,11 @@ def decode_leaf_batch(
         total weight (core/fedavg.py).
     """
     extra = None
-    if alive is not None and pair_keys is not None and k_mask > 0:
+    if alive is not None and pair_seeds is not None and k_mask > 0:
+        extra = dropout_cancel_streams_seeded(
+            pair_seeds, pair_signs, alive, nb, k_mask, m,
+            p=mask_p, q=mask_q, leaf_id=leaf_id)
+    elif alive is not None and pair_keys is not None and k_mask > 0:
         extra = dropout_cancel_streams(
             pair_keys, pair_signs, alive, nb, k_mask, m,
             p=mask_p, q=mask_q, leaf_id=leaf_id)

@@ -76,11 +76,27 @@ class SecureAggConfig:
     q: float = 2.0
     # Mask values are regenerated from counter-based PRNG each round, never stored.
     seed: int = 0x5EC0DE
+    # Shamir threshold fraction: a round's dropped masks are recoverable while
+    # at least ceil(threshold * cohort) participants survive (Bonawitz t-of-n;
+    # repro/secagg/protocol.py). Below it the round aborts (ThresholdError).
+    threshold: float = 0.6
 
     def k_mask_for(self, size: int, n_clients: int) -> int:
         if not self.enabled or n_clients < 2:
             return 0
         return max(1, int(size * self.mask_ratio / n_clients))
+
+    def t_for(self, n_clients: int) -> int:
+        """Shamir threshold t for an n-client cohort (>= 2, <= n)."""
+        if n_clients < 2:
+            return 0
+        import math
+
+        # epsilon-nudged ceil: 0.55 * 100 is 55.00000000000001 in binary
+        # floating point, and a bare ceil would demand 56 survivors where the
+        # configured fraction says 55
+        return min(n_clients,
+                   max(2, math.ceil(self.threshold * n_clients - 1e-9)))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -104,20 +120,29 @@ class CommRecord:
 
     ``upload_bits``/``download_bits``/``dense_upload_bits`` are totals under
     the ``BitModel`` the round was logged with (``costs.PAPER_BITS`` unless the
-    caller chose otherwise). The remaining fields are the *slot-level facts* of
-    the round — per-leaf top-k counts ``ks``, per-leaf per-pair mask slots
-    ``k_masks``, participant/survivor counts and the dense model size — from
-    which ``repro.sim.ledger.CommLedger`` re-derives the totals under any
-    accounting (64-bit paper elements vs 32-bit TPU wire format) without
-    re-running the round. ``ks`` is empty for dense (no-THGS) rounds.
+    caller chose otherwise); ``upload_bits`` counts gradient streams only —
+    the secure-aggregation control traffic is reported separately as
+    ``share_upload_bits``/``share_download_bits`` (phase-1 Shamir shares and
+    their relay) and ``recovery_upload_bits`` (phase-3 shares unmasking the
+    round's dropped clients). The remaining fields are the *slot-level facts*
+    of the round — per-leaf top-k counts ``ks``, per-leaf per-pair mask slots
+    ``k_masks``, participant/survivor counts, the Shamir ``threshold`` and the
+    dense model size — from which ``repro.sim.ledger.CommLedger`` re-derives
+    every total under any accounting (64-bit paper elements vs 32-bit TPU wire
+    format) without re-running the round. ``ks`` is empty for dense (no-THGS)
+    rounds.
     """
 
     round: int = 0
     upload_bits: int = 0
     download_bits: int = 0
     dense_upload_bits: int = 0   # what FedAvg would have uploaded
+    share_upload_bits: int = 0   # phase-1 Shamir shares, client -> server
+    share_download_bits: int = 0  # phase-1 share relay, server -> clients
+    recovery_upload_bits: int = 0  # phase-3 shares of the dropped clients
     n_clients: int = 0
     n_survivors: int = 0         # participants whose upload arrived
+    threshold: int = 0           # Shamir t (0 = no secure aggregation)
     model_size: int = 0          # dense parameter count
     ks: tuple = ()               # per-leaf top-k slots (sparse rounds only)
     k_masks: tuple = ()          # per-leaf per-pair mask-support slots

@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.ref import IDX_SALT, VAL_SALT, _mix32
+
 LANE = 128
 
 
@@ -26,12 +28,7 @@ def _kernel(g_ref, o_ref, m_ref, *, seed: int, p: float, q: float,
     base = i * block_rows * LANE
     idx = base + jax.lax.broadcasted_iota(jnp.int32, g_ref.shape, 0) * LANE \
         + jax.lax.broadcasted_iota(jnp.int32, g_ref.shape, 1)
-    x = idx.astype(jnp.uint32) ^ jnp.uint32(seed)
-    x ^= x >> 16
-    x *= jnp.uint32(0x7FEB352D)
-    x ^= x >> 15
-    x *= jnp.uint32(0x846CA68B)
-    x ^= x >> 16
+    x = _mix32(idx.astype(jnp.uint32) ^ jnp.uint32(seed))
     u = p + q * (x.astype(jnp.float32) / jnp.float32(2**32))
     mask = jnp.where(u < sigma, u, 0.0) * sign
     m_ref[...] = mask
@@ -69,3 +66,71 @@ def mask_prng_apply(g: jax.Array, seed: int, *, p: float = -1.0, q: float = 2.0,
     )(gf)
     unpad = lambda x: x.reshape(-1)[:n].reshape(orig_shape)
     return unpad(out), unpad(mask)
+
+
+def _pair_stream_kernel(s_ref, sg_ref, i_ref, v_ref, *, L: int, m: int,
+                        p: float, q: float, rows: int):
+    """One grid step = one pair: counter-based (idx, val) slots for that pair.
+
+    The per-pair seed arrives as a (1, 1)-blocked 2-D operand — rank >= 2 is
+    what Mosaic accepts for VMEM inputs (rank-1 blocks only lower in
+    interpret mode); a scalar-prefetch SMEM ride would also work but the
+    plain 2-D BlockSpec keeps the interpret and TPU paths identical.
+    Counters past ``L`` are padding lanes; they are zeroed and sliced off by
+    the wrapper.
+    """
+    seed = s_ref[0, 0]
+    sign = sg_ref[0, 0]
+    c = (jax.lax.broadcasted_iota(jnp.uint32, (rows, LANE), 0) * LANE
+         + jax.lax.broadcasted_iota(jnp.uint32, (rows, LANE), 1))
+    base_i = _mix32(seed ^ jnp.uint32(IDX_SALT))
+    base_v = _mix32(seed ^ jnp.uint32(VAL_SALT))
+    idx = (_mix32(base_i + c) % jnp.uint32(m)).astype(jnp.int32)
+    # top 24 bits: the f32-exact uniform grid (see ref.pair_mask_stream_ref)
+    u = (_mix32(base_v + c) >> 8).astype(jnp.float32) / jnp.float32(2**24)
+    val = sign * (p + q * u)
+    valid = c < jnp.uint32(L)
+    i_ref[...] = jnp.where(valid, idx, 0)[None]
+    v_ref[...] = jnp.where(valid, val, 0.0)[None]
+
+
+def pair_mask_streams(seeds: jax.Array, signs: jax.Array, *, nb: int,
+                      k_mask: int, m: int, p: float = -1.0, q: float = 2.0,
+                      interpret: bool = False):
+    """All pair masks of a round in ONE fused pass (paper Eq. 3-4 data plane).
+
+    ``seeds`` uint32[N] (one per active pair, leaf already folded in) and
+    ``signs`` f32[N] produce ``(idx int32[N, nb, k_mask], vals f32)`` —
+    the sparse-support counterpart of :func:`mask_prng_apply`'s dense sigma
+    thresholding, matching ``ref.pair_mask_stream_ref`` bit for bit. Grid is
+    one step per pair; each step fills that pair's ``nb * k_mask`` slots from
+    a murmur-avalanched counter stream, so masks are regenerated on the fly
+    (zero HBM for the mask matrix) exactly as the dense kernel does.
+    """
+    n_pairs = seeds.shape[0]
+    L = nb * k_mask
+    rows = max(1, -(-L // LANE))
+    kernel = functools.partial(_pair_stream_kernel, L=L, m=m, p=p, q=q,
+                               rows=rows)
+    idx, vals = pl.pallas_call(
+        kernel,
+        grid=(n_pairs,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rows, LANE), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, rows, LANE), lambda i: (i, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_pairs, rows, LANE), jnp.int32),
+            jax.ShapeDtypeStruct((n_pairs, rows, LANE), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seeds.astype(jnp.uint32).reshape(n_pairs, 1),
+      signs.astype(jnp.float32).reshape(n_pairs, 1))
+    idx = idx.reshape(n_pairs, rows * LANE)[:, :L].reshape(n_pairs, nb, k_mask)
+    vals = vals.reshape(n_pairs, rows * LANE)[:, :L].reshape(
+        n_pairs, nb, k_mask)
+    return idx, vals

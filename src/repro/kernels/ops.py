@@ -11,8 +11,10 @@ from typing import Optional
 
 import jax
 
+from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mask_prng import mask_prng_apply as _mask
+from repro.kernels.mask_prng import pair_mask_streams as _pair_streams
 from repro.kernels.stream_decode import stream_scatter_add as _scatter
 from repro.kernels.thgs_sparsify import thgs_sparsify as _thgs
 
@@ -48,3 +50,19 @@ def stream_scatter_add(indices, values, *, size: int, tile_rows: int = 64,
     """Fused server decode: flat stream -> dense f32[size] in one HBM pass."""
     return _scatter(indices, values, size, tile_rows=tile_rows, chunk=chunk,
                     interpret=_interpret())
+
+
+@functools.partial(jax.jit, static_argnames=("nb", "k_mask", "m", "p", "q"))
+def pair_mask_streams(seeds, signs, *, nb: int, k_mask: int, m: int,
+                      p: float = -1.0, q: float = 2.0):
+    """All of a round's pair-mask streams in one fused pass (Eq. 3-4).
+
+    uint32 seeds + f32 signs, one per active pair -> counter-based
+    ``(idx, vals)`` support streams. Pallas kernel on TPU; the bit-identical
+    jnp oracle elsewhere (the ref IS the fallback — it vmaps/traces freely
+    inside the batched encode, interpret-mode kernel parity is pinned in
+    tests/test_kernels.py).
+    """
+    if _interpret():
+        return ref.pair_mask_stream_ref(seeds, signs, nb, k_mask, m, p=p, q=q)
+    return _pair_streams(seeds, signs, nb=nb, k_mask=k_mask, m=m, p=p, q=q)

@@ -60,6 +60,59 @@ def stream_scatter_add_ref(indices, values, size: int):
         jnp.where(valid, idx, 0)].add(jnp.where(valid, val, 0.0))
 
 
+# Domain-separation salts for the counter-based pair-mask streams: one murmur
+# stream for support indices, one for values, one for per-leaf seed folding.
+# Both endpoints of a pair derive the same uint32 seed (repro/secagg), so the
+# same counters yield the same (idx, |val|) draws and the signed values cancel.
+IDX_SALT = 0x9E3779B9
+VAL_SALT = 0x85EBCA6B
+LEAF_SALT = 0xA511E9B3
+
+
+def fold_leaf_seed(seeds: jax.Array, leaf_id) -> jax.Array:
+    """Fold a (traced or static) leaf id into uint32 pair seeds.
+
+    In-trace equivalent of deriving an independent counter stream per leaf;
+    matches the kernel and the host reference (masks.pair_mask) bit for bit.
+    """
+    leaf = jnp.asarray(leaf_id).astype(jnp.uint32)
+    return _mix32(jnp.asarray(seeds, jnp.uint32)
+                  ^ _mix32(leaf + jnp.uint32(LEAF_SALT)))
+
+
+def pair_mask_stream_ref(seeds, signs, nb: int, k_mask: int, m: int,
+                         *, p: float, q: float):
+    """Counter-based sparse pair-mask streams — the engine's mask data plane.
+
+    For each pair seed (uint32[...]) generate ``nb`` blocks of ``k_mask``
+    (index, value) slots: ``idx = mix32(mix32(seed^IDX_SALT) + c) % m`` and
+    ``val = sign * (p + q * (mix32(mix32(seed^VAL_SALT) + c) >> 8) / 2**24)``
+    with flat counter ``c = block * k_mask + slot`` — only the top 24 bits of
+    the value draw are used (see the inline comment below; the 2^-24 grid is
+    what makes colliding masks cancel bit-exactly in f32). Support indices
+    MAY repeat
+    (mod-m collisions); both endpoints generate identical duplicates, so every
+    slot still cancels in the aggregate, and the unified-stream
+    first-occurrence gate transmits the underlying gradient only once
+    (tested end-to-end in tests/test_secagg_protocol.py).
+
+    Returns ``(idx int32[..., nb, k_mask], vals f32[..., nb, k_mask])``.
+    """
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    signs = jnp.asarray(signs, jnp.float32)
+    c = jnp.arange(nb * k_mask, dtype=jnp.uint32).reshape(nb, k_mask)
+    c = c.reshape((1,) * seeds.ndim + (nb, k_mask))
+    base_i = _mix32(seeds ^ jnp.uint32(IDX_SALT))[..., None, None]
+    base_v = _mix32(seeds ^ jnp.uint32(VAL_SALT))[..., None, None]
+    idx = (_mix32(base_i + c) % jnp.uint32(m)).astype(jnp.int32)
+    # top 24 bits only: uniforms land on the f32-exact 2^-24 grid, so masks
+    # colliding at one dense position still cancel bit-exactly in the
+    # scatter-add (32-bit entropy would leave 1-ulp residue on collisions)
+    u = (_mix32(base_v + c) >> 8).astype(jnp.float32) / jnp.float32(2**24)
+    vals = signs[..., None, None] * (p + q * u)
+    return idx, vals
+
+
 def mask_prng_ref(g, seed: int, *, p: float, q: float, sigma: float,
                   sign: float = 1.0):
     """Counter-based sparse-mask generation + add (paper Eq. 3-5 data plane).

@@ -1,0 +1,15 @@
+"""Sparse-mask secure aggregation as a first-class subsystem (paper §3.2,
+Eq. 3-5, Alg. 2).
+
+Bonawitz-style round protocol (protocol.py: DH pair secrets, Shamir shares,
+survivor collection, dropped-mask reconstruction) over the counter-based,
+kernel-backed mask data plane of core/streams.py + kernels/mask_prng.py.
+Layering: secagg → core/kernels; the reference server (core/fedavg.py) pulls
+the protocol in through a function-local import, and repro/sim drives it
+multi-round with injected dropout. DESIGN.md §10 documents the phases and the
+threat-model boundary (what is simulated vs real DH/Shamir).
+"""
+from repro.secagg.protocol import RoundProtocol, ThresholdError
+from repro.secagg.shamir import PRIME, reconstruct, share
+
+__all__ = ["RoundProtocol", "ThresholdError", "PRIME", "reconstruct", "share"]

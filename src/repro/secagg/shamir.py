@@ -1,0 +1,84 @@
+"""Shamir secret sharing over GF(2^61 - 1) — dropout recovery's control plane.
+
+A client's DH private key is split into one share per cohort member with
+threshold ``t``: any ``t`` shares reconstruct the key exactly (Lagrange
+interpolation at 0), any ``t - 1`` are information-theoretically independent
+of it. The field prime equals ``masks.DH_PRIME``, so private keys are field
+elements as-is. All arithmetic is host-side Python integers — this is
+control-plane traffic (one 64-bit field element per share on the wire,
+accounted by core/costs), never tensor math.
+
+Polynomial coefficients are derived deterministically from the share ``tag``
+(sha256 counter stream) so the simulation is reproducible end-to-end; a real
+deployment draws them from a CSPRNG — the boundary DESIGN.md §10 documents.
+"""
+from __future__ import annotations
+
+import hashlib
+from typing import Mapping, Sequence
+
+# The Shamir field IS the DH group's field: private keys are shared as-is
+# (no reduction can change them), so reconstruction returns the exact key.
+from repro.core.masks import DH_PRIME as PRIME
+
+
+def _coeff(tag: str, j: int) -> int:
+    h = hashlib.sha256(f"shamir-coeff:{tag}:{j}".encode()).digest()
+    return int.from_bytes(h[:16], "little") % PRIME
+
+
+def share(secret: int, xs: Sequence[int], t: int, *, tag: str) -> dict:
+    """Split ``secret`` into ``len(xs)`` shares with threshold ``t``.
+
+    Parameters
+    ----------
+    secret : int
+        The value to protect (reduced mod PRIME).
+    xs : sequence of int
+        Distinct nonzero evaluation points — one per share holder (the
+        protocol uses ``client_id + 1``).
+    t : int
+        Reconstruction threshold: the polynomial has degree ``t - 1``.
+    tag : str
+        Domain-separation tag for the deterministic coefficient stream.
+
+    Returns
+    -------
+    dict
+        ``{x: poly(x) mod PRIME}`` — the share addressed to each holder.
+    """
+    xs = [int(x) for x in xs]
+    if not 1 <= t <= len(xs):
+        raise ValueError(f"need 1 <= t <= n shares, got t={t}, n={len(xs)}")
+    if len(set(xs)) != len(xs) or any(x % PRIME == 0 for x in xs):
+        raise ValueError("share points must be distinct and nonzero mod PRIME")
+    coeffs = [secret % PRIME] + [_coeff(tag, j) for j in range(1, t)]
+    out = {}
+    for x in xs:
+        acc = 0
+        for c in reversed(coeffs):   # Horner
+            acc = (acc * x + c) % PRIME
+        out[x] = acc
+    return out
+
+
+def reconstruct(shares: Mapping[int, int]) -> int:
+    """Lagrange interpolation at 0: recombine ``t`` (or more) shares.
+
+    The caller enforces the threshold (protocol.ThresholdError); handed fewer
+    than ``t`` genuine shares this still returns *a* field element, just one
+    unrelated to the secret.
+    """
+    pts = [(int(x) % PRIME, int(y) % PRIME) for x, y in shares.items()]
+    if len({x for x, _ in pts}) != len(pts):
+        raise ValueError("duplicate share points")
+    secret = 0
+    for i, (xi, yi) in enumerate(pts):
+        num = den = 1
+        for j, (xj, _) in enumerate(pts):
+            if i == j:
+                continue
+            num = (num * (-xj)) % PRIME
+            den = (den * (xi - xj)) % PRIME
+        secret = (secret + yi * num * pow(den, PRIME - 2, PRIME)) % PRIME
+    return secret

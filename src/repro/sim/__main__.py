@@ -98,6 +98,11 @@ def main(argv=None) -> int:
               f"{t['dense_upload_mib']:9.2f} MiB -> "
               f"{t['upload_vs_dense']:6.1%} of FedAvg "
               f"({t['compression_x']:.1f}x)")
+        if t["share_upload_bits"] or t["recovery_upload_bits"]:
+            print(f"[{acct:5s}] secagg control: shares "
+                  f"{mib(t['share_upload_bits']):.4f} MiB + recovery "
+                  f"{mib(t['recovery_upload_bits']):.4f} MiB -> total "
+                  f"{t['total_upload_vs_dense']:6.1%} of FedAvg")
     print(f"final_acc={res.final_acc:.3f}  wall={res.wall_s:.1f}s")
     if cfg.out_json:
         path = res.to_json(cfg.out_json)

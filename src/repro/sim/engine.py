@@ -142,6 +142,12 @@ class Simulation:
         self.loss_fn = cross_entropy_loss(self.model)
         self.client_weights = (self.data_counts if cfg.weight_by_data_count
                                else None)
+        # injected dropout must stay within what the secure-aggregation
+        # protocol can recover from: at least the Shamir threshold t of the
+        # cohort has to survive (repro/secagg; below t the round would abort)
+        self.min_survivors = (
+            cfg.sa.t_for(cfg.clients_per_round)
+            if cfg.thgs is not None and cfg.sa.enabled else 1)
         self.ledger = CommLedger()
 
     # ----------------------------------------------------------------- state
@@ -239,7 +245,8 @@ class Simulation:
             assert len(cohort) == cfg.clients_per_round, (
                 "fixed-cohort contract violated: "
                 f"{len(cohort)} != {cfg.clients_per_round}")
-            dropped = self.sampler.dropouts_for(r, cohort)
+            dropped = self.sampler.dropouts_for(
+                r, cohort, min_survivors=self.min_survivors)
             batches = self._batches_for(r, cohort)
             state = run_round(
                 state, batches, self.loss_fn, self.fed,

@@ -6,7 +6,10 @@ top-k counts, per-pair mask slots, participant/survivor counts, model size —
 and replays ``core.costs``'s Eq. 6-8 formulas under *both* accountings
 (:data:`costs.PAPER_BITS` 96-bit sparse elements, :data:`costs.TPU_BITS`
 float32 wire format), so one run yields both the paper-comparable and the
-hardware-realistic Table 2 columns. ``CommLedger.totals() ==`` a hand-summed
+hardware-realistic Table 2 columns. Secure-aggregation control traffic
+(phase-1 Shamir shares and the phase-3 recovery shares of dropped clients —
+repro/secagg) is derived from the same facts and reported separately from
+the gradient upload. ``CommLedger.totals() ==`` a hand-summed
 ``costs.round_record`` sequence by construction; tests/test_sim.py pins it.
 """
 from __future__ import annotations
@@ -32,9 +35,11 @@ class LedgerEntry:
     """Slot-level facts of one round, independent of any BitModel.
 
     ``ks``/``k_masks`` are the per-leaf top-k and per-pair mask slot counts of
-    a sparse round (empty for dense rounds); bits under a given accounting are
-    *derived*, never stored, so the two accountings cannot disagree with the
-    facts.
+    a sparse round (empty for dense rounds); ``threshold`` is the round
+    protocol's Shamir t (0 without secure aggregation). Bits under a given
+    accounting are *derived*, never stored, so the two accountings cannot
+    disagree with the facts — including the secure-aggregation control
+    traffic (phase-1 shares, phase-3 recovery shares).
     """
 
     round: int
@@ -43,13 +48,20 @@ class LedgerEntry:
     model_size: int
     ks: tuple
     k_masks: tuple
+    threshold: int = 0
 
     @property
     def sparse(self) -> bool:
         return bool(self.ks)
 
+    @property
+    def secagg(self) -> bool:
+        """Did the round run sparse-mask secure aggregation?"""
+        return any(km > 0 for km in self.k_masks)
+
     def upload_bits(self, bits: costs.BitModel) -> int:
-        """Round upload total (Eq. 6 x survivors, or dense x survivors)."""
+        """Round *gradient* upload total (Eq. 6 x survivors, or dense x
+        survivors); control traffic is reported separately."""
         if self.sparse:
             return self.n_survivors * costs.upload_bits_sparse(
                 self.ks, self.k_masks, max(self.n_clients - 1, 0), bits)
@@ -64,12 +76,35 @@ class LedgerEntry:
         """What dense FedAvg would have uploaded for the same cohort."""
         return self.n_clients * costs.upload_bits_dense(self.model_size, bits)
 
+    def share_upload_bits(self, bits: costs.BitModel) -> int:
+        """Phase-1 Shamir share uploads (repro/secagg protocol)."""
+        if not self.secagg:
+            return 0
+        return costs.share_upload_bits(self.n_clients, bits)
+
+    def share_download_bits(self, bits: costs.BitModel) -> int:
+        """Phase-1 share relay, server -> holders."""
+        return self.share_upload_bits(bits)
+
+    def recovery_upload_bits(self, bits: costs.BitModel) -> int:
+        """Phase-3 shares unmasking the round's dropped clients."""
+        if not self.secagg:
+            return 0
+        return costs.recovery_upload_bits(
+            self.threshold, self.n_clients - self.n_survivors, bits)
+
+    def total_upload_bits(self, bits: costs.BitModel) -> int:
+        """Gradient streams + all secure-aggregation control uploads."""
+        return (self.upload_bits(bits) + self.share_upload_bits(bits)
+                + self.recovery_upload_bits(bits))
+
     @classmethod
     def from_record(cls, rec: CommRecord) -> "LedgerEntry":
         return cls(round=rec.round, n_clients=rec.n_clients,
                    n_survivors=rec.n_survivors or rec.n_clients,
                    model_size=rec.model_size,
-                   ks=tuple(rec.ks), k_masks=tuple(rec.k_masks))
+                   ks=tuple(rec.ks), k_masks=tuple(rec.k_masks),
+                   threshold=int(rec.threshold))
 
 
 class CommLedger:
@@ -105,24 +140,38 @@ class CommLedger:
     def totals(self, accounting: str = "paper") -> dict:
         """Run totals under one accounting.
 
-        Returns a dict with ``upload_bits``, ``download_bits``,
-        ``dense_upload_bits`` (the FedAvg baseline for the same cohorts),
-        ``upload_vs_dense`` (the paper's headline ratio; 2.9%-18.9% at
-        s = 0.01) and ``compression_x`` (its inverse).
+        Returns a dict with ``upload_bits`` (gradient streams),
+        ``download_bits``, ``dense_upload_bits`` (the FedAvg baseline for the
+        same cohorts), the secure-aggregation control traffic
+        (``share_upload_bits``, ``share_download_bits``,
+        ``recovery_upload_bits`` — repro/secagg phases 1 and 3),
+        ``total_upload_bits`` (gradient + control), ``upload_vs_dense`` (the
+        paper's headline gradient-only ratio; 2.9%-18.9% at s = 0.01),
+        ``total_upload_vs_dense`` (the same ratio with recovery traffic
+        counted) and ``compression_x``.
         """
         bits = ACCOUNTINGS[accounting]
         up = sum(e.upload_bits(bits) for e in self.entries)
         down = sum(e.download_bits(bits) for e in self.entries)
         dense = sum(e.dense_upload_bits(bits) for e in self.entries)
+        share_up = sum(e.share_upload_bits(bits) for e in self.entries)
+        share_down = sum(e.share_download_bits(bits) for e in self.entries)
+        recovery_up = sum(e.recovery_upload_bits(bits) for e in self.entries)
+        total_up = up + share_up + recovery_up
         return {
             "accounting": accounting,
             "rounds": len(self.entries),
             "upload_bits": up,
             "download_bits": down,
             "dense_upload_bits": dense,
+            "share_upload_bits": share_up,
+            "share_download_bits": share_down,
+            "recovery_upload_bits": recovery_up,
+            "total_upload_bits": total_up,
             "upload_mib": mib(up),
             "dense_upload_mib": mib(dense),
             "upload_vs_dense": up / dense if dense else 0.0,
+            "total_upload_vs_dense": total_up / dense if dense else 0.0,
             "compression_x": dense / up if up else 0.0,
         }
 
@@ -141,9 +190,14 @@ class CommLedger:
                 "n_clients": e.n_clients,
                 "n_survivors": e.n_survivors,
                 "sparse": e.sparse,
+                "secagg": e.secagg,
                 "upload_bits": e.upload_bits(bits),
                 "download_bits": e.download_bits(bits),
                 "dense_upload_bits": e.dense_upload_bits(bits),
+                "share_upload_bits": e.share_upload_bits(bits),
+                "share_download_bits": e.share_download_bits(bits),
+                "recovery_upload_bits": e.recovery_upload_bits(bits),
+                "total_upload_bits": e.total_upload_bits(bits),
             }
             for e in self.entries
         ]
@@ -180,5 +234,6 @@ class CommLedger:
                                 n_survivors=int(d["n_survivors"]),
                                 model_size=int(d["model_size"]),
                                 ks=tuple(int(k) for k in d["ks"]),
-                                k_masks=tuple(int(k) for k in d["k_masks"]))
+                                k_masks=tuple(int(k) for k in d["k_masks"]),
+                                threshold=int(d.get("threshold", 0)))
                     for d in dicts])

@@ -49,6 +49,18 @@ PRESETS: dict[str, SimConfig] = {
         eval_every=2, sa=SecureAggConfig(enabled=False),
         thgs=THGSConfig(s0=0.01, alpha=1.0, s_min=0.01, time_varying=False),
         out_json="experiments/sim/fig1_s001_quick.json"),
+    # secure-aggregation protocol smoke: multi-round with injected dropout —
+    # every round runs the full repro/secagg phase sequence (DH + Shamir
+    # shares), dropped clients' masks are reconstructed from survivor shares,
+    # and the ledger reports the share/recovery traffic separately (the CI
+    # runs this with --quick)
+    "secagg_quick": SimConfig(
+        name="secagg_quick", partition="noniid", noniid_k=4, n_clients=12,
+        clients_per_round=6, rounds=8, n_train=1200, n_test=400,
+        eval_every=2, local_steps=3, local_batch=32, thgs=_THGS,
+        sa=SecureAggConfig(mask_ratio=0.01, threshold=0.6),
+        dropout_rate=0.25, seed=11,
+        out_json="experiments/sim/secagg_quick.json"),
     # dropout + weighted-cohort stress: exercises Bonawitz recovery and
     # data-count sampling/weighting in one run
     "dropout_quick": SimConfig(

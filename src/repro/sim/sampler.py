@@ -90,20 +90,28 @@ class ClientSampler:
                             p=self._p)
         return np.sort(chosen.astype(int))
 
-    def dropouts_for(self, round_t: int,
-                     cohort: Sequence[int]) -> list[int]:
+    def dropouts_for(self, round_t: int, cohort: Sequence[int],
+                     min_survivors: int = 1) -> list[int]:
         """Which of the round's participants drop after mask agreement.
 
-        Each participant drops independently with ``dropout_rate``; if the
-        draw would kill the whole cohort, the lowest-id participant is kept
-        alive (an FL round needs one survivor — core/fedavg.py asserts it).
+        Each participant drops independently with ``dropout_rate``; the draw
+        is then clamped so at least ``min_survivors`` participants stay alive
+        (lowest-id drops are revived first). The default 1 is the FL
+        invariant core/fedavg.py asserts; the engine raises it to the Shamir
+        threshold ``sa.t_for(cohort)`` when secure aggregation is on, so an
+        injected dropout never exceeds what Bonawitz recovery can unmask
+        (below t the real protocol aborts the round — repro/secagg).
+        The clamp does not perturb the underlying counter-based draw: the
+        same (seed, round) always drops the same prefix-clamped set.
         """
         if self.dropout_rate <= 0.0:
             return []
         cohort = [int(c) for c in cohort]
+        keep = max(1, int(min_survivors))
         rng = self._rng(_DROPOUT_TAG, round_t)
         drop = [c for c, u in zip(cohort, rng.random(len(cohort)))
                 if u < self.dropout_rate]
-        if len(drop) == len(cohort):
-            drop = drop[1:]
+        excess = len(drop) - (len(cohort) - keep)
+        if excess > 0:
+            drop = drop[excess:]
         return drop

@@ -69,6 +69,66 @@ def test_mask_prng_matches_ref_and_cancels(shape):
     assert float(jnp.max(jnp.abs(m_k + m_neg))) == 0.0
 
 
+@pytest.mark.parametrize("sign", [1.0, -1.0])
+@pytest.mark.parametrize("n,block_rows", [
+    (1, 256),          # single element, maximal padding
+    (97, 2),           # odd size, n far from a lane multiple
+    (128 * 2, 2),      # exactly one 128*block_rows tile
+    (128 * 2 + 1, 2),  # one element past the tile boundary
+    (128 * 2 - 1, 2),  # one element short of it
+    (50_000, 256),     # many tiles, ragged tail
+])
+def test_mask_prng_kernel_ref_parity_padding_boundaries(n, block_rows, sign):
+    """mask_prng.py (interpret) vs ref.py over odd sizes and padding
+    boundaries (n not a multiple of 128*block_rows), both signs — the
+    padded lanes of the last tile must not leak into the unpadded view."""
+    from repro.kernels.mask_prng import mask_prng_apply
+
+    g = jax.random.normal(jax.random.fold_in(KEY, n), (n,))
+    o_k, m_k = mask_prng_apply(g, 77, sigma=-0.2, sign=sign,
+                               block_rows=block_rows, interpret=True)
+    o_r, m_r = ref.mask_prng_ref(g, 77, p=-1.0, q=2.0, sigma=-0.2, sign=sign)
+    np.testing.assert_array_equal(np.asarray(m_k), np.asarray(m_r))
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r), atol=1e-6)
+    assert m_k.shape == g.shape
+
+
+@pytest.mark.parametrize("n_pairs,nb,k_mask,m", [
+    (3, 1, 37, 257),     # odd everything
+    (6, 4, 17, 1000),    # blocked layout
+    (2, 1, 1, 5),        # minimal
+    (5, 2, 129, 4097),   # k_mask one past the lane boundary
+    (4, 1, 128, 128),    # exactly one lane row
+])
+def test_pair_mask_streams_kernel_ref_parity(n_pairs, nb, k_mask, m):
+    """The sparse pair-mask kernel (interpret) is bit-identical to
+    ref.pair_mask_stream_ref — indices AND values, mixed signs."""
+    from repro.kernels.mask_prng import pair_mask_streams
+
+    seeds = (jnp.arange(1, n_pairs + 1, dtype=jnp.uint32)
+             * jnp.uint32(2654435761))
+    signs = jnp.asarray([(-1.0) ** i for i in range(n_pairs)], jnp.float32)
+    ik, vk = pair_mask_streams(seeds, signs, nb=nb, k_mask=k_mask, m=m,
+                               interpret=True)
+    ir, vr = ref.pair_mask_stream_ref(seeds, signs, nb, k_mask, m,
+                                      p=-1.0, q=2.0)
+    assert ik.shape == (n_pairs, nb, k_mask)
+    np.testing.assert_array_equal(np.asarray(ik), np.asarray(ir))
+    np.testing.assert_array_equal(np.asarray(vk), np.asarray(vr))
+    assert (np.asarray(ik) >= 0).all() and (np.asarray(ik) < m).all()
+
+
+def test_pair_mask_streams_opposite_signs_cancel_bitwise():
+    from repro.kernels.mask_prng import pair_mask_streams
+
+    seeds = jnp.asarray([0xABCD1234, 0xABCD1234], jnp.uint32)
+    signs = jnp.asarray([1.0, -1.0], jnp.float32)
+    idx, vals = pair_mask_streams(seeds, signs, nb=1, k_mask=50, m=333,
+                                  interpret=True)
+    np.testing.assert_array_equal(np.asarray(idx[0]), np.asarray(idx[1]))
+    assert float(jnp.max(jnp.abs(vals[0] + vals[1]))) == 0.0
+
+
 @pytest.mark.parametrize("n,size", [(100, 1000), (700, 257), (2048, 100_000),
                                     (5, 64)])
 def test_stream_scatter_add_matches_ref(n, size):

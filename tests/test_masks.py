@@ -34,6 +34,11 @@ def test_pair_masks_cancel(a, b, t, leaf):
        seed=st.integers(0, 100))
 @settings(max_examples=20, deadline=None)
 def test_all_clients_sum_to_zero(n_clients, t, seed):
+    # Mask values live on the f32-exact 2^-24 uniform grid (kernels/ref.py),
+    # so each +/- pair cancels bit-exactly; when >= 3 pairs collide on one
+    # dense position the scatter's intermediate sums can round, and partial
+    # sums above 1.0 round at the 2^-22 ulp — a few-ulp bound, not the
+    # 1-ulp 2^-23 one (a sweep of this strategy's domain reaches 2.39e-07).
     sa = SecureAggConfig(mask_ratio=0.3, seed=seed)
     n = 500
     parts = list(range(n_clients))
@@ -42,7 +47,29 @@ def test_all_clients_sum_to_zero(n_clients, t, seed):
         m = client_masks(sa, c, parts, t, 0, n,
                          sa.k_mask_for(n, n_clients))
         total = total.at[m.indices].add(m.values)
-    assert float(jnp.max(jnp.abs(total))) == 0.0
+    assert float(jnp.max(jnp.abs(total))) <= 2.0 ** -21
+
+
+def test_pair_mask_duplicates_are_symmetric():
+    """The `may repeat` contract: mod-size collisions produce duplicate
+    support indices, but both endpoints generate the SAME duplicates with
+    opposite signs — every slot cancels against its twin. (The gradient
+    double-count half of the contract is pinned end-to-end in
+    tests/test_secagg_protocol.py.)"""
+    n, k_mask = 7, 64          # k_mask >> n forces collisions
+    ma = pair_mask(SA, 2, 5, 1, 0, n, k_mask)
+    mb = pair_mask(SA, 5, 2, 1, 0, n, k_mask)
+    ia = np.asarray(ma.indices)
+    assert len(np.unique(ia)) < len(ia)            # duplicates exist
+    np.testing.assert_array_equal(ia, np.asarray(mb.indices))
+    np.testing.assert_array_equal(np.asarray(ma.values),
+                                  -np.asarray(mb.values))
+    # float64 accumulation: values are exact f32 negatives of each other, so
+    # the only inexactness would be the f32 scatter's own rounding
+    total = np.zeros(n, np.float64)
+    np.add.at(total, ia, np.asarray(ma.values, np.float64))
+    np.add.at(total, np.asarray(mb.indices), np.asarray(mb.values, np.float64))
+    assert np.abs(total).max() == 0.0
 
 
 def test_masks_differ_across_rounds_and_leaves():

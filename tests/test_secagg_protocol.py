@@ -1,0 +1,264 @@
+"""The repro/secagg round protocol: Shamir share algebra, threshold-gated
+dropout recovery, bit-identical mask reconstruction, and end-to-end Eq. 5
+exactness against an engine-independent dense masked-top-k reference."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
+from hypothesis import given, settings, strategies as st
+
+from repro.core import streams
+from repro.core.fedavg import init_state, run_round
+from repro.core.masks import client_masks, dh_private, dh_public
+from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+from repro.secagg import RoundProtocol, ThresholdError, shamir
+
+THGS = THGSConfig(s0=0.2, alpha=0.9, s_min=0.05, time_varying=False)
+
+
+# -------------------------------------------------------------------- shamir
+@given(secret=st.integers(0, shamir.PRIME - 1), n=st.integers(2, 8),
+       data=st.data())
+@settings(max_examples=40, deadline=None)
+def test_shamir_roundtrip_any_t_subset(secret, n, data):
+    t = data.draw(st.integers(2, n))
+    points = list(range(1, n + 1))
+    shares = shamir.share(secret, points, t, tag="prop")
+    subset = data.draw(st.permutations(points))[:data.draw(st.integers(t, n))]
+    assert shamir.reconstruct({x: shares[x] for x in subset}) == secret
+
+
+def test_shamir_below_threshold_reveals_nothing_useful():
+    secret = 0xDEADBEEF
+    shares = shamir.share(secret, [1, 2, 3, 4, 5], 3, tag="leak")
+    # t-1 shares interpolate to SOME field element, not the secret
+    assert shamir.reconstruct({1: shares[1], 2: shares[2]}) != secret
+    with pytest.raises(ValueError):
+        shamir.share(secret, [1, 1, 2], 2, tag="dup")
+    with pytest.raises(ValueError):
+        shamir.share(secret, [1, 2], 3, tag="t>n")
+
+
+# ------------------------------------------------------------------ protocol
+def test_protocol_reconstructs_keys_and_seeds_bit_identical():
+    sa = SecureAggConfig(mask_ratio=0.1, seed=42, threshold=0.6)
+    parts = [2, 3, 7, 11, 13]
+    proto = RoundProtocol.setup(sa, parts, round_t=5)
+    seeds, _ = proto.pair_seed_matrix()
+    rec = proto.recover_seeds(survivors=[2, 7, 11, 13], dropped=[3])
+    orig, got = np.asarray(seeds), np.asarray(rec)
+    d = parts.index(3)
+    for s in (0, 2, 3, 4):
+        assert got[s, d] == orig[s, d] and got[d, s] == orig[d, s]
+    # only survivor<->dropped entries are filled
+    assert got[0, 2] == 0 and got[2, 4] == 0
+    # the Shamir recombination really returns the DH private key
+    pts = {v + 1: proto.shares[3][v + 1] for v in [2, 7, 11]}
+    assert shamir.reconstruct(pts) == dh_private(sa.seed, 3)
+    assert dh_public(dh_private(sa.seed, 3)) == proto.publics[3]
+
+
+def test_protocol_threshold_abort_and_validation():
+    sa = SecureAggConfig(seed=1, threshold=0.75)
+    proto = RoundProtocol.setup(sa, [0, 1, 2, 3], round_t=0)
+    assert proto.t == 3
+    with pytest.raises(ThresholdError):
+        proto.recover_seeds(survivors=[0, 1], dropped=[2, 3])
+    with pytest.raises(ValueError):
+        proto.recover_seeds(survivors=[0, 1, 2], dropped=[9])
+    with pytest.raises(ValueError):
+        proto.recover_seeds(survivors=[0, 1, 2], dropped=[2])
+    assert proto.n_phase1_shares == 12
+    assert proto.n_recovery_shares(2) == 6
+
+
+# --------------------------------------------- end-to-end Eq. 5 property test
+def _dense_reference(g_np, sa, parts, round_t, k, km, survivors):
+    """Engine-independent dense masked-top-k sum: per surviving client,
+    select top-k(|g|) ∪ mask-support (dedup!) and sum the raw values."""
+    n = g_np.shape[1]
+    total = np.zeros(n, np.float64)
+    for ci, c in enumerate(parts):
+        if c not in survivors:
+            continue
+        topk = np.argsort(-np.abs(g_np[ci]))[:k]
+        mask = client_masks(sa, c, parts, round_t, 0, n, km)
+        sel = np.union1d(topk, np.asarray(mask.indices))
+        total[sel] += g_np[ci][sel].astype(np.float64)
+    return total
+
+
+@given(n_clients=st.integers(2, 5), seed=st.integers(0, 2**16),
+       mask_ratio=st.floats(0.05, 0.5), data=st.data())
+@settings(max_examples=10, deadline=None)
+def test_decoded_sum_equals_dense_reference_under_dropout(
+        n_clients, seed, mask_ratio, data):
+    """For random client counts, sparse rates and arbitrary survivor subsets
+    >= threshold: the decoded aggregate (with Shamir-reconstructed mask
+    cancellation) equals the dense masked-top-k reference over survivors."""
+    n, k, round_t = 300, 8, 2
+    sa = SecureAggConfig(mask_ratio=mask_ratio, seed=seed, threshold=0.5)
+    parts = sorted(data.draw(
+        st.sets(st.integers(0, 19), min_size=n_clients, max_size=n_clients)))
+    proto = RoundProtocol.setup(sa, parts, round_t)
+    survivors = sorted(data.draw(
+        st.sets(st.sampled_from(parts), min_size=proto.t,
+                max_size=len(parts))))
+    dropped = [c for c in parts if c not in survivors]
+
+    g = jax.random.normal(jax.random.key(seed), (len(parts), n))
+    km = sa.k_mask_for(n, len(parts))
+    seeds, signs = proto.pair_seed_matrix()
+    st_b, nr = streams.encode_leaf_batch(
+        g, jnp.zeros_like(g), k=k, nb=1, m=n, size=n,
+        pair_seeds=seeds, pair_signs=signs, k_mask=km,
+        mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    alive = jnp.asarray([c in survivors for c in parts])
+    if dropped:
+        rec_seeds = proto.recover_seeds(survivors, dropped)
+        # reconstruction is bit-identical to the encode-time seeds at every
+        # survivor<->dropped entry
+        o, r = np.asarray(seeds), np.asarray(rec_seeds)
+        for s in np.flatnonzero(np.asarray(alive)):
+            for d in np.flatnonzero(~np.asarray(alive)):
+                assert r[s, d] == o[s, d]
+    else:
+        rec_seeds = None
+    decoded = streams.decode_leaf_batch(
+        st_b, nb=1, m=n, size=n,
+        alive=alive if dropped else None,
+        pair_seeds=rec_seeds, pair_signs=signs if dropped else None,
+        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    expected = _dense_reference(np.asarray(g), sa, parts, round_t, k, km,
+                                set(survivors))
+    np.testing.assert_allclose(np.asarray(decoded), expected,
+                               rtol=1e-4, atol=1e-5)
+
+
+@given(n_clients=st.integers(2, 6), seed=st.integers(0, 1000),
+       round_t=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_mask_streams_cancel_to_zero(n_clients, seed, round_t):
+    """Aggregated mask values alone cancel to exact zero (f64 accumulation;
+    the f32 scatter is exact up to 1 ulp on >= 3-way support collisions)."""
+    sa = SecureAggConfig(mask_ratio=0.4, seed=seed)
+    n = 400
+    km = sa.k_mask_for(n, n_clients)
+    seeds, signs = streams.pair_seed_matrix(sa, list(range(n_clients)),
+                                            round_t)
+    idx, vals = streams.mask_streams_all_pairs(
+        seeds, signs, 1, km, n, p=sa.p, q=sa.q, leaf_id=0)
+    total = np.zeros(n, np.float64)
+    np.add.at(total, np.asarray(idx).reshape(-1),
+              np.asarray(vals, np.float64).reshape(-1))
+    assert np.abs(total).max() == 0.0
+
+
+# ------------------------------------------- duplicate-support gate, e2e
+def test_duplicate_support_not_double_counted():
+    """masks.PairMask's `may repeat` contract, end to end: with a leaf so
+    small that mask support collides heavily (and overlaps top-k), the
+    first-occurrence gate still transmits each gradient value exactly once
+    and the decoded sum equals the dense reference."""
+    n, k, C = 13, 4, 3
+    sa = SecureAggConfig(mask_ratio=1.0, seed=3)   # k_mask = 4 on 13 slots
+    parts = [0, 1, 2]
+    km = sa.k_mask_for(n, C)
+    assert km * (C - 1) + k > n          # unions MUST collide
+    proto = RoundProtocol.setup(sa, parts, round_t=1)
+    seeds, signs = proto.pair_seed_matrix()
+    g = jax.random.normal(jax.random.key(5), (C, n))
+    st_b, nr = streams.encode_leaf_batch(
+        g, jnp.zeros_like(g), k=k, nb=1, m=n, size=n,
+        pair_seeds=seeds, pair_signs=signs, k_mask=km,
+        mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    # duplicates actually occurred in at least one client's stream
+    assert any(
+        len(np.unique(np.asarray(st_b.indices[ci, 0]))) < st_b.k_total
+        for ci in range(C))
+    decoded = streams.decode_leaf_batch(st_b, nb=1, m=n, size=n)
+    expected = _dense_reference(np.asarray(g), sa, parts, 1, k, km,
+                                set(parts))
+    np.testing.assert_allclose(np.asarray(decoded), expected,
+                               rtol=1e-4, atol=1e-5)
+    # and the error feedback kept exactly the untransmitted mass
+    np.testing.assert_allclose(
+        np.asarray((g - nr).sum(0)), expected, rtol=1e-4, atol=1e-5)
+
+
+# --------------------------------------------------------- run_round plumbing
+def _linreg(dim):
+    params = {"w": jnp.zeros((dim, 1))}
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    return params, loss_fn
+
+
+def test_run_round_secagg_matches_unmasked_run():
+    """The acceptance check: a multi-round secure-agg run with dropout
+    produces the same decoded updates as the identical run without masking.
+    'Without masking' keeps the same pair seeds but a zero-width mask
+    distribution (p = q = 0): the union support and the gradient slots are
+    bit-identical between the two runs, the mask values are exactly zero —
+    so any difference could only come from masks failing to cancel (or from
+    recovery failing to reconstruct a dropped client's masks)."""
+    dim, C = 60, 4
+    params, loss_fn = _linreg(dim)
+    fed = FedConfig(n_clients=C, clients_per_round=C, local_steps=2,
+                    local_batch=8, local_lr=0.05, rounds=4)
+    key = jax.random.key(0)
+    true_w = jnp.linspace(-1.0, 1.0, dim).reshape(dim, 1)
+
+    def batches_for(r):
+        out = {}
+        for c in range(C):
+            kk = jax.random.fold_in(key, r * 10 + c)
+            x = jax.random.normal(kk, (2, 8, dim))
+            out[c] = (x, x @ true_w)
+        return out
+
+    # identical sampler stream: same batches, same dropout schedule
+    dropped_per_round = [(), (2,), (), (1, 3)]
+    sa_on = SecureAggConfig(mask_ratio=0.2, seed=9, threshold=0.5)
+    sa_zero = SecureAggConfig(mask_ratio=0.2, seed=9, threshold=0.5,
+                              p=0.0, q=0.0)
+    st_on = init_state(params, fed)
+    st_zero = init_state(params, fed)
+    for r in range(fed.rounds):
+        st_on = run_round(st_on, batches_for(r), loss_fn, fed, THGS, sa_on,
+                          dropped=dropped_per_round[r])
+        st_zero = run_round(st_zero, batches_for(r), loss_fn, fed, THGS,
+                            sa_zero, dropped=dropped_per_round[r])
+    np.testing.assert_allclose(np.asarray(st_on.params["w"]),
+                               np.asarray(st_zero.params["w"]),
+                               rtol=1e-4, atol=1e-6)
+    for c in range(C):
+        np.testing.assert_allclose(np.asarray(st_on.residuals[c]["w"]),
+                                   np.asarray(st_zero.residuals[c]["w"]),
+                                   rtol=1e-4, atol=1e-6)
+    # the masked run's uploads were actually masked (values differ), and the
+    # secure round logged its control traffic
+    rec = st_on.comm_log[1]
+    assert rec.threshold == sa_on.t_for(C)
+    assert rec.share_upload_bits > 0 and rec.recovery_upload_bits > 0
+    assert st_on.comm_log[0].recovery_upload_bits == 0
+
+
+def test_run_round_aborts_below_threshold():
+    dim, C = 20, 4
+    params, loss_fn = _linreg(dim)
+    fed = FedConfig(n_clients=C, clients_per_round=C, local_steps=1,
+                    local_batch=4, local_lr=0.05, rounds=1)
+    sa = SecureAggConfig(mask_ratio=0.2, seed=2, threshold=1.0)  # t = C
+    st_x = init_state(params, fed)
+    key = jax.random.key(1)
+    batches = {c: (jax.random.normal(jax.random.fold_in(key, c), (1, 4, dim)),
+                   jnp.zeros((1, 4, 1)))
+               for c in range(C)}
+    with pytest.raises(ThresholdError):
+        run_round(st_x, batches, loss_fn, fed, THGS, sa, dropped=[3])

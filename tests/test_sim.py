@@ -93,34 +93,57 @@ def test_ledger_totals_match_round_record_sum():
     ledger.extend(st.comm_log)
     assert len(ledger) == 3
 
-    # hand-computed expectation straight from Eq. 6-8 (core/costs)
+    # hand-computed expectation straight from Eq. 6-8 (core/costs),
+    # INCLUDING the secure-aggregation control traffic: phase-1 Shamir
+    # shares every round, phase-3 recovery shares on the dropout round
     leaves = jax.tree_util.tree_leaves(params)
     sizes = [x.size for x in leaves]
     model_size = sum(sizes)
     ks = schedules.leaf_ks(thgs, sizes)
     k_masks = [sa.k_mask_for(s, C) for s in sizes]
+    t_shamir = sa.t_for(C)
     for acct, bits in (("paper", costs.PAPER_BITS), ("tpu", costs.TPU_BITS)):
         expect = [costs.round_record(r, model_size, ks, k_masks, C, bits,
-                                     n_survivors=C - len(dropped_per_round[r]))
+                                     n_survivors=C - len(dropped_per_round[r]),
+                                     threshold=t_shamir)
                   for r in range(3)]
         t = ledger.totals(acct)
         assert t["upload_bits"] == sum(e.upload_bits for e in expect)
         assert t["download_bits"] == sum(e.download_bits for e in expect)
         assert t["dense_upload_bits"] == sum(e.dense_upload_bits
                                              for e in expect)
-        # the reported ratio IS the Eq. 6-8 quotient, exactly
+        assert t["share_upload_bits"] == sum(e.share_upload_bits
+                                             for e in expect)
+        assert t["recovery_upload_bits"] == sum(e.recovery_upload_bits
+                                                for e in expect)
+        assert t["total_upload_bits"] == sum(
+            e.upload_bits + e.share_upload_bits + e.recovery_upload_bits
+            for e in expect)
+        # the reported ratios ARE the Eq. 6-8 quotients, exactly
         assert t["upload_vs_dense"] == (
             sum(e.upload_bits for e in expect)
             / sum(e.dense_upload_bits for e in expect))
-    # the round with a dropped client uploads strictly less
+        assert t["total_upload_vs_dense"] == (
+            t["total_upload_bits"] / t["dense_upload_bits"])
+    # the round with a dropped client uploads strictly less gradient but
+    # strictly more control traffic (t recovery shares for the dropped key)
     e0, e2 = ledger.entries[0], ledger.entries[2]
     assert e2.n_survivors == C - 1
     assert e2.upload_bits(costs.PAPER_BITS) < e0.upload_bits(costs.PAPER_BITS)
+    assert e0.recovery_upload_bits(costs.PAPER_BITS) == 0
+    assert e2.recovery_upload_bits(costs.PAPER_BITS) == (
+        t_shamir * costs.PAPER_BITS.share_bits())
+    assert e2.share_upload_bits(costs.PAPER_BITS) == (
+        C * (C - 1) * costs.PAPER_BITS.share_bits())
     # slot facts recorded faithfully
     assert list(e0.ks) == ks and list(e0.k_masks) == k_masks
+    assert e0.threshold == t_shamir and e0.secagg
     # what the server logged is what the ledger re-derives
     for rec, e in zip(st.comm_log, ledger.entries):
         assert rec.upload_bits == e.upload_bits(costs.PAPER_BITS)
+        assert rec.share_upload_bits == e.share_upload_bits(costs.PAPER_BITS)
+        assert rec.recovery_upload_bits == e.recovery_upload_bits(
+            costs.PAPER_BITS)
 
 
 def test_ledger_dense_rounds_and_rejects_factless_records():
@@ -206,6 +229,39 @@ def test_engine_resume_skips_orphaned_checkpoint(tmp_path):
     assert len(resumed.ledger) == 2
     assert resumed.ledger.entries == full.ledger.entries
     np.testing.assert_allclose(resumed.losses, full.losses, rtol=1e-6)
+
+
+def test_engine_secagg_dropout_ledger_and_band():
+    """A dropout run through the secagg_quick preset: ledger totals equal the
+    per-round sums INCLUDING share-upload and recovery bits, the Shamir
+    threshold bounds every round's survivor count, and the table2 upload-%
+    band still holds with recovery traffic counted."""
+    cfg = presets.get("secagg_quick").replace(
+        rounds=4, n_train=400, n_test=120, eval_every=2, out_json=None)
+    res = Simulation(cfg).run()
+    entries = res.ledger.entries
+    assert len(entries) == 4
+    t = cfg.sa.t_for(cfg.clients_per_round)
+    assert any(e.n_survivors < e.n_clients for e in entries)  # drops injected
+    assert all(e.n_survivors >= t for e in entries)           # recoverable
+    assert all(e.threshold == t and e.secagg for e in entries)
+    tot = res.ledger.totals("paper")
+    per = res.ledger.per_round("paper")
+    assert tot["total_upload_bits"] == sum(p["total_upload_bits"]
+                                           for p in per)
+    assert tot["recovery_upload_bits"] == sum(p["recovery_upload_bits"]
+                                              for p in per)
+    assert tot["recovery_upload_bits"] > 0
+    assert tot["share_upload_bits"] > 0
+    # recovery traffic is reported separately from (not folded into) the
+    # gradient upload, and the headline band survives counting it
+    assert tot["total_upload_bits"] == (
+        tot["upload_bits"] + tot["share_upload_bits"]
+        + tot["recovery_upload_bits"])
+    assert tot["upload_vs_dense"] < tot["total_upload_vs_dense"] < 0.25
+    # control plane is a sliver of the data plane
+    assert (tot["share_upload_bits"] + tot["recovery_upload_bits"]
+            < 0.05 * tot["upload_bits"])
 
 
 def test_engine_weighted_aggregation_runs():

@@ -27,17 +27,26 @@ def test_batched_encode_decode_exact_no_masks(C, n, k):
                                rtol=1e-5, atol=1e-5)
 
 
+@pytest.mark.parametrize("path", ["seeds", "keys"])
 @pytest.mark.parametrize("seed,C", [(0, 2), (1, 3), (2, 5)])
-def test_batched_masks_cancel(seed, C):
-    """Sum of masked streams over all clients == sum of unmasked sparse parts."""
+def test_batched_masks_cancel(seed, C, path):
+    """Sum of masked streams over all clients == sum of unmasked sparse parts,
+    on both mask data planes (counter-based seeds = the secagg protocol path;
+    jax.random keys = the legacy fold-key path)."""
     n, k = 600, 12
     sa = SecureAggConfig(mask_ratio=0.3, seed=seed)
     g, r = _batch(jax.random.key(seed), C, n)
-    pk, ps = streams.pair_key_matrix(sa, list(range(C)), round_t=3)
     km = sa.k_mask_for(n, C)
+    kw = {}
+    if path == "seeds":
+        kw["pair_seeds"], kw["pair_signs"] = streams.pair_seed_matrix(
+            sa, list(range(C)), round_t=3)
+    else:
+        kw["pair_keys"], kw["pair_signs"] = streams.pair_key_matrix(
+            sa, list(range(C)), round_t=3)
     st, nr = streams.encode_leaf_batch(
-        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
-        k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+        g, r, k=k, nb=1, m=n, size=n, k_mask=km, mask_p=sa.p, mask_q=sa.q,
+        leaf_id=0, **kw)
     dense = streams.decode_leaf_batch(st, nb=1, m=n, size=n)
     np.testing.assert_allclose(np.asarray(dense), np.asarray((g - nr).sum(0)),
                                rtol=1e-4, atol=1e-5)
@@ -50,10 +59,10 @@ def test_weighted_aggregation_exact_under_masks():
     sa = SecureAggConfig(mask_ratio=0.2, seed=11)
     g, r = _batch(jax.random.key(4), C, n)
     w = jnp.array([0.4, 0.3, 0.2, 0.1])
-    pk, ps = streams.pair_key_matrix(sa, list(range(C)), round_t=0)
+    pk, ps = streams.pair_seed_matrix(sa, list(range(C)), round_t=0)
     km = sa.k_mask_for(n, C)
     st, nr = streams.encode_leaf_batch(
-        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        g, r, k=k, nb=1, m=n, size=n, pair_seeds=pk, pair_signs=ps,
         k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0, weights=w)
     dense = streams.decode_leaf_batch(st, nb=1, m=n, size=n)
     expected = ((g - nr) * w[:, None]).sum(0)
@@ -69,14 +78,14 @@ def test_dropout_mask_reconstruction_cancels(drop):
     sa = SecureAggConfig(mask_ratio=0.3, seed=5)
     g, r = _batch(jax.random.key(9), C, n)
     alive = jnp.array([c not in drop for c in range(C)])
-    pk, ps = streams.pair_key_matrix(sa, list(range(C)), round_t=2)
+    pk, ps = streams.pair_seed_matrix(sa, list(range(C)), round_t=2)
     km = sa.k_mask_for(n, C)
     st, nr = streams.encode_leaf_batch(
-        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        g, r, k=k, nb=1, m=n, size=n, pair_seeds=pk, pair_signs=ps,
         k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
     expected = ((g - nr) * alive[:, None]).sum(0)
     recovered = streams.decode_leaf_batch(
-        st, nb=1, m=n, size=n, alive=alive, pair_keys=pk, pair_signs=ps,
+        st, nb=1, m=n, size=n, alive=alive, pair_seeds=pk, pair_signs=ps,
         k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
     np.testing.assert_allclose(np.asarray(recovered), np.asarray(expected),
                                rtol=1e-4, atol=1e-5)
@@ -86,16 +95,17 @@ def test_dropout_mask_reconstruction_cancels(drop):
 
 def test_engine_matches_reference_single_client_path():
     """The batched engine and the protocol-reference path (encode_leaf +
-    masks.client_masks) produce identical streams — same PRNG draws, same
-    unified-stream slots (the engine adds one gated self-slot block)."""
+    masks.client_masks) produce identical streams — same counter-based
+    draws, same unified-stream slots (the engine adds one gated self-slot
+    block)."""
     n, k, C = 400, 8, 3
     sa = SecureAggConfig(mask_ratio=0.3, seed=21)
     parts = [0, 1, 2]
     km = sa.k_mask_for(n, C)
     g, r = _batch(jax.random.key(3), C, n)
-    pk, ps = streams.pair_key_matrix(sa, parts, round_t=7)
+    pk, ps = streams.pair_seed_matrix(sa, parts, round_t=7)
     st, nr = streams.encode_leaf_batch(
-        g, r, k=k, nb=1, m=n, size=n, pair_keys=pk, pair_signs=ps,
+        g, r, k=k, nb=1, m=n, size=n, pair_seeds=pk, pair_signs=ps,
         k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
     for ci, c in enumerate(parts):
         mask = client_masks(sa, c, parts, 7, 0, n, km)
@@ -123,17 +133,20 @@ def test_engine_matches_reference_single_client_path():
                                    rtol=1e-6, atol=1e-7)
 
 
-def test_pairwise_mask_rows_match_masks_py():
-    """nb=1 mask generation reproduces masks.pair_mask draw-for-draw."""
+def test_mask_streams_all_pairs_match_masks_py():
+    """The fused counter-based mask pass reproduces masks.pair_mask
+    draw-for-draw (bit-identical indices AND values)."""
     sa = SecureAggConfig(mask_ratio=0.5, seed=13)
     n, km = 256, 17
-    pk, ps = streams.pair_key_matrix(sa, [4, 9], round_t=5)
+    pk, ps = streams.pair_seed_matrix(sa, [4, 9], round_t=5)
     ref = pair_mask(sa, 4, 9, 5, 3, n, km)
-    idx, vals = streams.pairwise_mask_rows(
-        pk[0, 1][None], ps[0, 1][None], 1, km, n, p=sa.p, q=sa.q, leaf_id=3)
-    np.testing.assert_array_equal(np.asarray(ref.indices), np.asarray(idx[0]))
-    np.testing.assert_allclose(np.asarray(ref.values), np.asarray(vals[0]),
-                               rtol=1e-6)
+    idx, vals = streams.mask_streams_all_pairs(
+        pk, ps, 1, km, n, p=sa.p, q=sa.q, leaf_id=3)
+    # client 0 (id 4): peer block 1 holds its mask toward id 9
+    np.testing.assert_array_equal(np.asarray(ref.indices),
+                                  np.asarray(idx[0, 0, km:2 * km]))
+    np.testing.assert_array_equal(np.asarray(ref.values),
+                                  np.asarray(vals[0, 0, km:2 * km]))
 
 
 def test_blocked_conservation_via_engine():
