@@ -1,103 +1,17 @@
 """Batched stream-engine throughput vs the seed per-client aggregation loop.
 
-Measures one secure-aggregation round for a single leaf at ``n_clients``
-simulated clients: error-feedback accumulate -> top-k ∪ mask-support unified
-streams -> server scatter-add decode.
-
-  * ``loop``    — the seed implementation shape: an un-jitted Python loop that
-    encodes one client at a time (eager XLA dispatches per client) and
-    scatter-adds one client's stream at a time into the dense buffer.
-  * ``batched`` — the stream engine (core/streams.py): every client encoded in
-    one vmapped+jitted program, one fused scatter-add for the whole round.
-
-Emits ``name,us_per_call,derived`` rows via benchmarks/run.py (suite key
-``agg``), or a JSON document when run standalone with ``--json``.
+Thin shim: the measurement moved to ``repro.bench.agg_bench`` (suite key
+``agg``, BENCH_agg.json — see EXPERIMENTS.md). This wrapper keeps the legacy
+``run(quick)`` row interface for ``benchmarks/run.py`` and the standalone
+``--json`` CLI for one deprecation cycle.
 """
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-
-from repro.core import streams
-from repro.core.masks import client_masks
-from repro.core.secure_agg import encode_leaf
-from repro.core.types import SecureAggConfig, THGSConfig
-
-
-def _time(fn, reps: int) -> float:
-    fn()  # warmup / compile
-    t0 = time.perf_counter()
-    for _ in range(reps):
-        fn()
-    return (time.perf_counter() - t0) / reps * 1e6  # us
-
-
-def _loop_round(grads, residuals, k, thgs, sa, participants, size):
-    """The seed path: per-client Python encode loop + per-client scatter."""
-    C = len(participants)
-    k_mask = sa.k_mask_for(size, C)
-    streams_all = []
-    for ci, c in enumerate(participants):
-        mask = client_masks(sa, c, participants, 0, 0, size, k_mask)
-        enc = encode_leaf(grads[ci], residuals[ci], k, thgs, mask)
-        streams_all.append(enc.stream)
-    dense = jnp.zeros((size,), jnp.float32)
-    for s in streams_all:
-        dense = dense.at[s.indices].add(s.values / C)
-    return dense.block_until_ready()
-
-
-def _one_size(size: int, n_clients: int, reps: int):
-    k = max(1, size // 100)
-    thgs = THGSConfig(s0=0.01, alpha=1.0, s_min=0.01, time_varying=False)
-    sa = SecureAggConfig(mask_ratio=0.01, seed=7)
-    participants = list(range(n_clients))
-    key = jax.random.key(0)
-    grads = jax.random.normal(key, (n_clients, size))
-    residuals = jnp.zeros_like(grads)
-    k_mask = sa.k_mask_for(size, n_clients)
-    # the production data plane: counter-based pair seeds (repro/secagg),
-    # not the legacy jax.random pair_keys path
-    pair_seeds, pair_signs = streams.pair_seed_matrix(sa, participants, 0)
-
-    def batched_round():
-        st, _ = streams.encode_leaf_batch(
-            grads, residuals, k=k, nb=1, m=size, size=size,
-            pair_seeds=pair_seeds, pair_signs=pair_signs, k_mask=k_mask,
-            mask_p=sa.p, mask_q=sa.q, leaf_id=0)
-        return streams.decode_leaf_batch(
-            st, nb=1, m=size, size=size).block_until_ready()
-
-    us_loop = _time(lambda: _loop_round(grads, residuals, k, thgs, sa,
-                                        participants, size), reps)
-    us_batched = _time(batched_round, reps)
-
-    k_total = k + n_clients * k_mask
-    stream_mb = n_clients * k_total * 8 / 1e6          # int32 idx + f32 val
-    dense_mb = n_clients * size * 4 / 1e6
-    speedup = us_loop / us_batched
-    return [
-        (f"agg/loop_c{n_clients}_n{size}", us_loop,
-         f"{n_clients / (us_loop / 1e6):.0f}_clients_per_s"),
-        (f"agg/batched_c{n_clients}_n{size}", us_batched,
-         f"{n_clients / (us_batched / 1e6):.0f}_clients_per_s"),
-        (f"agg/speedup_c{n_clients}_n{size}", 0.0, f"{speedup:.1f}x"),
-        (f"agg/bytes_c{n_clients}_n{size}", 0.0,
-         f"sparse{stream_mb:.1f}MB_vs_dense{dense_mb:.0f}MB"),
-    ]
-
 
 def run(quick: bool = False):
-    # headline: the paper-model regime (financial MLP/VGG leaves, 64k params);
-    # the second size shows the top-k-bound tail where both paths converge on
-    # the same sort cost
-    if quick:
-        return _one_size(1 << 14, 8, reps=2)
-    rows = _one_size(1 << 16, 32, reps=3)
-    rows += _one_size(1 << 20, 32, reps=2)
-    return rows
+    from repro.bench.agg_bench import rows
+
+    return rows(quick=quick)
 
 
 def main():

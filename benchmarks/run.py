@@ -1,13 +1,16 @@
-"""Benchmark runner — one module per paper table/figure.
+"""DEPRECATED shim over ``python -m repro.bench --csv``.
 
-Prints ``name,us_per_call,derived`` CSV rows. ``--quick`` shrinks every run
-(used in CI); the default sizes match EXPERIMENTS.md.
+The benchmark runner moved into the package (``repro.bench``,
+BENCH_*.json + CI gate — see EXPERIMENTS.md). This wrapper keeps the old
+``name,us_per_call,derived`` CSV surface and ``--only`` keys working for one
+deprecation cycle; switch invocations to::
+
+    PYTHONPATH=src python -m repro.bench --csv [--quick] [--only ...]
 """
 from __future__ import annotations
 
 import argparse
 import sys
-import time
 
 
 def main() -> None:
@@ -15,38 +18,21 @@ def main() -> None:
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", default=None,
                     help="comma-separated subset: "
-                         "table1,table2,fig1,fig3,roofline,agg")
+                         "table1,table2,fig1,fig3,roofline,agg,round")
     args = ap.parse_args()
 
-    from benchmarks import (bench_agg, fig1_sparsity_accuracy,
-                            fig3_thgs_vs_flat, roofline, table1_model_sizes,
-                            table2_comm_cost)
+    print("benchmarks/run.py is deprecated; use "
+          "'PYTHONPATH=src python -m repro.bench --csv' instead",
+          file=sys.stderr)
+    from repro.bench.__main__ import main as bench_main
 
-    suites = {
-        "table1": table1_model_sizes.run,
-        "table2": table2_comm_cost.run,
-        "fig1": fig1_sparsity_accuracy.run,
-        "fig3": fig3_thgs_vs_flat.run,
-        "roofline": roofline.run,
-        "agg": bench_agg.run,
-    }
-    chosen = (args.only.split(",") if args.only else list(suites))
-
-    print("name,us_per_call,derived")
-    failures = 0
-    for key in chosen:
-        t0 = time.time()
-        try:
-            rows = suites[key](quick=args.quick)
-        except Exception as e:  # keep the suite going; report the failure
-            print(f"{key}/ERROR,0,{type(e).__name__}:{e}", flush=True)
-            failures += 1
-            continue
-        for name, us, derived in rows:
-            print(f"{name},{us:.1f},{derived}", flush=True)
-        print(f"# {key} finished in {time.time()-t0:.1f}s", file=sys.stderr)
-    if failures:
-        raise SystemExit(1)
+    # the historical default suite list (repro.bench alone defaults to the
+    # JSON perf suites round+agg)
+    only = args.only or "table1,table2,fig1,fig3,roofline,agg"
+    argv = ["--csv", "--only", only]
+    if args.quick:
+        argv.append("--quick")
+    raise SystemExit(bench_main(argv))
 
 
 if __name__ == "__main__":

@@ -1,0 +1,66 @@
+"""repro.bench — the machine-readable performance trajectory.
+
+``python -m repro.bench`` times the hot paths (the client-parallel federated
+round, serial vs device-sharded, and the aggregation kernels) and emits
+schema'd JSON documents — ``BENCH_round.json`` / ``BENCH_agg.json`` at the
+repo root — that CI gates every PR against (``--gate``). EXPERIMENTS.md
+documents the schema and how to refresh the committed baselines.
+
+This package also subsumes ``benchmarks/run.py``'s CSV printer: the legacy
+paper-table suites (table1/table2/fig1/fig3/roofline) remain importable from
+the repo-root ``benchmarks`` package and run here via ``--csv --only ...``;
+``benchmarks/run.py`` is a deprecation shim over that entry point.
+
+Import discipline: this module and ``repro.bench.schema`` import no jax —
+the CLI must be able to set ``XLA_FLAGS`` (device count) before the first
+jax import, and the CI gate runs without touching a backend at all. The
+suite implementations (``round_bench``, ``agg_bench``) are imported lazily.
+"""
+from __future__ import annotations
+
+from repro.bench.schema import (SCHEMA_VERSION, gate_compare, iter_entries,
+                                make_doc, validate_doc)
+
+# JSON suites: name -> (module under repro.bench, default output filename)
+JSON_SUITES = {
+    "round": ("repro.bench.round_bench", "BENCH_round.json"),
+    "agg": ("repro.bench.agg_bench", "BENCH_agg.json"),
+}
+
+# legacy CSV-only suites living in the repo-root benchmarks/ package
+LEGACY_SUITES = {
+    "table1": ("benchmarks.table1_model_sizes", "run"),
+    "table2": ("benchmarks.table2_comm_cost", "run"),
+    "fig1": ("benchmarks.fig1_sparsity_accuracy", "run"),
+    "fig3": ("benchmarks.fig3_thgs_vs_flat", "run"),
+    "roofline": ("benchmarks.roofline", "run"),
+}
+
+
+def run_suite(name: str, quick: bool = False) -> list[dict]:
+    """Run one suite by name; returns normalized entry dicts."""
+    import importlib
+
+    if name in JSON_SUITES:
+        mod = importlib.import_module(JSON_SUITES[name][0])
+        return mod.entries(quick=quick)
+    if name in LEGACY_SUITES:
+        mod_name, fn_name = LEGACY_SUITES[name]
+        try:
+            mod = importlib.import_module(mod_name)
+        except ImportError as e:
+            raise ImportError(
+                f"legacy suite {name!r} needs the repo-root 'benchmarks' "
+                "package on sys.path (run from the repository root)") from e
+        rows = getattr(mod, fn_name)(quick=quick)
+        return [{"name": n, "us_per_call": float(us), "derived": str(d)}
+                for n, us, d in rows]
+    raise KeyError(
+        f"unknown suite {name!r}; know {sorted(JSON_SUITES)} + "
+        f"{sorted(LEGACY_SUITES)}")
+
+
+__all__ = [
+    "JSON_SUITES", "LEGACY_SUITES", "SCHEMA_VERSION", "gate_compare",
+    "iter_entries", "make_doc", "run_suite", "validate_doc",
+]

@@ -1,0 +1,136 @@
+"""Aggregation-engine microbenchmarks (suite key ``agg`` -> BENCH_agg.json).
+
+The canonical implementation of what ``benchmarks/bench_agg.py`` measured
+(that module is now a thin shim over this one): one secure-aggregation round
+for a single leaf at ``n_clients`` simulated clients —
+
+  * ``loop``    — the seed implementation shape: an un-jitted Python loop that
+    encodes one client at a time and scatter-adds one stream at a time.
+  * ``batched`` — the stream engine (core/streams.py): every client encoded in
+    one vmapped+jitted program, one fused scatter-add for the whole round.
+
+plus kernel-level micro timings for the two data-plane primitives the sharded
+round leans on: the counter-based pair-mask PRNG
+(``kernels.ops.pair_mask_streams``) and the fused scatter-add decode
+(``kernels.ops.stream_scatter_add`` / XLA scatter fallback).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.timing import entry, time_us
+from repro.core import streams
+from repro.core.masks import client_masks
+from repro.core.secure_agg import encode_leaf
+from repro.core.types import SecureAggConfig, THGSConfig
+
+
+def _loop_round(grads, residuals, k, thgs, sa, participants, size):
+    """The seed path: per-client Python encode loop + per-client scatter."""
+    C = len(participants)
+    k_mask = sa.k_mask_for(size, C)
+    streams_all = []
+    for ci, c in enumerate(participants):
+        mask = client_masks(sa, c, participants, 0, 0, size, k_mask)
+        enc = encode_leaf(grads[ci], residuals[ci], k, thgs, mask)
+        streams_all.append(enc.stream)
+    dense = jnp.zeros((size,), jnp.float32)
+    for s in streams_all:
+        dense = dense.at[s.indices].add(s.values / C)
+    return dense.block_until_ready()
+
+
+def _one_size(size: int, n_clients: int, reps: int) -> list[dict]:
+    k = max(1, size // 100)
+    thgs = THGSConfig(s0=0.01, alpha=1.0, s_min=0.01, time_varying=False)
+    sa = SecureAggConfig(mask_ratio=0.01, seed=7)
+    participants = list(range(n_clients))
+    key = jax.random.key(0)
+    grads = jax.random.normal(key, (n_clients, size))
+    residuals = jnp.zeros_like(grads)
+    k_mask = sa.k_mask_for(size, n_clients)
+    # the production data plane: counter-based pair seeds (repro/secagg),
+    # not the legacy jax.random pair_keys path
+    pair_seeds, pair_signs = streams.pair_seed_matrix(sa, participants, 0)
+
+    def batched_round():
+        st, _ = streams.encode_leaf_batch(
+            grads, residuals, k=k, nb=1, m=size, size=size,
+            pair_seeds=pair_seeds, pair_signs=pair_signs, k_mask=k_mask,
+            mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+        return streams.decode_leaf_batch(
+            st, nb=1, m=size, size=size).block_until_ready()
+
+    us_loop = time_us(lambda: _loop_round(grads, residuals, k, thgs, sa,
+                                          participants, size), reps)
+    us_batched = time_us(batched_round, reps)
+
+    k_total = k + n_clients * k_mask
+    stream_mb = n_clients * k_total * 8 / 1e6          # int32 idx + f32 val
+    dense_mb = n_clients * size * 4 / 1e6
+    tag = f"c{n_clients}_n{size}"
+    return [
+        entry(f"agg/loop_{tag}", us_loop,
+              f"{n_clients / (us_loop / 1e6):.0f}_clients_per_s", reps=reps),
+        entry(f"agg/batched_{tag}", us_batched,
+              f"{n_clients / (us_batched / 1e6):.0f}_clients_per_s",
+              reps=reps),
+        entry(f"agg/speedup_{tag}", 0.0, f"{us_loop / us_batched:.1f}x"),
+        entry(f"agg/bytes_{tag}", 0.0,
+              f"sparse{stream_mb:.1f}MB_vs_dense{dense_mb:.0f}MB"),
+    ]
+
+
+def _kernel_micro(size: int, n_clients: int, reps: int) -> list[dict]:
+    """The two data-plane primitives, isolated."""
+    from repro.kernels import ops
+
+    sa = SecureAggConfig(mask_ratio=0.01, seed=7)
+    k_mask = max(1, sa.k_mask_for(size, n_clients))
+    seeds = jnp.arange(1, n_clients * n_clients + 1, dtype=jnp.uint32)
+    signs = jnp.ones((n_clients * n_clients,), jnp.float32)
+
+    def prng():
+        idx, vals = ops.pair_mask_streams(
+            seeds, signs, nb=1, k_mask=k_mask, m=size, p=sa.p, q=sa.q)
+        return vals.block_until_ready()
+
+    n_slots = n_clients * (max(1, size // 100) + n_clients * k_mask)
+    key = jax.random.key(1)
+    flat_idx = jax.random.randint(key, (n_slots,), 0, size, dtype=jnp.int32)
+    flat_val = jax.random.normal(key, (n_slots,), jnp.float32)
+
+    def scatter():
+        return streams._scatter_flat(
+            flat_idx, flat_val, size,
+            jax.default_backend() == "tpu").block_until_ready()
+
+    tag = f"c{n_clients}_n{size}"
+    us_prng = time_us(prng, reps)
+    us_scatter = time_us(scatter, reps)
+    return [
+        entry(f"agg/mask_prng_{tag}", us_prng,
+              f"{n_clients * n_clients * k_mask}_slots", reps=reps),
+        entry(f"agg/scatter_add_{tag}", us_scatter,
+              f"{n_slots}_slots", reps=reps),
+    ]
+
+
+def entries(quick: bool = False) -> list[dict]:
+    # headline: the paper-model regime (financial MLP/VGG leaves, 64k params);
+    # the second size shows the top-k-bound tail where both paths converge on
+    # the same sort cost
+    if quick:
+        return _one_size(1 << 14, 8, reps=2) + _kernel_micro(1 << 14, 8,
+                                                             reps=3)
+    out = _one_size(1 << 16, 32, reps=3)
+    out += _one_size(1 << 20, 32, reps=2)
+    out += _kernel_micro(1 << 16, 32, reps=5)
+    return out
+
+
+def rows(quick: bool = False) -> list[tuple]:
+    """Legacy ``(name, us_per_call, derived)`` tuples for the CSV printer."""
+    return [(e["name"], e["us_per_call"], e["derived"])
+            for e in entries(quick=quick)]

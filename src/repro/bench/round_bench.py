@@ -1,0 +1,109 @@
+"""Federated-round benchmarks (suite key ``round`` -> BENCH_round.json).
+
+Times one full ``core.fedavg.run_round`` — local SGD for the whole cohort,
+THGS encode, pair-mask PRNG, fused scatter-add decode, server update — in
+three configurations:
+
+  * ``serial``  — the single-device vmap path (``mesh=None``);
+  * ``sharded`` — the client-parallel path (DESIGN.md §11): the cohort
+    partitioned over a 1-D ``clients`` device mesh, present only when the
+    process has a usable multi-device mesh (the CLI forces 8 host devices on
+    CPU so CI-quick always exercises it);
+  * a secure-aggregation **dropout** round of each (Bonawitz recovery on the
+    hot path).
+
+Sharded and serial rounds are bit-exact, so the delta between their entries
+is pure execution cost — the number the perf trajectory tracks PR over PR.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.timing import entry, time_us
+from repro.core import fedavg
+from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+
+
+def _setup(n_clients: int, local_steps: int, batch: int, seed: int = 0):
+    from repro.models.paper_models import PAPER_MODELS, cross_entropy_loss
+
+    model = PAPER_MODELS["mnist_mlp"]
+    loss_fn = cross_entropy_loss(model)
+    params = model.init(jax.random.key(seed))
+    key = jax.random.key(seed + 1)
+    x = jax.random.normal(key, (n_clients, local_steps, batch, 784),
+                          jnp.float32)
+    y = jax.random.randint(key, (n_clients, local_steps, batch), 0, 10)
+    batches = {c: (x[c], y[c]) for c in range(n_clients)}
+    fed = FedConfig(n_clients=n_clients, clients_per_round=n_clients,
+                    local_steps=local_steps, local_batch=batch,
+                    local_lr=0.05, rounds=100)
+    # time_varying=False pins the k schedule: every timed call compiles once
+    thgs = THGSConfig(s0=0.05, alpha=0.9, s_min=0.01, time_varying=False)
+    sa = SecureAggConfig(mask_ratio=0.01, seed=11)
+    return model, loss_fn, params, batches, fed, thgs, sa
+
+
+def _round_timer(params, batches, loss_fn, fed, thgs, sa, *, mesh,
+                 dropped=()):
+    def call():
+        state = fedavg.init_state(params, fed)
+        state = fedavg.run_round(state, batches, loss_fn, fed, thgs, sa,
+                                 dropped=dropped, mesh=mesh)
+        jax.block_until_ready(
+            jax.tree_util.tree_leaves(state.params))
+        return state
+
+    return call
+
+
+def entries(quick: bool = False) -> list[dict]:
+    from repro.launch.mesh import clients_mesh_for
+
+    if quick:
+        C, steps, batch, reps = 8, 2, 32, 2
+    else:
+        C, steps, batch, reps = 32, 5, 50, 3
+    _, loss_fn, params, batches, fed, thgs, sa = _setup(C, steps, batch)
+    mesh = clients_mesh_for(C)
+    n_dev = mesh.devices.size if mesh is not None else 1
+    model_size = sum(x.size for x in jax.tree_util.tree_leaves(params))
+    dropped = tuple(range(max(1, C // 4)))   # recoverable: threshold=0.6
+
+    out = [entry(f"round/model_size_c{C}", 0.0,
+                 f"{model_size}_params_mnist_mlp")]
+    us_serial = time_us(
+        _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=None),
+        reps)
+    out.append(entry(f"round/serial_c{C}", us_serial,
+                     f"{C / (us_serial / 1e6):.0f}_clients_per_s", reps=reps))
+    us_serial_drop = time_us(
+        _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=None,
+                     dropped=dropped), reps)
+    out.append(entry(f"round/serial_dropout_c{C}", us_serial_drop,
+                     f"{len(dropped)}_dropped", reps=reps))
+    if mesh is None:
+        out.append(entry(f"round/sharded_c{C}", 0.0,
+                         "unavailable_single_device"))
+        return out
+    us_sharded = time_us(
+        _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=mesh),
+        reps)
+    out.append(entry(f"round/sharded_c{C}_d{n_dev}", us_sharded,
+                     f"{C / (us_sharded / 1e6):.0f}_clients_per_s",
+                     reps=reps))
+    us_sharded_drop = time_us(
+        _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=mesh,
+                     dropped=dropped), reps)
+    out.append(entry(f"round/sharded_dropout_c{C}_d{n_dev}", us_sharded_drop,
+                     f"{len(dropped)}_dropped", reps=reps))
+    out.append(entry(f"round/speedup_c{C}_d{n_dev}", 0.0,
+                     f"{us_serial / us_sharded:.2f}x_vs_serial"))
+    return out
+
+
+def rows(quick: bool = False) -> list[tuple]:
+    """Legacy ``(name, us_per_call, derived)`` tuples for the CSV printer."""
+    return [(e["name"], e["us_per_call"], e["derived"])
+            for e in entries(quick=quick)]

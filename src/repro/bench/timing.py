@@ -1,0 +1,27 @@
+"""Shared timing helpers for the bench suites."""
+from __future__ import annotations
+
+import time
+from typing import Callable
+
+
+def time_us(fn: Callable[[], object], reps: int, *, warmup: int = 1) -> float:
+    """Mean wall-clock microseconds per call after ``warmup`` compile calls.
+
+    The callable must block on its own result (``.block_until_ready()``) —
+    async dispatch otherwise times the enqueue, not the work.
+    """
+    for _ in range(max(warmup, 0)):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def entry(name: str, us: float, derived: str = "", *, reps: int = 0) -> dict:
+    """One normalized BENCH entry (us == 0.0 marks an info-only row)."""
+    e = {"name": name, "us_per_call": float(us), "derived": str(derived)}
+    if reps:
+        e["reps"] = int(reps)
+    return e

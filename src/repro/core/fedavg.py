@@ -27,6 +27,7 @@ normalizes by the survivors' total weight after the masks have cancelled.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Any, Callable, Mapping, Sequence
 
@@ -113,6 +114,44 @@ def batched_client_update(
     )(batches_stacked)
 
 
+@functools.lru_cache(maxsize=None)
+def _sharded_update_program(mesh, loss_fn: LossFn, local_steps: int,
+                            prox_mu: float):
+    """Cached shard_map twin of ``batched_client_update`` for a clients mesh."""
+    P = jax.sharding.PartitionSpec
+
+    def body(params, batches_l, lr):
+        return jax.vmap(
+            lambda b: _client_update(params, b, loss_fn, local_steps, lr,
+                                     prox_mu)
+        )(batches_l)
+
+    fn = se.shard_map_clients(
+        body, mesh,
+        in_specs=(P(), P(se.CLIENT_AXIS), P()),
+        out_specs=(P(se.CLIENT_AXIS), P(se.CLIENT_AXIS)))
+    return jax.jit(fn)
+
+
+def batched_client_update_sharded(
+    mesh,
+    params: PyTree,
+    batches_stacked: Any,   # leading axis = clients, then local_steps
+    loss_fn: LossFn,
+    local_steps: int,
+    lr: float,
+    prox_mu: float = 0.0,
+) -> tuple[PyTree, jax.Array]:
+    """Device-sharded local SGD: clients partitioned over the ``clients``
+    mesh axis, each device vmapping its shard through the same
+    ``_client_update`` program. Per-client math is independent, so deltas are
+    bit-exact with ``batched_client_update`` (losses may differ in the last
+    ulp from reduction layout; the parity tests pin the deltas and the
+    decoded server update)."""
+    fn = _sharded_update_program(mesh, loss_fn, local_steps, float(prox_mu))
+    return fn(params, batches_stacked, lr)
+
+
 @dataclasses.dataclass
 class FederatedState:
     params: PyTree
@@ -146,6 +185,7 @@ def run_round(
     client_weights: Mapping[int, float] | None = None,
     dropped: Sequence[int] = (),
     protocol=None,
+    mesh=None,
 ) -> FederatedState:
     """One aggregation round over the provided participating clients.
 
@@ -160,6 +200,14 @@ def run_round(
     ``protocol`` injects a pre-built ``RoundProtocol`` (tests); by default the
     round runs its own setup over the participants.
 
+    ``mesh`` opts into the device-sharded client-parallel round (DESIGN.md
+    §11): a 1-D ``clients`` mesh (launch/mesh.clients_mesh_for) partitions the
+    cohort over devices — local SGD, THGS encode and pair-mask PRNG run
+    per-shard under shard_map, and the server update is one sparse-stream
+    all_gather + the identical fused scatter-add, bit-exact with the vmap
+    path. When the mesh cannot host the cohort (None, 1 device, or cohort not
+    divisible) the single-device vmap path runs, unchanged.
+
     All participants' batch pytrees must share one structure and one set of
     array shapes (they are stacked on a leading client axis for the batched
     local-SGD program); pad ragged local data to fixed [steps, batch] first,
@@ -167,6 +215,7 @@ def run_round(
     """
     participants = sorted(client_batches.keys())
     C = len(participants)
+    sharded = se.can_shard_clients(mesh, C)
     dropped = set(dropped)
     assert dropped <= set(participants), "dropped must be participants"
     survivors = [c for c in participants if c not in dropped]
@@ -186,14 +235,26 @@ def run_round(
     # ---- 1. all clients' local SGD, one vmapped dispatch ----
     batches_stacked = jax.tree_util.tree_map(
         lambda *xs: jnp.stack(xs), *[client_batches[c] for c in participants])
-    deltas_stacked, losses = batched_client_update(
-        state.params,
-        batches_stacked,
-        loss_fn,
-        fed.local_steps,
-        fed.local_lr,
-        fed.prox_mu if fed.algorithm == "fedprox" else 0.0,
-    )
+    if sharded:
+        batches_stacked = se.shard_client_tree(batches_stacked, mesh)
+        deltas_stacked, losses = batched_client_update_sharded(
+            mesh,
+            state.params,
+            batches_stacked,
+            loss_fn,
+            fed.local_steps,
+            fed.local_lr,
+            fed.prox_mu if fed.algorithm == "fedprox" else 0.0,
+        )
+    else:
+        deltas_stacked, losses = batched_client_update(
+            state.params,
+            batches_stacked,
+            loss_fn,
+            fed.local_steps,
+            fed.local_lr,
+            fed.prox_mu if fed.algorithm == "fedprox" else 0.0,
+        )
     losses_list = [float(x) for x in losses]
 
     if thgs is not None:
@@ -231,6 +292,8 @@ def run_round(
                           for c in participants]
         res_stacked = [jnp.stack([rl[i] for rl in res_per_client])
                        for i in range(len(leaves))]
+        if sharded:
+            res_stacked = [se.shard_client_tree(r, mesh) for r in res_stacked]
 
         agg_leaves, new_res_leaves = [], []
         ks_acct, k_masks_acct = [], []
@@ -238,20 +301,33 @@ def run_round(
                 zip(delta_leaves, res_stacked, ks, leaf_shapes)):
             size = leaves[leaf_id].size
             k_mask = sa.k_mask_for(size, C) if use_masks else 0
-            # ---- 2. batched unified-stream encode (all clients, one jit) ----
-            streams_b, new_res = se.encode_leaf_batch(
-                d_st, r_st, k=k, nb=1, m=size, size=size,
-                selector=thgs.selector, sample_frac=thgs.sample_frac,
-                pair_seeds=pair_seeds, pair_signs=pair_signs,
-                k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
-                leaf_id=leaf_id, weights=w_vec)
-            # ---- 3. fused scatter-add decode + dropout recovery ----
-            dense = se.decode_leaf_batch(
-                streams_b, nb=1, m=size, size=size,
-                alive=alive if dropped else None,
-                pair_seeds=recovery_seeds if dropped else None,
-                pair_signs=pair_signs if dropped else None,
-                k_mask=k_mask, mask_p=sa.p, mask_q=sa.q, leaf_id=leaf_id)
+            if sharded:
+                # ---- 2+3. client-parallel encode + fused decode: one
+                # shard_map program per leaf (DESIGN.md §11) ----
+                dense, new_res = se.encode_decode_leaf_sharded(
+                    mesh, d_st, r_st, k=k, nb=1, m=size, size=size,
+                    selector=thgs.selector, sample_frac=thgs.sample_frac,
+                    pair_seeds=pair_seeds, pair_signs=pair_signs,
+                    recovery_seeds=recovery_seeds if dropped else None,
+                    alive=alive if dropped else None,
+                    k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
+                    leaf_id=leaf_id, weights=w_vec)
+            else:
+                # ---- 2. batched unified-stream encode (all clients, one
+                # jit) ----
+                streams_b, new_res = se.encode_leaf_batch(
+                    d_st, r_st, k=k, nb=1, m=size, size=size,
+                    selector=thgs.selector, sample_frac=thgs.sample_frac,
+                    pair_seeds=pair_seeds, pair_signs=pair_signs,
+                    k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
+                    leaf_id=leaf_id, weights=w_vec)
+                # ---- 3. fused scatter-add decode + dropout recovery ----
+                dense = se.decode_leaf_batch(
+                    streams_b, nb=1, m=size, size=size,
+                    alive=alive if dropped else None,
+                    pair_seeds=recovery_seeds if dropped else None,
+                    pair_signs=pair_signs if dropped else None,
+                    k_mask=k_mask, mask_p=sa.p, mask_q=sa.q, leaf_id=leaf_id)
             agg_leaves.append(
                 (dense / w_surv_total).reshape(shape)
                 .astype(leaf_dtypes[leaf_id]))

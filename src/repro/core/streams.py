@@ -54,6 +54,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# The mesh axis name the client-parallel round shards over. Defined here (not
+# in launch/mesh.py) because core must not import launch; the mesh builders in
+# launch/mesh.py import this constant.
+CLIENT_AXIS = "clients"
+
 
 class StreamBatch(NamedTuple):
     """Stacked unified streams: leading axis = clients (absent when single)."""
@@ -203,6 +208,27 @@ def pair_seed_matrix(sa, participant_ids: Sequence[int], round_t: int):
     return masks.seed_matrix_from_keys(ids, privs, pubs, round_t)
 
 
+def _fold_seeds(seeds: jax.Array, leaf_id) -> jax.Array:
+    from repro.kernels import ref as kref
+
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    return kref.fold_leaf_seed(seeds, leaf_id) if leaf_id is not None \
+        else seeds
+
+
+def _client_mask_layout(idx: jax.Array, mag: jax.Array, signs: jax.Array,
+                        nb: int, k_mask: int) -> tuple[jax.Array, jax.Array]:
+    """``[Cr, C, nb, k_mask]`` pair streams -> the engine's per-client layout
+    ``[Cr, nb, C * k_mask]`` (peer-major within a row), signs applied to the
+    magnitudes. Shared by the full-matrix and row-slice generators so the
+    serial and sharded encodes can never disagree on the slot layout."""
+    cr, n = idx.shape[:2]
+    vals = jnp.asarray(signs, jnp.float32)[:, :, None, None] * mag
+    idx = idx.transpose(0, 2, 1, 3)
+    vals = vals.transpose(0, 2, 1, 3)
+    return idx.reshape(cr, nb, n * k_mask), vals.reshape(cr, nb, n * k_mask)
+
+
 def mask_streams_all_pairs(
     pair_seeds: jax.Array,   # uint32[C, C] counter seeds (0 on the diagonal)
     pair_signs: jax.Array,   # f32[C, C] Bonawitz signs (0 on the diagonal)
@@ -223,12 +249,9 @@ def mask_streams_all_pairs(
     host loop of masks.client_masks on the batched path.
     """
     from repro.kernels import ops
-    from repro.kernels import ref as kref
 
     C = pair_seeds.shape[0]
-    seeds = jnp.asarray(pair_seeds, jnp.uint32)
-    if leaf_id is not None:
-        seeds = kref.fold_leaf_seed(seeds, leaf_id)
+    seeds = _fold_seeds(pair_seeds, leaf_id)
     # the seed matrix is symmetric and a stream's idx/|val| depend only on
     # the seed, so generate each unordered pair (upper triangle incl. the
     # diagonal) once and mirror via a static gather — halving the mask-PRNG
@@ -242,12 +265,40 @@ def mask_streams_all_pairs(
     idx_u, mag_u = ops.pair_mask_streams(
         seeds[iu, ju], jnp.ones((len(iu),), jnp.float32),
         nb=nb, k_mask=k_mask, m=m, p=p, q=q)
-    idx = idx_u[tri]                                   # [C, C, nb, k_mask]
-    vals = (jnp.asarray(pair_signs, jnp.float32)[:, :, None, None]
-            * mag_u[tri])
-    idx = idx.transpose(0, 2, 1, 3)
-    vals = vals.transpose(0, 2, 1, 3)
-    return (idx.reshape(C, nb, C * k_mask), vals.reshape(C, nb, C * k_mask))
+    return _client_mask_layout(idx_u[tri], mag_u[tri], pair_signs, nb, k_mask)
+
+
+def mask_streams_rows(
+    seeds_rows: jax.Array,   # uint32[C_loc, C] this shard's rows of the matrix
+    signs_rows: jax.Array,   # f32[C_loc, C] matching sign rows
+    nb: int,
+    k_mask: int,
+    m: int,
+    *,
+    p: float,
+    q: float,
+    leaf_id: int | jax.Array | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """A row-slice of ``mask_streams_all_pairs`` for the client-sharded round.
+
+    Inside the shard_map each device holds ``C_loc = C / n_dev`` clients and
+    generates only their pair-mask streams from the corresponding rows of the
+    (replicated) seed/sign matrices. A stream's idx/|val| depend only on the
+    seed and the seed matrix is symmetric, so row-wise generation is bit-exact
+    with the triangle-mirrored full-matrix pass the serial path uses — the
+    parity tests pin this. Returns the engine's per-client layout
+    ``(idx int32[C_loc, nb, C*k_mask], vals f32[C_loc, nb, C*k_mask])``.
+    """
+    from repro.kernels import ops
+
+    c_loc, n = seeds_rows.shape
+    seeds = _fold_seeds(seeds_rows, leaf_id).reshape(c_loc * n)
+    idx, mag = ops.pair_mask_streams(
+        seeds, jnp.ones((c_loc * n,), jnp.float32),
+        nb=nb, k_mask=k_mask, m=m, p=p, q=q)
+    return _client_mask_layout(idx.reshape(c_loc, n, nb, k_mask),
+                               mag.reshape(c_loc, n, nb, k_mask),
+                               signs_rows, nb, k_mask)
 
 
 def fold_pair_key_matrix(mask_key: jax.Array, n: int):
@@ -631,13 +682,10 @@ def dropout_cancel_streams_seeded(
     tests/test_secagg_protocol.py pins.
     """
     from repro.kernels import ops
-    from repro.kernels import ref as kref
 
     C = pair_seeds.shape[0]
     alive_f = jnp.asarray(alive, jnp.float32)
-    seeds = jnp.asarray(pair_seeds, jnp.uint32).reshape(C * C)
-    if leaf_id is not None:
-        seeds = kref.fold_leaf_seed(seeds, leaf_id)
+    seeds = _fold_seeds(pair_seeds, leaf_id).reshape(C * C)
     idx, vals = ops.pair_mask_streams(
         seeds, jnp.asarray(pair_signs, jnp.float32).reshape(C * C),
         nb=nb, k_mask=k_mask, m=m, p=p, q=q)
@@ -718,3 +766,192 @@ def decode_leaf_batch(
         streams, nb, m, alive=alive, weights=weights, extra=extra,
         use_pallas=use_pallas)
     return dense[:size]
+
+
+# ----------------------------------------- client-parallel (sharded) round
+def shard_map_clients(f, mesh, in_specs, out_specs):
+    """Full-manual shard_map across jax versions (1-D ``clients`` mesh).
+
+    jax >= 0.6 exposes jax.shard_map(check_vma=); earlier versions have
+    jax.experimental.shard_map.shard_map(check_rep=). The partial-manual
+    variant (manual over one axis of a larger mesh) lives in launch/train.py;
+    this one is full manual, which every jaxlib >= 0.4.36 partitions fine.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+
+    return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
+def shard_client_tree(tree, mesh):
+    """Place every leaf of a client-stacked pytree (leading axis = clients)
+    with its leading axis partitioned over the ``clients`` mesh — so the
+    shard_map programs consume it without a gather-then-scatter reshard."""
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    def put(x):
+        spec = PartitionSpec(CLIENT_AXIS, *((None,) * (x.ndim - 1)))
+        return jax.device_put(x, NamedSharding(mesh, spec))
+
+    return jax.tree_util.tree_map(put, tree)
+
+
+def can_shard_clients(mesh, n_clients: int) -> bool:
+    """True iff ``mesh`` can host a client-parallel round for this cohort:
+    a >1-device 1-D ``clients`` mesh whose size divides the cohort evenly
+    (shard_map needs equal shards). Callers fall back to the vmap path
+    otherwise."""
+    if mesh is None:
+        return False
+    if tuple(mesh.axis_names) != (CLIENT_AXIS,):
+        return False
+    n_dev = mesh.devices.size
+    return n_dev > 1 and n_clients % n_dev == 0
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
+                          selector: str, sample_frac: float, k_mask: int,
+                          mask_p: float, mask_q: float, with_dropout: bool,
+                          use_pallas):
+    """Build + cache the jitted shard_map program for one leaf signature.
+
+    The cache key is the static signature (mesh + block layout + schedule
+    ``k`` + mask config); jit itself re-specializes on shapes/dtypes. One
+    program per (leaf shape, k, k_mask) — the same re-specialization budget
+    as the serial ``encode_leaf_batch``/``decode_leaf_batch`` pair.
+    """
+    P = jax.sharding.PartitionSpec
+    with_masks = k_mask > 0
+
+    def body(updates_l, residuals_l, weights_l, pair_seeds, pair_signs,
+             recovery_seeds, alive, leaf_id):
+        c_loc = updates_l.shape[0]
+        leaf_shape = updates_l.shape[1:]
+        acc = jax.vmap(lambda u, r: to_blocks(
+            r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
+                updates_l, residuals_l)
+        if with_masks:
+            i0 = jax.lax.axis_index(CLIENT_AXIS) * c_loc
+            seeds_rows = jax.lax.dynamic_slice_in_dim(
+                pair_seeds, i0, c_loc, 0)
+            signs_rows = jax.lax.dynamic_slice_in_dim(
+                jnp.asarray(pair_signs, jnp.float32), i0, c_loc, 0)
+            m_idx, m_vals = mask_streams_rows(
+                seeds_rows, signs_rows, nb, k_mask, m,
+                p=mask_p, q=mask_q, leaf_id=leaf_id)
+
+            def one(acc_c, mi, mv, srow, w_c):
+                return encode_client_blocks(
+                    acc_c, k, selector=selector, sample_frac=sample_frac,
+                    mask_idx=mi, mask_vals=mv, pair_signs_row=srow,
+                    k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, weight=w_c)
+
+            gidx, vals, new_acc = jax.vmap(one)(
+                acc, m_idx, m_vals, signs_rows, weights_l)
+        else:
+            def one_plain(acc_c, w_c):
+                return encode_client_blocks(
+                    acc_c, k, selector=selector, sample_frac=sample_frac,
+                    weight=w_c)
+
+            gidx, vals, new_acc = jax.vmap(one_plain)(acc, weights_l)
+        # the server reduction: ONE collective over the clients axis. An
+        # all_gather of the sparse streams (then the identical full fused
+        # scatter-add on every device) rather than a psum of per-device dense
+        # partials — the gather moves C*k_total stream slots instead of the
+        # nb*m dense buffer, and, because every device then runs the very same
+        # scatter over the very same flat stream, the sharded round is
+        # bit-exact with the serial decode (a psum's tree-order partial sums
+        # are not).
+        g_idx = jax.lax.all_gather(gidx, CLIENT_AXIS, axis=0, tiled=True)
+        g_val = jax.lax.all_gather(vals, CLIENT_AXIS, axis=0, tiled=True)
+        extra = None
+        if with_dropout and with_masks:
+            extra = dropout_cancel_streams_seeded(
+                recovery_seeds, pair_signs, alive, nb, k_mask, m,
+                p=mask_p, q=mask_q, leaf_id=leaf_id)
+        dense = decode_sum_blocks(
+            StreamBatch(indices=g_idx, values=g_val), nb, m,
+            alive=alive if with_dropout else None, extra=extra,
+            use_pallas=use_pallas)  # with_dropout: survivor gate, masked or not
+        new_res = jax.vmap(lambda b: from_blocks(b, size, leaf_shape))(
+            new_acc).astype(residuals_l.dtype)
+        return dense[:size], new_res
+
+    fn = shard_map_clients(
+        body, mesh,
+        in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS), P(CLIENT_AXIS),
+                  P(), P(), P(), P(), P()),
+        out_specs=(P(), P(CLIENT_AXIS)))
+    return jax.jit(fn)
+
+
+def encode_decode_leaf_sharded(
+    mesh,
+    updates: jax.Array,        # [C, *leaf_shape] stacked client updates
+    residuals: jax.Array,      # [C, *leaf_shape] stacked error feedback
+    *,
+    k: int,
+    nb: int,
+    m: int,
+    size: int,
+    selector: str = "exact",
+    sample_frac: float = 0.01,
+    pair_seeds: jax.Array | None = None,
+    pair_signs: jax.Array | None = None,
+    recovery_seeds: jax.Array | None = None,
+    alive: jax.Array | None = None,
+    k_mask: int = 0,
+    mask_p: float = -1.0,
+    mask_q: float = 2.0,
+    leaf_id: int | jax.Array = 0,
+    weights: jax.Array | None = None,
+    use_pallas: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """Client-parallel encode + decode for one leaf, fused in one shard_map.
+
+    The device-sharded twin of the ``encode_leaf_batch`` -> ``decode_leaf_batch``
+    pair: clients are partitioned over the 1-D ``clients`` mesh, each device
+    runs the THGS encode and pair-mask PRNG for its shard, and the server
+    reduction is a single all_gather of the sparse streams followed by the
+    same fused scatter-add on every device (bit-exact with the serial path —
+    see the in-body comment for why not a dense psum). Dropout recovery
+    (``alive`` + ``recovery_seeds``) replicates the reconstruction streams,
+    exactly as the serial decode does.
+
+    Requires ``can_shard_clients(mesh, C)``; returns
+    ``(dense f32[size] replicated, new_residuals [C, *leaf_shape]
+    client-sharded)``. The caller normalizes by the survivors' total weight,
+    as with the serial pair.
+    """
+    C = updates.shape[0]
+    assert can_shard_clients(mesh, C), (
+        f"mesh {mesh} cannot shard {C} clients; use encode_leaf_batch")
+    with_masks = pair_seeds is not None and k_mask > 0 and C >= 2
+    # dropouts gate the decode even without masks (serial parity: the serial
+    # path passes `alive` to decode_leaf_batch whenever clients dropped);
+    # recovery streams additionally need the masks
+    with_dropout = alive is not None
+    if weights is None:
+        weights = jnp.ones((C,), jnp.float32)
+    if not with_masks:
+        k_mask = 0
+        # placeholder operands keep the program arity fixed; the with_masks
+        # branch is baked statically so they are never read
+        pair_seeds = jnp.zeros((C, C), jnp.uint32)
+        pair_signs = jnp.zeros((C, C), jnp.float32)
+    if recovery_seeds is None:
+        recovery_seeds = pair_seeds
+    if alive is None:
+        alive = jnp.ones((C,), bool)
+    fn = _sharded_leaf_program(
+        mesh, int(k), int(nb), int(m), int(size), selector,
+        float(sample_frac), int(k_mask), float(mask_p), float(mask_q),
+        bool(with_dropout), use_pallas)
+    return fn(updates, residuals, jnp.asarray(weights, jnp.float32),
+              pair_seeds, pair_signs, recovery_seeds, alive,
+              jnp.asarray(leaf_id))

@@ -9,6 +9,7 @@ and fully reproducible — see DESIGN.md §7 dataset note.
 from __future__ import annotations
 
 import dataclasses
+import zlib
 
 import numpy as np
 
@@ -33,7 +34,11 @@ def make_dataset(spec: DatasetSpec, n: int | None = None, *, seed: int = 0,
                  noise: float = 0.35, train: bool = True):
     """Returns (x: float32[n, *shape], y: int32[n])."""
     n = n if n is not None else (spec.n_train if train else spec.n_test)
-    rng = np.random.RandomState(hash((spec.name, 17)) % (2**31))
+    # stable digest, NOT builtin hash(): str hashing is salted per process
+    # (PYTHONHASHSEED), which made the class prototypes — and so every
+    # accuracy — differ between otherwise identical runs
+    digest = zlib.crc32(f"{spec.name}/17".encode())
+    rng = np.random.RandomState(digest % (2**31))
     protos = rng.randn(spec.n_classes, *spec.shape).astype(np.float32)
     # low-rank distortion directions per class
     dirs = rng.randn(spec.n_classes, 4, *spec.shape).astype(np.float32) * 0.5

@@ -4,12 +4,21 @@ Single pod: (data=16, model=16) = 256 chips (TPU v5e pod slice).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips; the 'pod' axis is the
 federation axis — each pod is one cross-silo FL participant (DESIGN.md §2).
 
+The third mesh family is the 1-D **clients** mesh (DESIGN.md §11): the
+simulation/reference round partitions a cohort of simulated clients over
+whatever devices are local — `make_clients_mesh` / `clients_mesh_for` — so
+`core/fedavg.run_round` can run its local-SGD + THGS encode + pair-mask PRNG
+per-shard under shard_map. Testable on CPU via
+``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+
 Defined as functions so importing this module never touches jax device state
 (the dry-run sets XLA_FLAGS before first jax init; tests see 1 device).
 """
 from __future__ import annotations
 
 import jax
+
+from repro.core.streams import CLIENT_AXIS
 
 
 def make_production_mesh(*, multi_pod: bool = False):
@@ -23,6 +32,35 @@ def make_debug_mesh(n_data: int = 2, n_model: int = 2, *, multi_pod: bool = Fals
     if multi_pod:
         return jax.make_mesh((2, n_data, n_model), ("pod", "data", "model"))
     return jax.make_mesh((n_data, n_model), ("data", "model"))
+
+
+def make_clients_mesh(n_devices: int | None = None):
+    """1-D ``clients`` mesh over the first ``n_devices`` local devices
+    (default: all of them). The client-parallel round's only mesh shape."""
+    devs = jax.devices()
+    n = len(devs) if n_devices is None else n_devices
+    if not 1 <= n <= len(devs):
+        raise ValueError(f"n_devices={n} outside [1, {len(devs)}]")
+    from jax.sharding import Mesh
+    import numpy as np
+
+    return Mesh(np.asarray(devs[:n]), (CLIENT_AXIS,))
+
+
+def clients_mesh_for(cohort_size: int):
+    """The largest usable clients mesh for this cohort, or None.
+
+    shard_map needs equal shards, so the mesh size must divide the cohort;
+    pick the largest divisor of ``cohort_size`` that fits the local device
+    count. Returns None when that divisor is 1 (single device or indivisible
+    cohort) — callers then stay on the vmap fallback path.
+    """
+    n_dev = len(jax.devices())
+    best = max((d for d in range(1, min(n_dev, cohort_size) + 1)
+                if cohort_size % d == 0), default=1)
+    if best <= 1:
+        return None
+    return make_clients_mesh(best)
 
 
 def logical_rules(mesh, *, fsdp: bool = True, fed_axis: str | None = None) -> dict:

@@ -4,6 +4,11 @@ Weights get 2D sharding: the contraction-input dim over the 'fsdp' logical axis
 (ZeRO-3 style, all-gathered at use) and the parallel dim over 'model' (tensor
 parallel). Stacked layer dims (from scan-over-layers) are replicated. The rules
 are keyed on leaf names so every architecture family resolves from one table.
+
+Client-parallel round (DESIGN.md §11): stacked per-client state (batches,
+residuals, deltas, streams) shards its LEADING axis over the 1-D ``clients``
+mesh — ``shard_client_tree`` (re-exported below) is the one way to spell
+that placement.
 """
 from __future__ import annotations
 
@@ -11,6 +16,11 @@ from typing import Any, Optional
 
 import jax
 from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.streams import CLIENT_AXIS, shard_client_tree  # noqa: F401
+# (re-exports, not twins: the one spelling of the client placement lives in
+# core/streams.py — core must not import launch — and launch-layer callers
+# pick it up here)
 
 PyTree = Any
 

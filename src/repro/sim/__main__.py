@@ -49,6 +49,10 @@ def main(argv=None) -> int:
                     help="shrink the run for CI smoke (3 rounds, small data)")
     ap.add_argument("--no-resume", action="store_true",
                     help="ignore existing checkpoints")
+    ap.add_argument("--shard-clients", choices=("auto", "on", "off"),
+                    default=None,
+                    help="client-parallel rounds over local devices "
+                         "(DESIGN.md §11); default: the preset's setting")
     args = ap.parse_args(argv)
 
     if args.list or not args.preset:
@@ -79,6 +83,8 @@ def main(argv=None) -> int:
         over["ckpt_every"] = args.ckpt_every
     if args.out is not None:
         over["out_json"] = args.out
+    if args.shard_clients is not None:
+        over["shard_clients"] = args.shard_clients
     if args.quick:
         over.setdefault("rounds", min(3, cfg.rounds))
         over.setdefault("n_train", min(600, cfg.n_train))
@@ -86,11 +92,14 @@ def main(argv=None) -> int:
         over["eval_every"] = 1
     cfg = cfg.replace(**over)
 
+    sim = Simulation(cfg)
+    mesh_note = (f" clients_mesh={sim.mesh.devices.size}dev"
+                 if sim.mesh is not None else "")
     print(f"# preset={args.preset} model={cfg.model} dataset={cfg.dataset} "
           f"partition={cfg.partition} rounds={cfg.rounds} "
-          f"cohort={cfg.clients_per_round}/{cfg.n_clients}", flush=True)
-    res = Simulation(cfg).run(resume=not args.no_resume,
-                              hooks=[_progress_hook])
+          f"cohort={cfg.clients_per_round}/{cfg.n_clients}{mesh_note}",
+          flush=True)
+    res = sim.run(resume=not args.no_resume, hooks=[_progress_hook])
 
     for acct in ("paper", "tpu"):
         t = res.ledger.totals(acct)

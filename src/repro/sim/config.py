@@ -17,6 +17,7 @@ from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
 PARTITIONS = ("iid", "noniid", "dirichlet")
 SAMPLERS = ("uniform", "weighted")
 ACCOUNTINGS = ("paper", "tpu")
+SHARD_CLIENTS = ("auto", "on", "off")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -55,6 +56,13 @@ class SimConfig:
     accounting : {'paper', 'tpu'}
         BitModel used for the round records logged by the server; the ledger
         reports both regardless.
+    shard_clients : {'auto', 'on', 'off'}
+        Client-parallel rounds over a 1-D ``clients`` device mesh
+        (DESIGN.md §11). 'auto' shards when more than one local device
+        evenly divides the cohort and falls back to the vmap path otherwise;
+        'on' insists (raises without a usable mesh); 'off' disables.
+        Sharded and serial rounds are bit-exact, so this is purely a
+        throughput knob.
     ckpt_dir : str, optional
         Directory for checkpoint/resume through ``checkpoint.store``;
         ``None`` disables checkpointing.
@@ -92,6 +100,11 @@ class SimConfig:
     dropout_rate: float = 0.0
     eval_every: int = 3
     seed: int = 0
+    # device sharding: 'auto' partitions the cohort over local devices when
+    # >1 device evenly divides clients_per_round (DESIGN.md §11); 'off' pins
+    # the single-device vmap path; 'on' requires a usable clients mesh and
+    # raises when none exists (tests/CI use it to prove the path ran)
+    shard_clients: str = "auto"
     # accounting + I/O
     accounting: str = "paper"
     ckpt_dir: Optional[str] = None
@@ -122,6 +135,9 @@ class SimConfig:
         if self.accounting not in ACCOUNTINGS:
             raise ValueError(f"accounting must be one of {ACCOUNTINGS}, "
                              f"got {self.accounting!r}")
+        if self.shard_clients not in SHARD_CLIENTS:
+            raise ValueError(f"shard_clients must be one of {SHARD_CLIENTS}, "
+                             f"got {self.shard_clients!r}")
         if not (1 <= self.clients_per_round <= self.n_clients):
             raise ValueError("need 1 <= clients_per_round <= n_clients, got "
                              f"{self.clients_per_round} vs {self.n_clients}")

@@ -17,6 +17,12 @@ the upload never arrived). With the cohort shape pinned, the only remaining
 re-trace source is the time-varying ``k`` schedule, which THGSConfig already
 quantizes to ``k_levels`` geometric levels. The seed driver re-traced whenever
 the cohort size wobbled; this engine makes the fixed shape a checked invariant.
+
+The fixed cohort shape is also what makes device sharding free: with
+``shard_clients`` (default 'auto') the engine builds a 1-D ``clients`` mesh
+over the local devices and ``run_round`` partitions the cohort across it
+(DESIGN.md §11) — bit-exact with the single-device path, so results never
+depend on the device count.
 """
 from __future__ import annotations
 
@@ -148,6 +154,20 @@ class Simulation:
         self.min_survivors = (
             cfg.sa.t_for(cfg.clients_per_round)
             if cfg.thgs is not None and cfg.sa.enabled else 1)
+        # client-parallel rounds: partition the (fixed-shape) cohort over a
+        # 1-D clients mesh when the devices allow it (DESIGN.md §11)
+        self.mesh = None
+        if cfg.shard_clients != "off":
+            from repro.launch.mesh import clients_mesh_for
+
+            self.mesh = clients_mesh_for(cfg.clients_per_round)
+            if cfg.shard_clients == "on" and self.mesh is None:
+                raise RuntimeError(
+                    "shard_clients='on' but no usable clients mesh: "
+                    f"{len(jax.devices())} device(s) for a cohort of "
+                    f"{cfg.clients_per_round} (need >1 devices evenly "
+                    "dividing the cohort, e.g. XLA_FLAGS="
+                    "--xla_force_host_platform_device_count=8 on CPU)")
         self.ledger = CommLedger()
 
     # ----------------------------------------------------------------- state
@@ -251,7 +271,8 @@ class Simulation:
             state = run_round(
                 state, batches, self.loss_fn, self.fed,
                 cfg.thgs, cfg.sa, bits=self.bits,
-                client_weights=self.client_weights, dropped=dropped)
+                client_weights=self.client_weights, dropped=dropped,
+                mesh=self.mesh)
             rec = state.comm_log[-1]
             self.ledger.record(rec)
             loss = float(np.mean([state.losses[c] for c in batches]))

@@ -1,0 +1,112 @@
+"""repro.bench: BENCH_*.json schema, the regression gate, and the committed
+baselines at the repo root."""
+import json
+import os
+
+import pytest
+
+from repro.bench import schema
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _doc(entries, suite="round", quick=True):
+    return schema.make_doc(entries, suite=suite, quick=quick)
+
+
+def _entry(name, us, reps=2):
+    return {"name": name, "us_per_call": us, "reps": reps, "derived": "x"}
+
+
+def test_make_doc_validates():
+    doc = _doc([_entry("round/serial_c8", 100.0)])
+    assert schema.validate_doc(doc) == []
+    combined = schema.make_doc(
+        None, suites={"round": [_entry("round/serial_c8", 1.0)],
+                      "agg": [_entry("agg/loop", 2.0)]})
+    assert schema.validate_doc(combined) == []
+    assert [e["name"] for e in schema.iter_entries(combined)] == [
+        "round/serial_c8", "agg/loop"]
+
+
+def test_validate_rejects_malformed():
+    assert schema.validate_doc({"schema": "nope"})
+    doc = _doc([_entry("a", 1.0), _entry("a", 2.0)])      # duplicate name
+    assert any("duplicate" in e for e in schema.validate_doc(doc))
+    doc = _doc([{"us_per_call": 1.0}])                    # nameless entry
+    assert any("without a name" in e for e in schema.validate_doc(doc))
+    doc = _doc([_entry("a", -1.0)])                       # negative time
+    assert any("us_per_call" in e for e in schema.validate_doc(doc))
+    assert any("non-empty" in e for e in schema.validate_doc(_doc([])))
+
+
+def test_gate_passes_within_threshold():
+    base = _doc([_entry("round/serial_c8", 100.0)])
+    cur = _doc([_entry("round/serial_c8", 299.0)])
+    failures, compared = schema.gate_compare(cur, [base], max_slowdown=3.0)
+    assert compared == 1 and failures == []
+
+
+def test_gate_fails_beyond_threshold():
+    base = _doc([_entry("round/serial_c8", 100.0)])
+    cur = _doc([_entry("round/serial_c8", 301.0)])
+    failures, compared = schema.gate_compare(cur, [base], max_slowdown=3.0)
+    assert compared == 1 and len(failures) == 1
+    assert "round/serial_c8" in failures[0]
+
+
+def test_gate_skips_info_rows_and_noise_floor():
+    base = _doc([_entry("round/speedup", 0.0),    # info row
+                 _entry("agg/tiny", 5.0)])        # below the noise floor
+    cur = _doc([_entry("round/speedup", 0.0),
+                _entry("agg/tiny", 500.0)])
+    failures, compared = schema.gate_compare(cur, [base], min_us=20.0)
+    assert failures == []
+    assert compared == 1   # only the floored entry was comparable
+
+
+def test_gate_unmatched_names_do_not_compare():
+    """Quick and full runs encode sizes in names -> no cross-mode gating."""
+    base = _doc([_entry("agg/loop_c32_n65536", 100.0)])
+    cur = _doc([_entry("agg/loop_c8_n16384", 1e9)])
+    failures, compared = schema.gate_compare(cur, [base])
+    assert failures == [] and compared == 0
+
+
+@pytest.mark.parametrize("name", ["BENCH_round.json", "BENCH_agg.json"])
+def test_committed_baselines_are_valid(name):
+    """The perf-trajectory baselines at the repo root stay schema-valid."""
+    path = os.path.join(ROOT, name)
+    assert os.path.exists(path), f"missing committed baseline {name}"
+    with open(path) as f:
+        doc = json.load(f)
+    assert schema.validate_doc(doc) == []
+    assert doc["quick"], "committed baselines must be --quick runs (the CI " \
+                         "gate compares a --quick run against them)"
+    # the suite must carry at least one gateable (non-info) timing entry
+    assert any(e["us_per_call"] > 0 for e in schema.iter_entries(doc))
+
+
+def test_cli_gate_roundtrip(tmp_path):
+    """--gate exit codes: 0 in-budget, 1 on regression, 1 on vacuous gate."""
+    from repro.bench.__main__ import main
+
+    base = tmp_path / "base.json"
+    base.write_text(json.dumps(_doc([_entry("round/serial_c8", 100.0)])))
+    ok = tmp_path / "ok.json"
+    ok.write_text(json.dumps(_doc([_entry("round/serial_c8", 120.0)])))
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps(_doc([_entry("round/serial_c8", 1e6)])))
+    vac = tmp_path / "vac.json"
+    vac.write_text(json.dumps(_doc([_entry("round/other", 1.0)])))
+    argv = ["--gate", None, "--baseline", str(base)]
+    for path, rc in ((ok, 0), (bad, 1), (vac, 1)):
+        argv[1] = str(path)
+        assert main(argv) == rc
+
+
+def test_run_suite_unknown_raises():
+    from repro.bench import run_suite
+
+    with pytest.raises(KeyError):
+        run_suite("nope")

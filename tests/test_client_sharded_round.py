@@ -1,0 +1,165 @@
+"""Client-parallel (device-sharded) round == serial vmap round, bit-exact.
+
+The multi-device runs happen in subprocesses with fake CPU devices
+(``--xla_force_host_platform_device_count``) so the main pytest process keeps
+seeing exactly 1 device; an in-process variant runs instead when the test
+process itself was launched with multiple devices (the CI parity step does
+exactly that — see DESIGN.md §11).
+"""
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# Three sims from one config — vmap path, 2-device mesh, all-device mesh —
+# must agree bit-exactly: final params, per-round records, accuracies.
+SNIPPET = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(ndev)d"
+os.environ["JAX_PLATFORMS"] = "cpu"
+import sys, json
+sys.path.insert(0, "src")
+import jax, jax.numpy as jnp
+from repro.core.types import THGSConfig, SecureAggConfig
+from repro.launch.mesh import make_clients_mesh
+from repro.sim import SimConfig, Simulation
+
+assert len(jax.devices()) == %(ndev)d
+base = dict(
+    name="parity", model="mnist_mlp", dataset="mnist", rounds=3,
+    n_clients=12, clients_per_round=%(cohort)d, n_train=600, n_test=200,
+    local_steps=2, local_batch=16, eval_every=1,
+    thgs=THGSConfig(s0=0.05, alpha=0.9, s_min=0.01),
+    sa=SecureAggConfig(mask_ratio=0.02, seed=3),
+    dropout_rate=0.4,           # secagg dropout rounds on the hot path
+    weight_by_data_count=True,  # non-uniform client weights
+    seed=1,
+)
+
+def run(mesh_size):
+    sim = Simulation(SimConfig(shard_clients="off", **base))
+    if mesh_size:
+        sim.mesh = make_clients_mesh(mesh_size)
+    res = sim.run(resume=False)
+    leaves = jax.tree_util.tree_leaves(sim.state.params)
+    return sim, res, leaves
+
+sim0, res0, p0 = run(0)
+assert sim0.mesh is None
+out = {"accs": [res0.accuracies], "ledgers": [res0.ledger.summary()],
+       "bitexact": [], "dropout_rounds": 0}
+out["dropout_rounds"] = sum(
+    1 for e in res0.ledger.entries if e.n_survivors < e.n_clients)
+for ms in %(mesh_sizes)s:
+    simS, resS, pS = run(ms)
+    out["accs"].append(resS.accuracies)
+    out["ledgers"].append(resS.ledger.summary())
+    out["bitexact"].append(
+        all(bool(jnp.all(a == b)) for a, b in zip(p0, pS)))
+print(json.dumps(out))
+"""
+
+
+def _run_snippet(src: str) -> dict:
+    env = dict(os.environ)
+    env.pop("JAX_PLATFORMS", None)
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", src], capture_output=True,
+                         text=True, cwd=ROOT, env=env, timeout=560)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return json.loads(out.stdout.strip().splitlines()[-1])
+
+
+@pytest.mark.slow
+def test_sharded_round_parity_8dev():
+    """1 vs 2 vs 8 host devices: params bit-exact, CommLedger identical."""
+    res = _run_snippet(SNIPPET % {
+        "ndev": 8, "cohort": 8, "mesh_sizes": "[2, 8]"})
+    assert all(res["bitexact"]), res["bitexact"]
+    ref = res["ledgers"][0]
+    for led in res["ledgers"][1:]:
+        assert led == ref
+    for accs in res["accs"][1:]:
+        assert accs == res["accs"][0]
+    # the dropout-recovery path must actually have been exercised
+    assert res["dropout_rounds"] >= 1
+
+
+@pytest.mark.slow
+def test_sharded_round_parity_2dev_odd_cohort():
+    """2 devices, cohort 6: uneven device/cohort ratios still bit-exact."""
+    res = _run_snippet(SNIPPET % {
+        "ndev": 2, "cohort": 6, "mesh_sizes": "[2]"})
+    assert all(res["bitexact"])
+    assert res["ledgers"][1] == res["ledgers"][0]
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device process (CI runs this file "
+                           "under XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+def test_sharded_round_parity_inprocess():
+    """Direct run_round parity when pytest itself has >1 device."""
+    import jax.numpy as jnp
+
+    from repro.core import fedavg
+    from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+    from repro.launch.mesh import clients_mesh_for
+
+    C, steps, batch = 4, 2, 8
+    mesh = clients_mesh_for(C)
+    assert mesh is not None
+
+    from repro.models.paper_models import PAPER_MODELS, cross_entropy_loss
+
+    model = PAPER_MODELS["mnist_mlp"]
+    loss_fn = cross_entropy_loss(model)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (C, steps, batch, 784))
+    y = jax.random.randint(key, (C, steps, batch), 0, 10)
+    batches = {c: (x[c], y[c]) for c in range(C)}
+    fed = FedConfig(n_clients=C, clients_per_round=C, local_steps=steps,
+                    local_batch=batch, local_lr=0.05, rounds=10)
+    thgs = THGSConfig(s0=0.05, alpha=0.9, s_min=0.01)
+    sa = SecureAggConfig(mask_ratio=0.02, seed=5)
+    weights = {c: float(c + 1) for c in range(C)}
+
+    def one_round(mesh_arg, dropped):
+        state = fedavg.init_state(params, fed)
+        state = fedavg.run_round(state, batches, loss_fn, fed, thgs, sa,
+                                 client_weights=weights, dropped=dropped,
+                                 mesh=mesh_arg)
+        return state
+
+    for dropped in ((), (1,)):
+        s_ser = one_round(None, dropped)
+        s_sh = one_round(mesh, dropped)
+        for a, b in zip(jax.tree_util.tree_leaves(s_ser.params),
+                        jax.tree_util.tree_leaves(s_sh.params)):
+            assert bool(jnp.all(a == b)), f"params diverge (dropped={dropped})"
+        for c in range(C):
+            for a, b in zip(
+                    jax.tree_util.tree_leaves(s_ser.residuals[c]),
+                    jax.tree_util.tree_leaves(s_sh.residuals[c])):
+                assert bool(jnp.all(a == b)), f"residuals diverge c={c}"
+        assert s_ser.comm_log[-1] == s_sh.comm_log[-1]
+
+
+def test_can_shard_clients_gates():
+    """The fallback predicate: 1 device / indivisible cohorts refuse."""
+    from repro.core import streams as se
+    from repro.launch.mesh import make_clients_mesh
+
+    assert not se.can_shard_clients(None, 8)
+    mesh1 = make_clients_mesh(1)
+    assert not se.can_shard_clients(mesh1, 8)   # 1 device -> vmap path
+    if len(jax.devices()) >= 2:
+        mesh2 = make_clients_mesh(2)
+        assert se.can_shard_clients(mesh2, 8)
+        assert not se.can_shard_clients(mesh2, 7)  # indivisible cohort
