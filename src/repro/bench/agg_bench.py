@@ -117,16 +117,67 @@ def _kernel_micro(size: int, n_clients: int, reps: int) -> list[dict]:
     ]
 
 
+def _codec_micro(size: int, n_clients: int, reps: int) -> list[dict]:
+    """Encode/decode throughput per wire codec (core/codecs.py, §12).
+
+    ``enc`` is the full leaf encode (top-k + quantize + residual absorption +
+    the in-trace packed-wire round trip for non-f32); ``dec`` is the round
+    decode of the resulting streams. f32 is the passthrough baseline, so the
+    enc ratios show what the quantize+bitpack stage itself costs.
+    """
+    from repro.core.codecs import CODECS
+
+    # min-of-single-rep timings: these ops are 0.1-2ms, so a single OS
+    # scheduler stall averaged over 2-3 reps trips the 3x CI gate; the min
+    # is what the op actually costs
+    def best_us(fn, reps):
+        return min(time_us(fn, 1) for _ in range(max(3, reps)))
+
+    k = max(1, size // 100)
+    key = jax.random.key(2)
+    grads = jax.random.normal(key, (n_clients, size))
+    residuals = jnp.zeros_like(grads)
+    tag = f"c{n_clients}_n{size}"
+    out = []
+    for codec in CODECS:
+        def enc(_c=codec):
+            st, nr = streams.encode_leaf_batch(
+                grads, residuals, k=k, nb=1, m=size, size=size, codec=_c)
+            return st.values.block_until_ready()
+
+        st, _ = streams.encode_leaf_batch(
+            grads, residuals, k=k, nb=1, m=size, size=size, codec=codec)
+
+        def dec(_st=st):
+            return streams.decode_leaf_batch(
+                _st, nb=1, m=size, size=size).block_until_ready()
+
+        us_enc = best_us(enc, reps)
+        us_dec = best_us(dec, reps)
+        slots = n_clients * k
+        out += [
+            entry(f"agg/codec_enc_{codec}_{tag}", us_enc,
+                  f"{slots / (us_enc / 1e6) / 1e6:.1f}_Mslots_per_s",
+                  reps=reps),
+            entry(f"agg/codec_dec_{codec}_{tag}", us_dec,
+                  f"{slots / (us_dec / 1e6) / 1e6:.1f}_Mslots_per_s",
+                  reps=reps),
+        ]
+    return out
+
+
 def entries(quick: bool = False) -> list[dict]:
     # headline: the paper-model regime (financial MLP/VGG leaves, 64k params);
     # the second size shows the top-k-bound tail where both paths converge on
     # the same sort cost
     if quick:
-        return _one_size(1 << 14, 8, reps=2) + _kernel_micro(1 << 14, 8,
-                                                             reps=3)
+        return (_one_size(1 << 14, 8, reps=2)
+                + _kernel_micro(1 << 14, 8, reps=3)
+                + _codec_micro(1 << 14, 8, reps=2))
     out = _one_size(1 << 16, 32, reps=3)
     out += _one_size(1 << 20, 32, reps=2)
     out += _kernel_micro(1 << 16, 32, reps=5)
+    out += _codec_micro(1 << 16, 32, reps=3)
     return out
 
 

@@ -1,0 +1,131 @@
+"""Stream wire-format codecs: quantized values + delta-packed sparse indices.
+
+The StreamCodec stage (DESIGN.md §12) sits between the unified-stream encode
+and the all_gather: per block row it quantizes the ``k`` stream values to a
+low-bit integer grid (``int8``/``int4`` symmetric scale quantization, ``1bit``
+sign with a mean-magnitude scale — Beguier et al., arXiv 2007.14861), absorbs
+the quantization error into the THGS error-feedback residuals, and packs both
+streams dense: values as two's-complement fields of ``value_bits`` bits,
+indices sorted and delta-encoded at ``index_width(m) = ceil(log2(m))`` bits
+per field, bit-packed into uint32 words (kernels/pack.py on TPU, the
+chunk-identical ref elsewhere). ``f32`` is the passthrough codec — the only
+one that composes with sparse-mask secure aggregation, whose pair masks
+cancel bit-exactly only on the f32 2^-24 grid (see core/streams.py).
+
+All sizes here are static functions of ``(k, m, codec)``, so the bit
+accounting in :mod:`repro.core.costs` stays derived from slot-level facts
+(``CommRecord.ks`` + ``leaf_sizes`` + ``codec``), never estimated.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ref import packed_words
+
+CODECS = ("f32", "int8", "int4", "1bit")
+VALUE_BITS = {"int8": 8, "int4": 4, "1bit": 1}
+_QMAX = {"int8": 127, "int4": 7}
+SCALE_BITS = 32   # one f32 scale per block row rides alongside the words
+
+
+def value_bits(codec: str) -> int:
+    """Bits per packed value field (host int; quantized codecs only)."""
+    return VALUE_BITS[codec]
+
+
+def index_width(m: int) -> int:
+    """Bits per delta-encoded index field for block length ``m`` (host int).
+
+    Row indices are sorted so every delta (and the leading absolute index)
+    lies in ``[0, m)`` and fits ``ceil(log2(m))`` bits — a static function of
+    the block layout, which keeps the accounting fact-derived.
+    """
+    return max(1, math.ceil(math.log2(max(m, 2))))
+
+
+def wire_bits(k: int, size: int, codec: str) -> int:
+    """Exact packed wire size of one client's stream for one ``nb == 1`` leaf:
+    word-padded delta-packed indices + word-padded value fields + the row
+    scale (host int; the accounting twin of :func:`pack_stream_rows`)."""
+    if codec not in CODECS or codec == "f32":
+        raise ValueError(f"wire_bits needs a quantized codec, got {codec!r}")
+    return (32 * packed_words(k, index_width(size))
+            + 32 * packed_words(k, value_bits(codec))
+            + SCALE_BITS)
+
+
+# ------------------------------------------------------------- value codecs
+def quantize_rows(vals: jax.Array, codec: str):
+    """Quantize f32[..., k] row-wise. Returns ``(q int32[..., k] in
+    [-qmax, qmax], scales f32[...])`` with ``dequantize_rows(q, scales)`` the
+    wire value. int8/int4: symmetric amax/qmax scaling; 1bit: sign carrier
+    with the row's mean magnitude as scale (signSGD-style), the quantization
+    error is absorbed into error feedback by the caller."""
+    if codec == "1bit":
+        scales = jnp.mean(jnp.abs(vals), axis=-1)
+        q = jnp.where(vals >= 0, 1, -1).astype(jnp.int32)
+        return q, scales
+    qmax = _QMAX[codec]
+    amax = jnp.max(jnp.abs(vals), axis=-1)
+    scales = amax / qmax
+    safe = jnp.where(scales > 0, scales, 1.0)
+    q = jnp.clip(jnp.round(vals / safe[..., None]), -qmax, qmax)
+    return q.astype(jnp.int32), scales
+
+
+def dequantize_rows(q: jax.Array, scales: jax.Array) -> jax.Array:
+    """int32[..., k] lattice points x f32[...] row scales -> f32[..., k]."""
+    return q.astype(jnp.float32) * scales[..., None]
+
+
+# ----------------------------------------------------------- wire pack/unpack
+def pack_stream_rows(cols: jax.Array, q: jax.Array, *, m: int, codec: str):
+    """Pack sorted per-row stream slots onto the wire.
+
+    ``cols`` int32[..., k] block-local indices, sorted ascending per row;
+    ``q`` int32[..., k] quantized values. Returns ``(iwords uint32[..., Wi],
+    vwords uint32[..., Wv])`` — indices delta-encoded then packed at
+    ``index_width(m)`` bits, values packed two's-complement at
+    ``value_bits(codec)`` bits (1bit: the field is ``q > 0``).
+    """
+    from repro.kernels import ops
+
+    lead, k = cols.shape[:-1], cols.shape[-1]
+    c2 = cols.reshape(-1, k)
+    q2 = q.reshape(-1, k)
+    deltas = jnp.concatenate([c2[:, :1], c2[:, 1:] - c2[:, :-1]],
+                             axis=1).astype(jnp.uint32)
+    iwords = ops.bitpack_rows(deltas, width=index_width(m))
+    vb = value_bits(codec)
+    if codec == "1bit":
+        u = (q2 > 0).astype(jnp.uint32)
+    else:
+        u = (q2 & ((1 << vb) - 1)).astype(jnp.uint32)  # two's complement field
+    vwords = ops.bitpack_rows(u, width=vb)
+    return (iwords.reshape(*lead, iwords.shape[-1]),
+            vwords.reshape(*lead, vwords.shape[-1]))
+
+
+def unpack_stream_rows(iwords: jax.Array, vwords: jax.Array, *, k: int,
+                       m: int, codec: str):
+    """Inverse of :func:`pack_stream_rows`: words -> ``(cols int32[..., k]
+    sorted, q int32[..., k])`` — bit-exact round trip for any duplicate-free
+    monotone index row and any lattice value in codec range."""
+    from repro.kernels import ops
+
+    lead = iwords.shape[:-1]
+    d = ops.bitunpack_rows(iwords.reshape(-1, iwords.shape[-1]), k=k,
+                           width=index_width(m))
+    cols = jnp.cumsum(d.astype(jnp.int32), axis=-1)
+    vb = value_bits(codec)
+    u = ops.bitunpack_rows(vwords.reshape(-1, vwords.shape[-1]), k=k,
+                           width=vb)
+    if codec == "1bit":
+        q = 2 * u.astype(jnp.int32) - 1
+    else:
+        ui = u.astype(jnp.int32)
+        q = jnp.where(ui >= (1 << (vb - 1)), ui - (1 << vb), ui)
+    return cols.reshape(*lead, k), q.reshape(*lead, k)

@@ -58,13 +58,20 @@ TPU_BITS = BitModel(value_bits=32, index_bits=32)     # f32 + int32
 
 
 def upload_bits_sparse(ks: Sequence[int], k_masks: Sequence[int], n_pairs: int,
-                       bits: BitModel = PAPER_BITS) -> int:
+                       bits: BitModel = PAPER_BITS, *, codec: str = "f32",
+                       leaf_sizes: Sequence[int] = ()) -> int:
     """Per-client upload bits for one sparse round (Eq. 6).
 
-    One client transmits, per leaf, its ``k`` top-k slots plus ``k_mask``
-    mask-support slots toward each of its ``n_pairs`` active peers (the gated
-    self-pair slot is never on the wire), i.e.
-    ``sum(ks) + n_pairs * sum(k_masks)`` unified-stream slots in total.
+    With the default ``f32`` codec one client transmits, per leaf, its ``k``
+    top-k slots plus ``k_mask`` mask-support slots toward each of its
+    ``n_pairs`` active peers (the gated self-pair slot is never on the wire),
+    i.e. ``sum(ks) + n_pairs * sum(k_masks)`` unified-stream slots in total at
+    ``bits.sparse_bits`` per slot. With a quantized codec (core/codecs.py,
+    DESIGN.md §12) the wire is the packed word stream instead — delta-packed
+    indices at ``index_width(size)`` bits, value fields at the codec's width,
+    plus the per-row scale — an *exact* static function of ``(k, size,
+    codec)``, identical under both BitModels (the packed words are the wire;
+    there is no wider "paper" element to widen).
 
     Parameters
     ----------
@@ -72,17 +79,35 @@ def upload_bits_sparse(ks: Sequence[int], k_masks: Sequence[int], n_pairs: int,
         Per-leaf top-k slot counts for this round.
     k_masks : sequence of int
         Per-leaf *per-pair* mask-support slot counts (zeros when secure
-        aggregation is off).
+        aggregation is off; must be all-zero for quantized codecs).
     n_pairs : int
         Active mask pairs per client — ``n_participants - 1``.
     bits : BitModel
         Wire format; defaults to the paper's 96-bit sparse element.
+    codec : str
+        Stream value codec; non-f32 switches to packed-word accounting.
+    leaf_sizes : sequence of int
+        Per-leaf dense sizes, aligned with ``ks`` — required for quantized
+        codecs (the delta index width is a function of the leaf size).
 
     Returns
     -------
     int
         Upload bits for one client.
     """
+    if codec != "f32":
+        from repro.core import codecs
+
+        if any(km > 0 for km in k_masks):
+            raise ValueError(
+                f"codec {codec!r} does not compose with sparse-mask secure "
+                "aggregation (masks cancel on the f32 grid only)")
+        if len(leaf_sizes) != len(ks):
+            raise ValueError(
+                "quantized-codec accounting needs leaf_sizes aligned with "
+                f"ks, got {len(leaf_sizes)} vs {len(ks)}")
+        return sum(codecs.wire_bits(k, s, codec)
+                   for k, s in zip(ks, leaf_sizes))
     total_slots = sum(ks) + n_pairs * sum(k_masks)
     return bits.sparse_bits(total_slots)
 
@@ -116,6 +141,8 @@ def round_record(
     *,
     n_survivors: Optional[int] = None,
     threshold: int = 0,
+    codec: str = "f32",
+    leaf_sizes: Sequence[int] = (),
 ) -> CommRecord:
     """Eq. 7-8 accounting for one sparse aggregation round.
 
@@ -146,6 +173,12 @@ def round_record(
     threshold : int
         The round protocol's Shamir t (repro/secagg); 0 when secure
         aggregation (or its recovery path) is off.
+    codec : str
+        Stream value codec of the round's wire (core/codecs.py); non-f32
+        switches the upload to packed-word accounting.
+    leaf_sizes : sequence of int
+        Per-leaf dense sizes aligned with ``ks`` — a slot-level fact stored on
+        the record so the ledger can re-derive codec wire sizes later.
 
     Returns
     -------
@@ -154,7 +187,8 @@ def round_record(
         accounting can be re-derived later (repro/sim/ledger.py).
     """
     surv = n_clients if n_survivors is None else n_survivors
-    up = surv * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits)
+    up = surv * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits,
+                                   codec=codec, leaf_sizes=leaf_sizes)
     down = n_clients * upload_bits_dense(model_size, bits)
     dense_up = n_clients * upload_bits_dense(model_size, bits)
     secagg = any(km > 0 for km in k_masks)
@@ -175,6 +209,8 @@ def round_record(
         model_size=model_size,
         ks=tuple(int(k) for k in ks),
         k_masks=tuple(int(k) for k in k_masks),
+        codec=codec,
+        leaf_sizes=tuple(int(s) for s in leaf_sizes),
     )
 
 

@@ -186,6 +186,7 @@ def run_round(
     dropped: Sequence[int] = (),
     protocol=None,
     mesh=None,
+    codec: str = "f32",
 ) -> FederatedState:
     """One aggregation round over the provided participating clients.
 
@@ -207,6 +208,14 @@ def run_round(
     all_gather + the identical fused scatter-add, bit-exact with the vmap
     path. When the mesh cannot host the cohort (None, 1 device, or cohort not
     divisible) the single-device vmap path runs, unchanged.
+
+    ``codec`` selects the stream wire format (core/codecs.py, DESIGN.md §12):
+    ``'f32'`` is the passthrough; ``'int8'``/``'int4'``/``'1bit'`` quantize
+    the stream values (quantization error absorbed into the THGS error
+    feedback) and delta-pack the indices, and the round is accounted at the
+    exact packed wire size. Quantized codecs require THGS and are rejected
+    under secure aggregation — pair masks cancel bit-exactly only on the f32
+    grid.
 
     All participants' batch pytrees must share one structure and one set of
     array shapes (they are stacked on a leading client axis for the batched
@@ -272,6 +281,12 @@ def run_round(
             loss_curr=loss_curr,
         )
         use_masks = sa.enabled and C >= 2
+        if codec != "f32" and use_masks:
+            raise ValueError(
+                f"codec {codec!r} cannot run under secure aggregation: pair "
+                "masks cancel bit-exactly only on the f32 grid (DESIGN.md "
+                "§12); disable sa or use codec='f32' until integer-grid "
+                "masked quantization lands")
         if use_masks:
             # the round protocol: DH pair secrets + Shamir shares (phases
             # 0-1); layering note — secagg sits beside core, this local
@@ -296,7 +311,7 @@ def run_round(
             res_stacked = [se.shard_client_tree(r, mesh) for r in res_stacked]
 
         agg_leaves, new_res_leaves = [], []
-        ks_acct, k_masks_acct = [], []
+        ks_acct, k_masks_acct, leaf_sizes_acct = [], [], []
         for leaf_id, (d_st, r_st, k, shape) in enumerate(
                 zip(delta_leaves, res_stacked, ks, leaf_shapes)):
             size = leaves[leaf_id].size
@@ -311,7 +326,7 @@ def run_round(
                     recovery_seeds=recovery_seeds if dropped else None,
                     alive=alive if dropped else None,
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
-                    leaf_id=leaf_id, weights=w_vec)
+                    leaf_id=leaf_id, weights=w_vec, codec=codec)
             else:
                 # ---- 2. batched unified-stream encode (all clients, one
                 # jit) ----
@@ -320,7 +335,7 @@ def run_round(
                     selector=thgs.selector, sample_frac=thgs.sample_frac,
                     pair_seeds=pair_seeds, pair_signs=pair_signs,
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
-                    leaf_id=leaf_id, weights=w_vec)
+                    leaf_id=leaf_id, weights=w_vec, codec=codec)
                 # ---- 3. fused scatter-add decode + dropout recovery ----
                 dense = se.decode_leaf_batch(
                     streams_b, nb=1, m=size, size=size,
@@ -341,9 +356,11 @@ def run_round(
             new_res_leaves.append(new_res)
             # wire accounting: the gated self-pair slot (zero value at a
             # duplicated index) is not transmitted — k + (C-1)*k_mask slots
-            # per leaf, matching the paper's Eq. 6 payload
+            # per leaf, matching the paper's Eq. 6 payload; leaf_sizes feed
+            # the quantized codecs' exact packed-word sizes (core/codecs.py)
             ks_acct.append(min(int(k), size))
             k_masks_acct.append(k_mask)
+            leaf_sizes_acct.append(size)
 
         agg = jax.tree_util.tree_unflatten(treedef, agg_leaves)
         for ci, c in enumerate(participants):
@@ -353,8 +370,13 @@ def run_round(
             state.round, model_size, ks_acct, k_masks_acct,
             n_clients=len(participants), bits=bits,
             n_survivors=len(survivors),
-            threshold=proto.t if use_masks else 0)
+            threshold=proto.t if use_masks else 0,
+            codec=codec, leaf_sizes=leaf_sizes_acct)
     else:
+        if codec != "f32":
+            raise ValueError(
+                f"codec {codec!r} requires THGS sparse streams; dense rounds "
+                "have no stream wire to quantize (thgs is None)")
         deltas = {c: jax.tree_util.tree_map(lambda x: x[ci], deltas_stacked)
                   for ci, c in enumerate(participants)}
         if sa.enabled:

@@ -483,10 +483,63 @@ def encode_batch_blocks(
     return StreamBatch(indices=gidx, values=vals), new_acc
 
 
+# ----------------------------------------------------- wire-format codec stage
+def codec_wire_stage(gidx, vals, new_acc, weights, m: int, codec: str):
+    """The client-side StreamCodec stage (DESIGN.md §12), mask-free rounds only.
+
+    Quantizes the batched stream values row-wise, absorbs the quantization
+    error into the error-feedback accumulator (transmitted positions were just
+    zeroed by ``unified_stream_rows``; they now carry ``(sent - wire)/weight``
+    so the error re-enters next round's accumulator and accuracy doesn't
+    drift), and sorts each block row by column for the delta-packed index
+    wire. Returns ``(cols int32[C, nb, k] sorted, q int32[C, nb, k],
+    scales f32[C, nb], new_acc)``.
+    """
+    from repro.core import codecs
+
+    C = gidx.shape[0]
+    nb = gidx.shape[1]
+    w = (jnp.asarray(weights, jnp.float32) if weights is not None
+         else jnp.ones((C,), jnp.float32))
+    q, scales = codecs.quantize_rows(vals, codec)
+    vq = codecs.dequantize_rows(q, scales)
+    cols = gidx % m
+    err = (vals - vq) / jnp.where(w == 0.0, 1.0, w)[:, None, None]
+    rows = jnp.arange(nb)[:, None]
+    new_acc = jax.vmap(lambda a, c2, e: a.at[rows, c2].add(e))(
+        new_acc, cols, err)
+    order = jnp.argsort(cols, axis=-1)
+    cols_s = jnp.take_along_axis(cols, order, -1)
+    q_s = jnp.take_along_axis(q, order, -1)
+    return cols_s, q_s, scales, new_acc
+
+
+def codec_wire_roundtrip(cols_s, q_s, scales, m: int, codec: str):
+    """Physically pack -> unpack -> dequantize one batched stream, so every
+    round exercises the exact uint32 word wire (kernels/pack.py). The round
+    trip is lossless: same sorted cols back, values on the quantization
+    lattice. Returns ``(cols int32[C, nb, k], vq f32[C, nb, k])``."""
+    from repro.core import codecs
+
+    iw, vw = codecs.pack_stream_rows(cols_s, q_s, m=m, codec=codec)
+    cols2, q2 = codecs.unpack_stream_rows(iw, vw, k=q_s.shape[-1], m=m,
+                                          codec=codec)
+    return cols2, codecs.dequantize_rows(q2, scales)
+
+
+def _reject_codec_with_masks(codec: str, k_mask: int) -> None:
+    if codec != "f32" and k_mask > 0:
+        raise ValueError(
+            f"codec {codec!r} cannot run under sparse-mask secure "
+            "aggregation: pair masks cancel bit-exactly only on the f32 "
+            "2^-24 grid (DESIGN.md §12); use codec='f32' until integer-grid "
+            "masked quantization lands")
+
+
 @functools.partial(
     jax.jit,
     static_argnames=("k", "nb", "m", "size", "selector", "sample_frac",
-                     "k_mask", "mask_p", "mask_q"))
+                     "k_mask", "mask_p", "mask_q", "codec"))
 def encode_leaf_batch(
     updates: jax.Array,        # [C, *leaf_shape] stacked client updates
     residuals: jax.Array,      # [C, *leaf_shape] stacked error feedback
@@ -505,6 +558,7 @@ def encode_leaf_batch(
     mask_q: float = 2.0,
     leaf_id: int | jax.Array = 0,
     weights: jax.Array | None = None,
+    codec: str = "f32",
 ) -> tuple[StreamBatch, jax.Array]:
     """Jitted leaf-level encode: accumulate -> block view -> batched encode.
 
@@ -550,6 +604,12 @@ def encode_leaf_batch(
     weights : f32[C], optional
         Client-side aggregation weights applied to the gradient values
         *before* masking (module docstring); None means uniform.
+    codec : {'f32', 'int8', 'int4', '1bit'}
+        Stream value wire codec (core/codecs.py, DESIGN.md §12). Non-f32
+        codecs quantize the values (error absorbed into the returned
+        residuals), sort + delta-pack the indices, and run the packed wire
+        round trip in-trace; they require ``k_mask == 0`` — pair masks cancel
+        only on the f32 grid.
 
     Returns
     -------
@@ -564,6 +624,7 @@ def encode_leaf_batch(
     """
     C = updates.shape[0]
     leaf_shape = updates.shape[1:]
+    _reject_codec_with_masks(codec, k_mask)
     acc = jax.vmap(lambda u, r: to_blocks(
         r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
             updates, residuals)
@@ -572,6 +633,13 @@ def encode_leaf_batch(
         pair_keys=pair_keys, pair_signs=pair_signs, pair_seeds=pair_seeds,
         k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, leaf_id=leaf_id,
         weights=weights)
+    if codec != "f32":
+        cols, q, scales, new_acc = codec_wire_stage(
+            streams.indices, streams.values, new_acc, weights, m, codec)
+        cols, vq = codec_wire_roundtrip(cols, q, scales, m, codec)
+        rows_b = jnp.arange(nb, dtype=jnp.int32)[None, :, None]
+        streams = StreamBatch(indices=(rows_b * m + cols).astype(jnp.int32),
+                              values=vq)
     new_res = jax.vmap(lambda b: from_blocks(b, size, leaf_shape))(new_acc)
     return streams, new_res.astype(residuals.dtype)
 
@@ -768,6 +836,39 @@ def decode_leaf_batch(
     return dense[:size]
 
 
+# ----------------------------------------------------- the stream exchange
+def all_gather_round(tree, axis_name: str, *, tiled: bool = False,
+                     replicate: bool = False):
+    """all_gather every array of one round's wire payload over the
+    federation/clients axis — the ONE collective of the sparse exchange
+    (DESIGN.md §11/§12). Every stream consumer (the sharded round below, both
+    launch/train.py step builders) routes its gather through here, so a new
+    wire payload (e.g. packed codec words) lands in one place.
+
+    ``replicate`` first pins each leaf replicated *within* the participant
+    ("gather to leader, then exchange"): XLA's partial-manual partitioner
+    cannot form cross-participant peer groups for tensors still sharded over
+    the auto axes (hard CHECK) — the launcher's FL mesh needs this, the
+    full-manual clients mesh does not.
+    """
+    def g(x):
+        if replicate:
+            x = jax.lax.with_sharding_constraint(
+                x, jax.sharding.PartitionSpec())
+        return jax.lax.all_gather(x, axis_name, axis=0, tiled=tiled)
+
+    return jax.tree_util.tree_map(g, tree)
+
+
+def gather_streams(stream, axis_name: str, *, tiled: bool = False,
+                   replicate: bool = False) -> StreamBatch:
+    """Gather one participant's stream into the round's stacked
+    ``StreamBatch`` (accepts anything with ``.indices``/``.values``)."""
+    idx, vals = all_gather_round((stream.indices, stream.values), axis_name,
+                                 tiled=tiled, replicate=replicate)
+    return StreamBatch(indices=idx, values=vals)
+
+
 # ----------------------------------------- client-parallel (sharded) round
 def shard_map_clients(f, mesh, in_specs, out_specs):
     """Full-manual shard_map across jax versions (1-D ``clients`` mesh).
@@ -816,7 +917,7 @@ def can_shard_clients(mesh, n_clients: int) -> bool:
 def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
                           selector: str, sample_frac: float, k_mask: int,
                           mask_p: float, mask_q: float, with_dropout: bool,
-                          use_pallas):
+                          use_pallas, codec: str = "f32"):
     """Build + cache the jitted shard_map program for one leaf signature.
 
     The cache key is the static signature (mesh + block layout + schedule
@@ -866,9 +967,27 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
         # nb*m dense buffer, and, because every device then runs the very same
         # scatter over the very same flat stream, the sharded round is
         # bit-exact with the serial decode (a psum's tree-order partial sums
-        # are not).
-        g_idx = jax.lax.all_gather(gidx, CLIENT_AXIS, axis=0, tiled=True)
-        g_val = jax.lax.all_gather(vals, CLIENT_AXIS, axis=0, tiled=True)
+        # are not). With a quantized codec the gathered payload is the packed
+        # wire itself — delta-packed index words + value words + row scales —
+        # and every device unpacks/dequantizes the identical words, so the
+        # codec round stays bit-exact with the serial codec round too (the
+        # per-row quantize is shard-local and identical on both paths).
+        if codec != "f32":
+            from repro.core import codecs
+
+            cols, q, scales, new_acc = codec_wire_stage(
+                gidx, vals, new_acc, weights_l, m, codec)
+            iw, vw = codecs.pack_stream_rows(cols, q, m=m, codec=codec)
+            g_iw, g_vw, g_sc = all_gather_round(
+                (iw, vw, scales), CLIENT_AXIS, tiled=True)
+            cols_g, q_g = codecs.unpack_stream_rows(
+                g_iw, g_vw, k=q.shape[-1], m=m, codec=codec)
+            rows_b = jnp.arange(nb, dtype=jnp.int32)[None, :, None]
+            g_idx = (rows_b * m + cols_g).astype(jnp.int32)
+            g_val = codecs.dequantize_rows(q_g, g_sc)
+        else:
+            g_idx, g_val = all_gather_round((gidx, vals), CLIENT_AXIS,
+                                            tiled=True)
         extra = None
         if with_dropout and with_masks:
             extra = dropout_cancel_streams_seeded(
@@ -911,6 +1030,7 @@ def encode_decode_leaf_sharded(
     leaf_id: int | jax.Array = 0,
     weights: jax.Array | None = None,
     use_pallas: bool | None = None,
+    codec: str = "f32",
 ) -> tuple[jax.Array, jax.Array]:
     """Client-parallel encode + decode for one leaf, fused in one shard_map.
 
@@ -932,6 +1052,7 @@ def encode_decode_leaf_sharded(
     assert can_shard_clients(mesh, C), (
         f"mesh {mesh} cannot shard {C} clients; use encode_leaf_batch")
     with_masks = pair_seeds is not None and k_mask > 0 and C >= 2
+    _reject_codec_with_masks(codec, k_mask if with_masks else 0)
     # dropouts gate the decode even without masks (serial parity: the serial
     # path passes `alive` to decode_leaf_batch whenever clients dropped);
     # recovery streams additionally need the masks
@@ -951,7 +1072,7 @@ def encode_decode_leaf_sharded(
     fn = _sharded_leaf_program(
         mesh, int(k), int(nb), int(m), int(size), selector,
         float(sample_frac), int(k_mask), float(mask_p), float(mask_q),
-        bool(with_dropout), use_pallas)
+        bool(with_dropout), use_pallas, str(codec))
     return fn(updates, residuals, jnp.asarray(weights, jnp.float32),
               pair_seeds, pair_signs, recovery_seeds, alive,
               jnp.asarray(leaf_id))

@@ -146,6 +146,8 @@ class CommRecord:
     model_size: int = 0          # dense parameter count
     ks: tuple = ()               # per-leaf top-k slots (sparse rounds only)
     k_masks: tuple = ()          # per-leaf per-pair mask-support slots
+    codec: str = "f32"           # stream value codec (core/codecs.py)
+    leaf_sizes: tuple = ()       # per-leaf dense sizes (codec index widths)
 
     @property
     def compression(self) -> float:

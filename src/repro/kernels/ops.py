@@ -15,6 +15,8 @@ from repro.kernels import ref
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.mask_prng import mask_prng_apply as _mask
 from repro.kernels.mask_prng import pair_mask_streams as _pair_streams
+from repro.kernels.pack import bitpack_rows as _bitpack
+from repro.kernels.pack import bitunpack_rows as _bitunpack
 from repro.kernels.stream_decode import stream_scatter_add as _scatter
 from repro.kernels.thgs_sparsify import thgs_sparsify as _thgs
 
@@ -66,3 +68,23 @@ def pair_mask_streams(seeds, signs, *, nb: int, k_mask: int, m: int,
     if _interpret():
         return ref.pair_mask_stream_ref(seeds, signs, nb, k_mask, m, p=p, q=q)
     return _pair_streams(seeds, signs, nb=nb, k_mask=k_mask, m=m, p=p, q=q)
+
+
+@functools.partial(jax.jit, static_argnames=("width",))
+def bitpack_rows(u, *, width: int):
+    """Pack uint32[R, k] fields of ``width`` bits into uint32 words — the
+    StreamCodec wire data plane (core/codecs.py, DESIGN.md §12). Pallas
+    kernel on TPU; the chunk-identical jnp oracle elsewhere (the ref IS the
+    fallback — interpret-mode kernel parity is pinned in
+    tests/test_kernels.py)."""
+    if _interpret():
+        return ref.bitpack_rows_ref(u, width)
+    return _bitpack(u, width)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "width"))
+def bitunpack_rows(words, *, k: int, width: int):
+    """Inverse of :func:`bitpack_rows`: words -> uint32[R, k] fields."""
+    if _interpret():
+        return ref.bitunpack_rows_ref(words, k, width)
+    return _bitunpack(words, k, width)

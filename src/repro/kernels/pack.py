@@ -1,0 +1,84 @@
+"""Pallas TPU kernels: fixed-width bit packing for the stream wire format.
+
+The StreamCodec stage (core/codecs.py, DESIGN.md §12) ships quantized stream
+values and delta-encoded sparse indices as dense fields of ``width`` bits
+packed into uint32 words. Rows are processed in 32-slot chunks: a chunk at
+field width ``w`` occupies exactly ``32*w`` bits = ``w`` whole words, so
+chunks never straddle word boundaries and the kernel grids over
+(row tiles, chunk groups) with statically-windowed input AND output blocks —
+no cross-step accumulation. The kernel body is ref.py's ``_pack_chunk`` /
+``_unpack_chunk`` verbatim, which is what makes kernel/ref parity bit-exact
+by construction (pinned in tests/test_kernels.py over odd sizes and padding).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.ref import PACK_CHUNK, _pack_chunk, _unpack_chunk, \
+    packed_words
+
+LANE = 128
+CHUNKS_PER_TILE = LANE // PACK_CHUNK   # 4 chunks = one 128-slot lane row
+ROW_TILE = 8
+
+
+def _pack_kernel(u_ref, o_ref, *, width: int):
+    tr, st = u_ref.shape
+    u = u_ref[...].astype(jnp.uint32).reshape(tr, st // PACK_CHUNK,
+                                              PACK_CHUNK)
+    o_ref[...] = _pack_chunk(u, width).reshape(tr, -1)
+
+
+def _unpack_kernel(w_ref, o_ref, *, width: int):
+    tr, ww = w_ref.shape
+    words = w_ref[...].astype(jnp.uint32).reshape(tr, ww // width, width)
+    o_ref[...] = _unpack_chunk(words, width).reshape(tr, -1)
+
+
+def bitpack_rows(u: jax.Array, width: int, *, row_tile: int = ROW_TILE,
+                 interpret: bool = False) -> jax.Array:
+    """Pack uint32[R, k] fields (each < ``2**width``) into uint32[R, W] words,
+    ``W = ceil(k*width/32)``. Padding slots are zero bits; padded rows/words
+    are sliced off before returning."""
+    R, k = u.shape
+    W = packed_words(k, width)
+    nc = -(-k // LANE) * CHUNKS_PER_TILE          # chunks, multiple of 4
+    rows = -(-R // row_tile) * row_tile
+    up = jnp.pad(u.astype(jnp.uint32),
+                 ((0, rows - R), (0, nc * PACK_CHUNK - k)))
+    words = pl.pallas_call(
+        functools.partial(_pack_kernel, width=width),
+        grid=(rows // row_tile, nc // CHUNKS_PER_TILE),
+        in_specs=[pl.BlockSpec((row_tile, LANE), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((row_tile, CHUNKS_PER_TILE * width),
+                               lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, nc * width), jnp.uint32),
+        interpret=interpret,
+    )(up)
+    return words[:R, :W]
+
+
+def bitunpack_rows(words: jax.Array, k: int, width: int, *,
+                   row_tile: int = ROW_TILE,
+                   interpret: bool = False) -> jax.Array:
+    """Inverse of :func:`bitpack_rows`: uint32[R, W] words -> uint32[R, k]
+    fields, each < ``2**width``."""
+    R = words.shape[0]
+    nc = -(-k // LANE) * CHUNKS_PER_TILE
+    rows = -(-R // row_tile) * row_tile
+    wp = jnp.pad(words.astype(jnp.uint32),
+                 ((0, rows - R), (0, nc * width - words.shape[1])))
+    u = pl.pallas_call(
+        functools.partial(_unpack_kernel, width=width),
+        grid=(rows // row_tile, nc // CHUNKS_PER_TILE),
+        in_specs=[pl.BlockSpec((row_tile, CHUNKS_PER_TILE * width),
+                               lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((row_tile, LANE), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((rows, nc * PACK_CHUNK), jnp.uint32),
+        interpret=interpret,
+    )(wp)
+    return u[:R, :k]

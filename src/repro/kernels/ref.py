@@ -113,6 +113,77 @@ def pair_mask_stream_ref(seeds, signs, nb: int, k_mask: int, m: int,
     return idx, vals
 
 
+# --------------------------------------------------- wire-format bit packing
+# Fixed-width bit packing of uint fields into uint32 words — the data plane of
+# the StreamCodec wire stage (core/codecs.py, DESIGN.md §12). Rows are packed
+# in chunks of 32 slots: a 32-slot chunk at field width ``w`` occupies exactly
+# ``32*w`` bits = ``w`` words, so chunks never straddle a word boundary and the
+# Pallas kernel (kernels/pack.py) can grid over (row tiles, chunks) with a
+# statically-windowed output block. These refs use the identical per-chunk
+# math, so kernel/ref parity is bit-exact by construction (pinned in
+# tests/test_kernels.py).
+
+PACK_CHUNK = 32  # slots per chunk; chunk bit-width = 32*width = width words
+
+
+def _pack_chunk(u: jax.Array, width: int) -> jax.Array:
+    """uint32[..., 32] fields (each < 2**width) -> uint32[..., width] words."""
+    pos = jnp.arange(PACK_CHUNK, dtype=jnp.uint32) * jnp.uint32(width)
+    j1 = (pos // 32).astype(jnp.int32)                       # low-bits word
+    off = pos % 32
+    lo = u << off                                            # wraps mod 2^32:
+    # the dropped high bits are exactly the straddling part, re-emitted as hi
+    sh = jnp.where(off == 0, jnp.uint32(0), jnp.uint32(32) - off)
+    hi = jnp.where(off == 0, jnp.uint32(0), u >> sh)
+    jj = jnp.arange(width, dtype=jnp.int32)                  # [width] words
+    contrib = (jnp.where(jj == j1[:, None], lo[..., None], jnp.uint32(0))
+               | jnp.where(jj == j1[:, None] + 1, hi[..., None],
+                           jnp.uint32(0)))
+    # fields within a word are disjoint, so an integer sum == bitwise OR
+    return jnp.sum(contrib, axis=-2)
+
+
+def _unpack_chunk(words: jax.Array, width: int) -> jax.Array:
+    """uint32[..., width] words -> uint32[..., 32] fields (< 2**width)."""
+    pos = jnp.arange(PACK_CHUNK, dtype=jnp.uint32) * jnp.uint32(width)
+    j1 = (pos // 32).astype(jnp.int32)
+    off = pos % 32
+    jj = jnp.arange(width, dtype=jnp.int32)
+    w1 = jnp.sum(jnp.where(jj == j1[:, None], words[..., None, :],
+                           jnp.uint32(0)), axis=-1)
+    w2 = jnp.sum(jnp.where(jj == j1[:, None] + 1, words[..., None, :],
+                           jnp.uint32(0)), axis=-1)
+    sh = jnp.where(off == 0, jnp.uint32(0), jnp.uint32(32) - off)
+    u = (w1 >> off) | jnp.where(off == 0, jnp.uint32(0), w2 << sh)
+    mask = jnp.uint32(0xFFFFFFFF if width == 32 else (1 << width) - 1)
+    return u & mask
+
+
+def packed_words(count: int, width: int) -> int:
+    """uint32 words needed for ``count`` fields of ``width`` bits (host int)."""
+    return -(-count * width // 32)
+
+
+def bitpack_rows_ref(u: jax.Array, width: int) -> jax.Array:
+    """Pack uint32[R, k] fields (each < 2**width) into uint32[R, W] words,
+    W = ceil(k*width/32); big-endian-in-row, little-endian-in-word layout."""
+    R, k = u.shape
+    nc = -(-k // PACK_CHUNK)
+    up = jnp.pad(u.astype(jnp.uint32), ((0, 0), (0, nc * PACK_CHUNK - k)))
+    words = _pack_chunk(up.reshape(R, nc, PACK_CHUNK), width)
+    return words.reshape(R, nc * width)[:, :packed_words(k, width)]
+
+
+def bitunpack_rows_ref(words: jax.Array, k: int, width: int) -> jax.Array:
+    """Inverse of :func:`bitpack_rows_ref`: uint32[R, W] -> uint32[R, k]."""
+    R = words.shape[0]
+    nc = -(-k // PACK_CHUNK)
+    wp = jnp.pad(words.astype(jnp.uint32),
+                 ((0, 0), (0, nc * width - words.shape[1])))
+    u = _unpack_chunk(wp.reshape(R, nc, width), width)
+    return u.reshape(R, nc * PACK_CHUNK)[:, :k]
+
+
 def mask_prng_ref(g, seed: int, *, p: float, q: float, sigma: float,
                   sign: float = 1.0):
     """Counter-based sparse-mask generation + add (paper Eq. 3-5 data plane).

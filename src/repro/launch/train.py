@@ -355,19 +355,18 @@ def make_fl_train_step(
                 jax.tree_util.tree_map(lambda g: -lr * g, grads))
             res_leaves = jax.tree_util.tree_leaves(res)
 
+            # replicate the small streams within the participant before the
+            # cross-participant gather ("gather to leader, then exchange"):
+            # XLA's partial-manual partitioner cannot form pod-peer groups
+            # for tensors still sharded over the auto axes (hard CHECK).
+            replicate = (
+                os.environ.get("REPRO_FL_STREAM_REPLICATE", "1") == "1")
+
             def exchange(stream, nb2, size2, bshard2, tr2):
                 # sparse federation exchange for one (sub-)leaf
-                if os.environ.get("REPRO_FL_STREAM_REPLICATE", "1") == "1":
-                    idx_r = jax.lax.with_sharding_constraint(
-                        stream.indices, jax.sharding.PartitionSpec())
-                    val_r = jax.lax.with_sharding_constraint(
-                        stream.values, jax.sharding.PartitionSpec())
-                else:
-                    idx_r, val_r = stream.indices, stream.values
-                g_idx = jax.lax.all_gather(idx_r, fed_axis)
-                g_val = jax.lax.all_gather(val_r, fed_axis)
+                g = se.gather_streams(stream, fed_axis, replicate=replicate)
                 return decode_blocked_sum(
-                    g_idx, g_val, size2, nb2, weight=1.0 / n_fed,
+                    g.indices, g.values, size2, nb2, weight=1.0 / n_fed,
                     block_sharding=bshard2, transform=tr2)
 
             new_res, agg_leaves = [], []
@@ -465,22 +464,7 @@ def make_fl_train_step(
                     transform=tr)
                 new_res.append(r_new)
                 # ---- the sparse federation exchange (vs dense psum) ----
-                # replicate the small streams within the participant before the
-                # cross-participant gather ("gather to leader, then exchange"):
-                # XLA's partial-manual partitioner cannot form pod-peer groups
-                # for tensors still sharded over the auto axes (hard CHECK).
-                if os.environ.get("REPRO_FL_STREAM_REPLICATE", "1") == "1":
-                    idx_r = jax.lax.with_sharding_constraint(
-                        stream.indices, jax.sharding.PartitionSpec())
-                    val_r = jax.lax.with_sharding_constraint(
-                        stream.values, jax.sharding.PartitionSpec())
-                else:
-                    idx_r, val_r = stream.indices, stream.values
-                g_idx = jax.lax.all_gather(idx_r, fed_axis)
-                g_val = jax.lax.all_gather(val_r, fed_axis)
-                dense = decode_blocked_sum(
-                    g_idx, g_val, g.size, nb, weight=1.0 / n_fed,
-                    block_sharding=bshard, transform=tr)
+                dense = exchange(stream, nb, g.size, bshard, tr)
                 agg = (dense if tr is not None
                        else dense.reshape(g.shape)).astype(g.dtype)
                 if tr is None:

@@ -11,8 +11,12 @@ final ledger summary under both bit accountings, and writes the JSON ledger to
 from __future__ import annotations
 
 import argparse
+import dataclasses
+import json
+import os
 import sys
 
+from repro.core.codecs import CODECS
 from repro.sim import presets
 from repro.sim.engine import Simulation
 from repro.sim.ledger import mib
@@ -26,6 +30,69 @@ def _progress_hook(round_t: int, info: dict) -> None:
               f"loss={info['loss']:.4f}  "
               f"upload={mib(rec.upload_bits):.2f} MiB "
               f"({rec.compression:.1f}x vs dense){drop}", flush=True)
+
+
+def _sweep_overrides(args, cfg):
+    """CLI overrides that apply to every arm of a sweep (no --codec: the
+    sweep itself owns the codec axis)."""
+    over = {}
+    if args.rounds is not None:
+        over["rounds"] = args.rounds
+    if args.seed is not None:
+        over["seed"] = args.seed
+    if args.dropout is not None:
+        over["dropout_rate"] = args.dropout
+    if args.shard_clients is not None:
+        over["shard_clients"] = args.shard_clients
+    if args.quick:
+        over.setdefault("rounds", min(3, cfg.rounds))
+        over.setdefault("n_train", min(600, cfg.n_train))
+        over.setdefault("n_test", min(200, cfg.n_test))
+        over["eval_every"] = 1
+    return over
+
+
+def _run_sweep(args) -> int:
+    """Run every codec arm of a sweep preset and write one combined JSON.
+
+    Arms share the Table 2 protocol and seed; only the wire codec differs
+    (secure aggregation is off in every arm — presets.sweep_configs). The
+    combined JSON maps codec -> full run summary so CI and EXPERIMENTS.md can
+    compare ledger upload bits like-for-like.
+    """
+    if args.codec is not None:
+        print("error: --codec conflicts with a sweep preset "
+              "(the sweep runs every codec)", file=sys.stderr)
+        return 2
+    arms = presets.sweep_configs(args.preset)
+    runs: dict[str, dict] = {}
+    for codec, cfg in arms.items():
+        cfg = cfg.replace(**_sweep_overrides(args, cfg))
+        print(f"# sweep={args.preset} arm codec={codec} rounds={cfg.rounds} "
+              f"cohort={cfg.clients_per_round}/{cfg.n_clients}", flush=True)
+        res = Simulation(cfg).run(resume=False, hooks=[_progress_hook])
+        runs[codec] = res.summary()
+    print(f"\n# {args.preset}: upload vs f32 baseline")
+    for acct in ("paper", "tpu"):
+        base = runs["f32"]["ledger"][acct]["upload_bits"] if "f32" in runs \
+            else None
+        for codec, summ in runs.items():
+            t = summ["ledger"][acct]
+            rel = (f"  ({t['upload_bits'] / base:6.1%} of f32)"
+                   if base else "")
+            print(f"[{acct:5s}] {codec:5s} upload {t['upload_mib']:9.2f} MiB "
+                  f"acc={summ['final_acc']:.3f}{rel}")
+    out = args.out or f"experiments/sim/{args.preset}.json"
+    d = os.path.dirname(out)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"name": args.preset, "runs": runs}, f, indent=2,
+                  default=float)
+    os.replace(tmp, out)
+    print(f"sweep ledger written to {out}")
+    return 0
 
 
 def main(argv=None) -> int:
@@ -53,6 +120,10 @@ def main(argv=None) -> int:
                     default=None,
                     help="client-parallel rounds over local devices "
                          "(DESIGN.md §11); default: the preset's setting")
+    ap.add_argument("--codec", choices=CODECS, default=None,
+                    help="stream wire codec (DESIGN.md §12); a non-f32 codec "
+                         "on a secagg preset disables secure aggregation "
+                         "loudly (masks cancel only on the f32 grid)")
     args = ap.parse_args(argv)
 
     if args.list or not args.preset:
@@ -63,7 +134,12 @@ def main(argv=None) -> int:
             print(f"{name:22s} {cfg.model}/{cfg.dataset} "
                   f"{cfg.partition:9s} rounds={cfg.rounds:<3d} "
                   f"cohort={cfg.clients_per_round}/{cfg.n_clients} {mech}")
+        for name, arm_codecs in sorted(presets.SWEEPS.items()):
+            print(f"{name:22s} sweep over codecs: {', '.join(arm_codecs)}")
         return 0 if args.list else 2
+
+    if args.preset in presets.SWEEPS:
+        return _run_sweep(args)
 
     try:
         cfg = presets.get(args.preset)
@@ -85,6 +161,13 @@ def main(argv=None) -> int:
         over["out_json"] = args.out
     if args.shard_clients is not None:
         over["shard_clients"] = args.shard_clients
+    if args.codec is not None:
+        over["codec"] = args.codec
+        if args.codec != "f32" and cfg.sa.enabled:
+            print(f"# NOTE: codec={args.codec} disables secure aggregation "
+                  "for this run — sparse pair masks cancel bit-exactly only "
+                  "on the f32 grid (DESIGN.md §12)", flush=True)
+            over["sa"] = dataclasses.replace(cfg.sa, enabled=False)
     if args.quick:
         over.setdefault("rounds", min(3, cfg.rounds))
         over.setdefault("n_train", min(600, cfg.n_train))

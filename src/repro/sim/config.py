@@ -41,6 +41,10 @@ class SimConfig:
         ``None`` runs the dense FedAvg/FedProx baseline.
     sa : SecureAggConfig
         Sparse-mask secure aggregation settings.
+    codec : {'f32', 'int8', 'int4', '1bit'}
+        Stream value wire codec (core/codecs.py, DESIGN.md §12); quantized
+        codecs need ``thgs`` and reject ``sa.enabled`` (masks cancel only on
+        the f32 grid).
     sampler : {'uniform', 'weighted'}
         Cohort sampling: uniform without replacement, or weighted by each
         client's local data count.
@@ -94,6 +98,10 @@ class SimConfig:
     # mechanisms
     thgs: Optional[THGSConfig] = None
     sa: SecureAggConfig = SecureAggConfig(enabled=False)
+    # stream wire codec (core/codecs.py, DESIGN.md §12): 'f32' passthrough or
+    # 'int8'/'int4'/'1bit' quantized values + delta-packed indices; non-f32
+    # requires thgs and rejects secure aggregation (validate())
+    codec: str = "f32"
     # scheduling
     sampler: str = "uniform"
     weight_by_data_count: bool = False
@@ -147,6 +155,21 @@ class SimConfig:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
         if self.algorithm not in ("fedavg", "fedprox"):
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
+        from repro.core.codecs import CODECS
+        if self.codec not in CODECS:
+            raise ValueError(f"codec must be one of {CODECS}, "
+                             f"got {self.codec!r}")
+        if self.codec != "f32" and self.thgs is None:
+            raise ValueError(
+                f"codec {self.codec!r} requires THGS sparse streams "
+                "(thgs=None runs the dense baseline, which has no stream "
+                "wire to quantize)")
+        if self.codec != "f32" and self.sa.enabled:
+            raise ValueError(
+                f"codec {self.codec!r} cannot be combined with secure "
+                "aggregation: sparse pair masks cancel bit-exactly only on "
+                "the f32 grid (DESIGN.md §12); set sa.enabled=False or run "
+                "codec='f32' until integer-grid masked quantization lands")
         if self.thgs is not None:
             self.thgs.validate()
 

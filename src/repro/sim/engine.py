@@ -272,7 +272,7 @@ class Simulation:
                 state, batches, self.loss_fn, self.fed,
                 cfg.thgs, cfg.sa, bits=self.bits,
                 client_weights=self.client_weights, dropped=dropped,
-                mesh=self.mesh)
+                mesh=self.mesh, codec=cfg.codec)
             rec = state.comm_log[-1]
             self.ledger.record(rec)
             loss = float(np.mean([state.losses[c] for c in batches]))

@@ -49,6 +49,8 @@ class LedgerEntry:
     ks: tuple
     k_masks: tuple
     threshold: int = 0
+    codec: str = "f32"      # stream wire codec (core/codecs.py, DESIGN.md §12)
+    leaf_sizes: tuple = ()  # per-leaf dense sizes (codec index widths)
 
     @property
     def sparse(self) -> bool:
@@ -64,7 +66,8 @@ class LedgerEntry:
         survivors); control traffic is reported separately."""
         if self.sparse:
             return self.n_survivors * costs.upload_bits_sparse(
-                self.ks, self.k_masks, max(self.n_clients - 1, 0), bits)
+                self.ks, self.k_masks, max(self.n_clients - 1, 0), bits,
+                codec=self.codec, leaf_sizes=self.leaf_sizes)
         return self.n_survivors * costs.upload_bits_dense(
             self.model_size, bits)
 
@@ -104,7 +107,9 @@ class LedgerEntry:
                    n_survivors=rec.n_survivors or rec.n_clients,
                    model_size=rec.model_size,
                    ks=tuple(rec.ks), k_masks=tuple(rec.k_masks),
-                   threshold=int(rec.threshold))
+                   threshold=int(rec.threshold),
+                   codec=str(getattr(rec, "codec", "f32")),
+                   leaf_sizes=tuple(getattr(rec, "leaf_sizes", ())))
 
 
 class CommLedger:
@@ -235,5 +240,8 @@ class CommLedger:
                                 model_size=int(d["model_size"]),
                                 ks=tuple(int(k) for k in d["ks"]),
                                 k_masks=tuple(int(k) for k in d["k_masks"]),
-                                threshold=int(d.get("threshold", 0)))
+                                threshold=int(d.get("threshold", 0)),
+                                codec=str(d.get("codec", "f32")),
+                                leaf_sizes=tuple(
+                                    int(s) for s in d.get("leaf_sizes", ())))
                     for d in dicts])

@@ -78,6 +78,34 @@ PRESETS: dict[str, SimConfig] = {
 }
 
 
+# Codec sweeps: one Table-2-protocol run per wire codec (core/codecs.py,
+# DESIGN.md §12). Every arm — including the f32 baseline — runs with secure
+# aggregation OFF so the arms differ by wire codec alone (quantized codecs are
+# rejected under secagg: masks cancel only on the f32 grid), which is what
+# makes the ledger comparison in EXPERIMENTS.md / CI like-for-like.
+SWEEPS: dict[str, tuple[str, ...]] = {
+    "codec_sweep_quick": ("f32", "int8", "int4", "1bit"),
+    "codec_sweep": ("f32", "int8", "int4", "1bit"),
+}
+
+
+def sweep_configs(name: str) -> dict[str, SimConfig]:
+    """The per-codec arms of a named sweep, keyed by codec."""
+    try:
+        arm_codecs = SWEEPS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown sweep {name!r}; available: {', '.join(sorted(SWEEPS))}"
+        ) from None
+    quick = name.endswith("_quick")
+    return {
+        codec: SimConfig(
+            name=f"{name}_{codec}", thgs=_THGS,
+            sa=SecureAggConfig(enabled=False), codec=codec, **_table2(quick))
+        for codec in arm_codecs
+    }
+
+
 def names() -> list[str]:
     return sorted(PRESETS)
 

@@ -1,0 +1,83 @@
+"""Property tests for the wire-format codecs (hypothesis-driven).
+
+Separate from test_codecs.py because the module-level importorskip gates the
+whole file: the parametrized equivalents there always run; these widen the
+input space when hypothesis is available.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import codecs
+from repro.kernels import ref
+
+NON_F32 = [c for c in codecs.CODECS if c != "f32"]
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data(), st.integers(min_value=1, max_value=32))
+def test_bitpack_rows_roundtrip(data, width):
+    """Any (rows, k, width) — odd sizes, padding boundaries — round-trips."""
+    rows = data.draw(st.integers(min_value=1, max_value=9))
+    k = data.draw(st.integers(min_value=1, max_value=300))
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    rng = np.random.default_rng(seed)
+    hi = np.uint64(1) << np.uint64(width)
+    u = rng.integers(0, int(hi), size=(rows, k), dtype=np.uint64)
+    u = u.astype(np.uint32)
+    words = ref.bitpack_rows_ref(jnp.asarray(u), width)
+    assert words.shape == (rows, ref.packed_words(k, width))
+    back = ref.bitunpack_rows_ref(words, k, width)
+    np.testing.assert_array_equal(np.asarray(back), u)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_delta_packed_indices_roundtrip(data):
+    """Monotone duplicate-free column rows survive delta packing exactly."""
+    m = data.draw(st.integers(min_value=2, max_value=5000))
+    k = data.draw(st.integers(min_value=1, max_value=min(m, 64)))
+    rows = data.draw(st.integers(min_value=1, max_value=4))
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    codec = data.draw(st.sampled_from(NON_F32))
+    rng = np.random.default_rng(seed)
+    cols = np.stack([np.sort(rng.choice(m, size=k, replace=False))
+                     for _ in range(rows)]).astype(np.int32)
+    qmax = {"int8": 127, "int4": 7, "1bit": 1}[codec]
+    lo = 1 if codec == "1bit" else -qmax  # 1bit carries sign only: q in {±1}
+    q = rng.integers(lo, qmax + 1, size=(rows, k)).astype(np.int32)
+    if codec == "1bit":
+        q = np.where(rng.integers(0, 2, size=q.shape) > 0, 1, -1).astype(
+            np.int32)
+    iw, vw = codecs.pack_stream_rows(jnp.asarray(cols), jnp.asarray(q),
+                                     m=m, codec=codec)
+    c2, q2 = codecs.unpack_stream_rows(iw, vw, k=k, m=m, codec=codec)
+    np.testing.assert_array_equal(np.asarray(c2), cols)
+    np.testing.assert_array_equal(np.asarray(q2), q)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data(), st.sampled_from(NON_F32))
+def test_quantize_dequantize_error_bound(data, codec):
+    """Per-row quantization error stays within half a step (or mean|v|)."""
+    rows = data.draw(st.integers(min_value=1, max_value=4))
+    k = data.draw(st.integers(min_value=1, max_value=64))
+    seed = data.draw(st.integers(min_value=0, max_value=2**31 - 1))
+    scale = data.draw(st.floats(min_value=1e-3, max_value=1e3))
+    rng = np.random.default_rng(seed)
+    vals = (rng.normal(size=(rows, k)) * scale).astype(np.float32)
+    q, scales = codecs.quantize_rows(jnp.asarray(vals), codec)
+    vq = np.asarray(codecs.dequantize_rows(q, scales))
+    assert np.isfinite(vq).all()
+    if codec == "1bit":
+        mean = np.abs(vals).mean(axis=-1, keepdims=True)
+        assert (np.abs(vq - vals) <= np.abs(vals) + mean + 1e-5).all()
+    else:
+        qmax = {"int8": 127, "int4": 7}[codec]
+        amax = np.abs(vals).max(axis=-1, keepdims=True)
+        assert (np.abs(vq - vals) <= amax / qmax * 0.51 + 1e-7).all()

@@ -1,0 +1,263 @@
+"""Quantized wire-format codecs (core/codecs.py, DESIGN.md §12).
+
+Covers the value codecs (quantize/dequantize error bounds, exact pack round
+trips), the delta-packed index stream, the encode-path integration (error
+feedback absorbs quantization error, conservation holds to float rounding),
+the secagg/dense guards at every layer, and the ledger accounting facts.
+Property-test variants (hypothesis) live in test_codec_properties.py so this
+file always runs.
+"""
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import codecs, costs, streams
+from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+
+NON_F32 = [c for c in codecs.CODECS if c != "f32"]
+
+
+# ------------------------------------------------------------- value codecs
+@pytest.mark.parametrize("codec", NON_F32)
+def test_quantize_roundtrip_error_bounded(codec):
+    rng = np.random.default_rng(0)
+    vals = jnp.asarray(rng.normal(size=(5, 33)).astype(np.float32))
+    q, scales = codecs.quantize_rows(vals, codec)
+    vq = np.asarray(codecs.dequantize_rows(q, scales))
+    err = np.abs(vq - np.asarray(vals))
+    amax = np.abs(np.asarray(vals)).max(axis=-1, keepdims=True)
+    if codec == "1bit":
+        # sign carrier: |vq| == mean|v| per row, sign matches v
+        mean = np.abs(np.asarray(vals)).mean(axis=-1, keepdims=True)
+        np.testing.assert_allclose(np.abs(vq), np.broadcast_to(mean, vq.shape),
+                                   rtol=1e-6)
+        assert (np.sign(vq) == np.where(np.asarray(vals) >= 0, 1, -1)).all()
+    else:
+        qmax = {"int8": 127, "int4": 7}[codec]
+        assert (err <= amax / qmax * 0.50001).all()
+
+
+@pytest.mark.parametrize("codec", NON_F32)
+def test_quantize_zero_rows_safe(codec):
+    vals = jnp.zeros((3, 16), jnp.float32)
+    q, scales = codecs.quantize_rows(vals, codec)
+    vq = np.asarray(codecs.dequantize_rows(q, scales))
+    assert np.isfinite(vq).all()
+    np.testing.assert_array_equal(vq, 0.0)
+
+
+@pytest.mark.parametrize("codec", NON_F32)
+@pytest.mark.parametrize("k,m", [(1, 2), (7, 50), (17, 1000), (32, 4096)])
+def test_pack_stream_roundtrip_exact(codec, k, m):
+    """Delta-packed indices and bit-packed values survive the wire exactly."""
+    rng = np.random.default_rng(k * 1000 + m)
+    cols = np.stack([np.sort(rng.choice(m, size=k, replace=False))
+                     for _ in range(3)]).astype(np.int32)
+    vals = jnp.asarray(rng.normal(size=(3, k)).astype(np.float32))
+    q, _ = codecs.quantize_rows(vals, codec)
+    iw, vw = codecs.pack_stream_rows(jnp.asarray(cols), q, m=m, codec=codec)
+    assert iw.dtype == jnp.uint32 and vw.dtype == jnp.uint32
+    c2, q2 = codecs.unpack_stream_rows(iw, vw, k=k, m=m, codec=codec)
+    np.testing.assert_array_equal(np.asarray(c2), cols)
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+
+
+def test_pack_stream_duplicate_cols_roundtrip():
+    """Non-strict (duplicate) columns delta to 0 and still round-trip."""
+    cols = jnp.asarray([[3, 3, 7, 7, 7]], jnp.int32)
+    q = jnp.asarray([[1, -1, 2, -2, 3]], jnp.int32)
+    iw, vw = codecs.pack_stream_rows(cols, q, m=100, codec="int8")
+    c2, q2 = codecs.unpack_stream_rows(iw, vw, k=5, m=100, codec="int8")
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(cols))
+    np.testing.assert_array_equal(np.asarray(q2), np.asarray(q))
+
+
+def test_index_width():
+    assert codecs.index_width(2) == 1
+    assert codecs.index_width(3) == 2
+    assert codecs.index_width(1024) == 10
+    assert codecs.index_width(1025) == 11
+
+
+def test_wire_bits_formula():
+    from repro.kernels.ref import packed_words
+    k, m = 17, 1000
+    for codec in NON_F32:
+        expect = (32 * packed_words(k, codecs.index_width(m))
+                  + 32 * packed_words(k, codecs.value_bits(codec))
+                  + codecs.SCALE_BITS)
+        assert codecs.wire_bits(k, m, codec) == expect
+    with pytest.raises(ValueError):
+        codecs.wire_bits(k, m, "f32")
+
+
+# --------------------------------------------------------- encode-path stage
+@pytest.mark.parametrize("codec", codecs.CODECS)
+def test_encode_leaf_batch_codec_conservation(codec):
+    """decode + summed residuals == summed updates: the quantization error is
+    absorbed into error feedback, not lost."""
+    rng = np.random.default_rng(2)
+    C, size, nb, m = 4, 192, 3, 64
+    g = jnp.asarray(rng.normal(size=(C, size)).astype(np.float32))
+    r = jnp.asarray(rng.normal(size=(C, size)).astype(np.float32) * 0.1)
+    sb, nr = streams.encode_leaf_batch(g, r, k=8, nb=nb, m=m, size=size,
+                                       codec=codec)
+    dense = streams.decode_leaf_batch(sb, nb=nb, m=m, size=size)
+    tot = np.asarray(dense) + np.asarray(nr).sum(0)
+    ref = np.asarray(g + r).sum(0)
+    np.testing.assert_allclose(tot, ref, atol=1e-5)
+
+
+def test_encode_leaf_batch_codec_weighted_conservation():
+    rng = np.random.default_rng(3)
+    C, size, nb, m = 4, 192, 3, 64
+    g = jnp.asarray(rng.normal(size=(C, size)).astype(np.float32))
+    r = jnp.zeros((C, size), jnp.float32)
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4], jnp.float32)
+    sb, nr = streams.encode_leaf_batch(g, r, k=8, nb=nb, m=m, size=size,
+                                       codec="int8", weights=w)
+    dense = streams.decode_leaf_batch(sb, nb=nb, m=m, size=size)
+    tot = (np.asarray(dense)
+           + (np.asarray(w)[:, None] * np.asarray(nr)).sum(0))
+    ref = (np.asarray(w)[:, None] * np.asarray(g)).sum(0)
+    np.testing.assert_allclose(tot, ref, atol=1e-5)
+
+
+@pytest.mark.parametrize("codec", NON_F32)
+def test_run_round_codec_converges(codec):
+    """Quantized rounds converge like f32 on the linreg template (§12)."""
+    from repro.core.fedavg import init_state, run_round
+
+    dim = 40
+    key = jax.random.key(0)
+    true_w = jnp.linspace(1.0, 3.0, dim).reshape(dim, 1)
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    fed = FedConfig(n_clients=4, clients_per_round=4, local_steps=2,
+                    local_batch=8, local_lr=0.05, rounds=6)
+    thgs = THGSConfig(s0=0.5, alpha=1.0, s_min=0.3, time_varying=False)
+    sa = SecureAggConfig(enabled=False)
+    st = init_state({"w": jnp.zeros((dim, 1))}, fed)
+    for r in range(fed.rounds):
+        batches = {}
+        for c in range(4):
+            k = jax.random.fold_in(key, r * 10 + c)
+            x = jax.random.normal(k, (2, 8, dim))
+            batches[c] = (x, x @ true_w)
+        st = run_round(st, batches, loss_fn, fed, thgs, sa, codec=codec)
+    err = float(jnp.max(jnp.abs(st.params["w"] - true_w)))
+    assert err < 2.0, err
+    rec = st.comm_log[-1]
+    assert rec.codec == codec
+    assert rec.leaf_sizes == (dim,)
+
+
+# ------------------------------------------------------------------- guards
+def test_streams_rejects_codec_with_masks():
+    with pytest.raises(ValueError, match="f32 .*grid"):
+        streams.encode_leaf_batch(
+            jnp.zeros((2, 8)), jnp.zeros((2, 8)), k=2, nb=1, m=8, size=8,
+            codec="int8", k_mask=1)
+
+
+def test_run_round_rejects_codec_with_secagg_and_dense():
+    from repro.core.fedavg import init_state, run_round
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    fed = FedConfig(n_clients=2, clients_per_round=2, local_steps=1,
+                    local_batch=4, local_lr=0.05, rounds=1)
+    thgs = THGSConfig(s0=0.5, alpha=1.0, s_min=0.3, time_varying=False)
+    st = init_state({"w": jnp.zeros((4, 1))}, fed)
+    x = jnp.ones((1, 4, 4))
+    batches = {0: (x, x @ jnp.ones((4, 1))), 1: (x, x @ jnp.ones((4, 1)))}
+    with pytest.raises(ValueError, match="secure aggregation"):
+        run_round(st, batches, loss_fn, fed, thgs,
+                  SecureAggConfig(mask_ratio=0.1), codec="int8")
+    with pytest.raises(ValueError, match="dense"):
+        run_round(st, batches, loss_fn, fed, None,
+                  SecureAggConfig(enabled=False), codec="int8")
+
+
+def test_sim_config_rejects_codec_with_secagg_and_dense():
+    from repro.sim.config import SimConfig
+
+    thgs = THGSConfig(s0=0.05, alpha=0.9, s_min=0.01)
+    with pytest.raises(ValueError, match="secure aggregation"):
+        SimConfig(thgs=thgs, sa=SecureAggConfig(mask_ratio=0.01),
+                  codec="int8").validate()
+    with pytest.raises(ValueError, match="THGS"):
+        SimConfig(thgs=None, sa=SecureAggConfig(enabled=False),
+                  codec="int8").validate()
+    with pytest.raises(ValueError, match="codec"):
+        SimConfig(thgs=thgs, sa=SecureAggConfig(enabled=False),
+                  codec="int16").validate()
+    # the valid combination passes
+    SimConfig(thgs=thgs, sa=SecureAggConfig(enabled=False),
+              codec="int8").validate()
+
+
+# --------------------------------------------------------------- accounting
+def test_costs_codec_accounting_exact_and_invariant():
+    ks, sizes = (1004,), (100352,)
+    f32_paper = costs.upload_bits_sparse(ks, (0,), 0, costs.PAPER_BITS)
+    for codec in NON_F32:
+        b_paper = costs.upload_bits_sparse(
+            ks, (0,), 0, costs.PAPER_BITS, codec=codec, leaf_sizes=sizes)
+        b_tpu = costs.upload_bits_sparse(
+            ks, (0,), 0, costs.TPU_BITS, codec=codec, leaf_sizes=sizes)
+        # packed words ARE the wire: same bits under both accountings
+        assert b_paper == b_tpu
+        assert b_paper == sum(codecs.wire_bits(k, s, codec)
+                              for k, s in zip(ks, sizes))
+    # acceptance: int8 <= 1/3 of the f32 paper accounting
+    b_int8 = costs.upload_bits_sparse(
+        ks, (0,), 0, costs.PAPER_BITS, codec="int8", leaf_sizes=sizes)
+    assert b_int8 <= f32_paper / 3
+
+
+def test_costs_codec_guards():
+    with pytest.raises(ValueError, match="secure aggregation"):
+        costs.upload_bits_sparse((5,), (2,), 3, codec="int8",
+                                 leaf_sizes=(100,))
+    with pytest.raises(ValueError, match="leaf_sizes"):
+        costs.upload_bits_sparse((5,), (0,), 3, codec="int8")
+
+
+def test_ledger_codec_roundtrip_and_backcompat():
+    from repro.sim.ledger import CommLedger, LedgerEntry
+
+    rec = costs.round_record(1, 159010, (1004,), (0,), 5,
+                             codec="int8", leaf_sizes=(100352,))
+    led = CommLedger([LedgerEntry.from_record(rec)])
+    # serialized entries -> rebuilt ledger -> identical totals
+    led2 = CommLedger.from_entry_dicts(led.summary()["entries"])
+    assert led2.totals("paper") == led.totals("paper")
+    assert led2.totals("tpu") == led.totals("tpu")
+    assert led2.entries[0].codec == "int8"
+    # pre-codec checkpoint dicts default to f32
+    old = {k: v for k, v in led.summary()["entries"][0].items()
+           if k not in ("codec", "leaf_sizes")}
+    led3 = CommLedger.from_entry_dicts([old])
+    assert led3.entries[0].codec == "f32"
+    assert led3.entries[0].leaf_sizes == ()
+
+
+def test_sweep_configs_arms():
+    from repro.sim import presets
+
+    arms = presets.sweep_configs("codec_sweep_quick")
+    assert set(arms) == {"f32", "int8", "int4", "1bit"}
+    for codec, cfg in arms.items():
+        assert cfg.codec == codec
+        assert not cfg.sa.enabled  # like-for-like: secagg off in every arm
+        cfg.validate()
+    with pytest.raises(KeyError):
+        presets.sweep_configs("nope")
