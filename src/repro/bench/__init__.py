@@ -1,8 +1,9 @@
 """repro.bench — the machine-readable performance trajectory.
 
 ``python -m repro.bench`` times the hot paths (the client-parallel federated
-round, serial vs device-sharded, and the aggregation kernels) and emits
-schema'd JSON documents — ``BENCH_round.json`` / ``BENCH_agg.json`` at the
+round, serial vs device-sharded, the aggregation kernels, and the flat-vs-
+tree cohort scaling sweep) and emits schema'd JSON documents —
+``BENCH_round.json`` / ``BENCH_agg.json`` / ``BENCH_cohort.json`` at the
 repo root — that CI gates every PR against (``--gate``). EXPERIMENTS.md
 documents the schema and how to refresh the committed baselines.
 
@@ -14,7 +15,8 @@ the repo-root ``benchmarks`` package and run here via ``--csv --only ...``;
 Import discipline: this module and ``repro.bench.schema`` import no jax —
 the CLI must be able to set ``XLA_FLAGS`` (device count) before the first
 jax import, and the CI gate runs without touching a backend at all. The
-suite implementations (``round_bench``, ``agg_bench``) are imported lazily.
+suite implementations (``round_bench``, ``agg_bench``, ``cohort_bench``)
+are imported lazily.
 """
 from __future__ import annotations
 
@@ -25,6 +27,7 @@ from repro.bench.schema import (SCHEMA_VERSION, gate_compare, iter_entries,
 JSON_SUITES = {
     "round": ("repro.bench.round_bench", "BENCH_round.json"),
     "agg": ("repro.bench.agg_bench", "BENCH_agg.json"),
+    "cohort": ("repro.bench.cohort_bench", "BENCH_cohort.json"),
 }
 
 # legacy CSV-only suites living in the repo-root benchmarks/ package

@@ -40,8 +40,9 @@ def main(argv=None) -> int:
                     help="CI-sized workloads (the committed baselines are "
                          "quick-mode; entry names encode the size)")
     ap.add_argument("--only", default=None,
-                    help="comma-separated suites; JSON suites: round,agg; "
-                         "legacy CSV-only: table1,table2,fig1,fig3,roofline")
+                    help="comma-separated suites; JSON suites: "
+                         "round,agg,cohort; legacy CSV-only: "
+                         "table1,table2,fig1,fig3,roofline")
     ap.add_argument("--out", default=None,
                     help="write ONE combined JSON document here instead of "
                          "per-suite BENCH_<suite>.json files in the cwd")
@@ -55,8 +56,9 @@ def main(argv=None) -> int:
                     help="gate mode: compare this document against the "
                          "baselines and exit 1 on regression (runs nothing)")
     ap.add_argument("--baseline", action="append", default=None,
-                    help="baseline document(s) for --gate "
-                         "(default: BENCH_round.json BENCH_agg.json)")
+                    help="baseline document(s) for --gate (default: "
+                         "BENCH_round.json BENCH_agg.json "
+                         "BENCH_cohort.json)")
     ap.add_argument("--max-slowdown", type=float,
                     default=schema.DEFAULT_MAX_SLOWDOWN,
                     help="gate threshold (default %(default)s; generous — "
@@ -66,7 +68,8 @@ def main(argv=None) -> int:
     if args.gate is not None:
         current = schema.load_doc(args.gate)
         baselines = []
-        for p in (args.baseline or ["BENCH_round.json", "BENCH_agg.json"]):
+        for p in (args.baseline or ["BENCH_round.json", "BENCH_agg.json",
+                                    "BENCH_cohort.json"]):
             baselines.append(schema.load_doc(p))
         failures, compared = schema.gate_compare(
             current, baselines, max_slowdown=args.max_slowdown)

@@ -19,7 +19,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.bench.timing import entry, time_us
+from repro.bench.timing import entry, measure
 from repro.core import streams
 from repro.core.masks import client_masks
 from repro.core.secure_agg import encode_leaf
@@ -62,9 +62,9 @@ def _one_size(size: int, n_clients: int, reps: int) -> list[dict]:
         return streams.decode_leaf_batch(
             st, nb=1, m=size, size=size).block_until_ready()
 
-    us_loop = time_us(lambda: _loop_round(grads, residuals, k, thgs, sa,
+    us_loop = measure(lambda: _loop_round(grads, residuals, k, thgs, sa,
                                           participants, size), reps)
-    us_batched = time_us(batched_round, reps)
+    us_batched = measure(batched_round, reps)
 
     k_total = k + n_clients * k_mask
     stream_mb = n_clients * k_total * 8 / 1e6          # int32 idx + f32 val
@@ -107,8 +107,8 @@ def _kernel_micro(size: int, n_clients: int, reps: int) -> list[dict]:
             jax.default_backend() == "tpu").block_until_ready()
 
     tag = f"c{n_clients}_n{size}"
-    us_prng = time_us(prng, reps)
-    us_scatter = time_us(scatter, reps)
+    us_prng = measure(prng, reps)
+    us_scatter = measure(scatter, reps)
     return [
         entry(f"agg/mask_prng_{tag}", us_prng,
               f"{n_clients * n_clients * k_mask}_slots", reps=reps),
@@ -126,12 +126,6 @@ def _codec_micro(size: int, n_clients: int, reps: int) -> list[dict]:
     enc ratios show what the quantize+bitpack stage itself costs.
     """
     from repro.core.codecs import CODECS
-
-    # min-of-single-rep timings: these ops are 0.1-2ms, so a single OS
-    # scheduler stall averaged over 2-3 reps trips the 3x CI gate; the min
-    # is what the op actually costs
-    def best_us(fn, reps):
-        return min(time_us(fn, 1) for _ in range(max(3, reps)))
 
     k = max(1, size // 100)
     key = jax.random.key(2)
@@ -152,8 +146,8 @@ def _codec_micro(size: int, n_clients: int, reps: int) -> list[dict]:
             return streams.decode_leaf_batch(
                 _st, nb=1, m=size, size=size).block_until_ready()
 
-        us_enc = best_us(enc, reps)
-        us_dec = best_us(dec, reps)
+        us_enc = measure(enc, reps)
+        us_dec = measure(dec, reps)
         slots = n_clients * k
         out += [
             entry(f"agg/codec_enc_{codec}_{tag}", us_enc,

@@ -1,0 +1,85 @@
+"""Cohort-scaling benchmarks (suite key ``cohort`` -> BENCH_cohort.json).
+
+Clients/s of the server aggregation data plane vs cohort size, flat vs tree
+(DESIGN.md §13): for each simulated cohort C in {64, 256, 1024} the suite
+synthesizes one round's sparse streams directly (random in-range indices +
+normal values — this isolates the decode, no SGD and no mask PRNG in the
+timed region) and times
+
+  * ``flat`` — the single fused scatter-add (``streams.decode_sum_blocks``);
+  * ``tree`` — G = ~sqrt(C) sub-aggregators each scatter-adding their
+    contiguous index range, combined by concatenation
+    (``streams.decode_sum_tree``) — bit-exact with flat, so the delta is
+    pure execution cost.
+
+An info entry per cohort reports the collective-volume story: the flat
+all-gather moves C·k stream slots to every device, the tree's inter-group
+combine moves G dense partials totalling one model (O(m)).
+
+Quick and full mode run the SAME cohort sizes — the acceptance trajectory is
+the 64/256/1024 sweep itself — with quick shrinking the leaf and rep count.
+All entries are min-of-reps (``timing.measure``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.bench.timing import entry, measure
+from repro.core import streams
+from repro.launch.mesh import default_tree_groups
+
+COHORTS = (64, 256, 1024)
+
+
+def _one_cohort(n_clients: int, size: int, k: int, reps: int) -> list[dict]:
+    key = jax.random.key(n_clients)
+    idx = jax.random.randint(key, (n_clients, 1, k), 0, size,
+                             dtype=jnp.int32)
+    vals = jax.random.normal(jax.random.fold_in(key, 1),
+                             (n_clients, 1, k), jnp.float32)
+    st = streams.StreamBatch(indices=idx, values=vals)
+    groups = default_tree_groups(n_clients)
+    splits = streams.tree_splits(size, groups)
+
+    def flat():
+        return streams.decode_sum_blocks(st, 1, size).block_until_ready()
+
+    def tree():
+        return streams.decode_sum_tree(
+            st, 1, size, splits=splits).block_until_ready()
+
+    # parity guard: a benchmark of a wrong decode is worse than no benchmark
+    assert bool(jnp.all(flat() == tree())), "tree decode diverged from flat"
+
+    us_flat = measure(flat, reps)
+    us_tree = measure(tree, reps)
+    stream_mb = n_clients * k * 8 / 1e6        # int32 idx + f32 val per slot
+    partial_mb = size * 4 / 1e6                # G partials totalling one model
+    tag = f"c{n_clients}_n{size}"
+    return [
+        entry(f"cohort/flat_{tag}", us_flat,
+              f"{n_clients / (us_flat / 1e6):.0f}_clients_per_s", reps=reps),
+        entry(f"cohort/tree_{tag}_g{groups}", us_tree,
+              f"{n_clients / (us_tree / 1e6):.0f}_clients_per_s", reps=reps),
+        entry(f"cohort/volume_{tag}", 0.0,
+              f"gather{stream_mb:.2f}MB_vs_combine{partial_mb:.2f}MB"),
+    ]
+
+
+def entries(quick: bool = False) -> list[dict]:
+    if quick:
+        size, reps = 1 << 12, 3
+    else:
+        size, reps = 1 << 16, 5
+    k = max(1, size // 256)
+    out = []
+    for C in COHORTS:
+        out += _one_cohort(C, size, k, reps)
+    return out
+
+
+def rows(quick: bool = False) -> list[tuple]:
+    """Legacy ``(name, us_per_call, derived)`` tuples for the CSV printer."""
+    return [(e["name"], e["us_per_call"], e["derived"])
+            for e in entries(quick=quick)]

@@ -14,13 +14,15 @@ three configurations:
 
 Sharded and serial rounds are bit-exact, so the delta between their entries
 is pure execution cost — the number the perf trajectory tracks PR over PR.
+All entries are min-of-reps (``timing.measure``): at reps=2 a single OS
+scheduler stall in a mean would trip the CI gate's 3x bound.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
-from repro.bench.timing import entry, time_us
+from repro.bench.timing import entry, measure
 from repro.core import fedavg
 from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
 
@@ -73,12 +75,12 @@ def entries(quick: bool = False) -> list[dict]:
 
     out = [entry(f"round/model_size_c{C}", 0.0,
                  f"{model_size}_params_mnist_mlp")]
-    us_serial = time_us(
+    us_serial = measure(
         _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=None),
         reps)
     out.append(entry(f"round/serial_c{C}", us_serial,
                      f"{C / (us_serial / 1e6):.0f}_clients_per_s", reps=reps))
-    us_serial_drop = time_us(
+    us_serial_drop = measure(
         _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=None,
                      dropped=dropped), reps)
     out.append(entry(f"round/serial_dropout_c{C}", us_serial_drop,
@@ -87,13 +89,13 @@ def entries(quick: bool = False) -> list[dict]:
         out.append(entry(f"round/sharded_c{C}", 0.0,
                          "unavailable_single_device"))
         return out
-    us_sharded = time_us(
+    us_sharded = measure(
         _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=mesh),
         reps)
     out.append(entry(f"round/sharded_c{C}_d{n_dev}", us_sharded,
                      f"{C / (us_sharded / 1e6):.0f}_clients_per_s",
                      reps=reps))
-    us_sharded_drop = time_us(
+    us_sharded_drop = measure(
         _round_timer(params, batches, loss_fn, fed, thgs, sa, mesh=mesh,
                      dropped=dropped), reps)
     out.append(entry(f"round/sharded_dropout_c{C}_d{n_dev}", us_sharded_drop,

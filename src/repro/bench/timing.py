@@ -19,6 +19,22 @@ def time_us(fn: Callable[[], object], reps: int, *, warmup: int = 1) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
+def measure(fn: Callable[[], object], reps: int, *, warmup: int = 1) -> float:
+    """Min-of-reps wall-clock microseconds per call — the canonical suite
+    timer.
+
+    Every BENCH suite times through this (tests/test_bench.py pins it): the
+    CI gate compares against committed baselines with a 3x slowdown bound,
+    and a mean over 2-3 reps of a sub-millisecond op trips it on a single OS
+    scheduler stall (PR 6 hit this on the agg micro-entries). The *min* of
+    ``max(3, reps)`` single-rep timings is what the op actually costs; the
+    ``warmup`` calls absorb compilation.
+    """
+    for _ in range(max(warmup, 0)):
+        fn()
+    return min(time_us(fn, 1, warmup=0) for _ in range(max(3, reps)))
+
+
 def entry(name: str, us: float, derived: str = "", *, reps: int = 0) -> dict:
     """One normalized BENCH entry (us == 0.0 marks an info-only row)."""
     e = {"name": name, "us_per_call": float(us), "derived": str(derived)}

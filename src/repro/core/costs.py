@@ -143,6 +143,7 @@ def round_record(
     threshold: int = 0,
     codec: str = "f32",
     leaf_sizes: Sequence[int] = (),
+    staleness: Sequence[int] = (),
 ) -> CommRecord:
     """Eq. 7-8 accounting for one sparse aggregation round.
 
@@ -179,6 +180,10 @@ def round_record(
     leaf_sizes : sequence of int
         Per-leaf dense sizes aligned with ``ks`` — a slot-level fact stored on
         the record so the ledger can re-derive codec wire sizes later.
+    staleness : sequence of int
+        Per-report staleness taus for async (FedBuff-style) updates; empty on
+        synchronous rounds. A stored fact — the bit totals are unaffected
+        (each buffered report uploads the same sparse stream).
 
     Returns
     -------
@@ -211,6 +216,7 @@ def round_record(
         k_masks=tuple(int(k) for k in k_masks),
         codec=codec,
         leaf_sizes=tuple(int(s) for s in leaf_sizes),
+        staleness=tuple(int(t) for t in staleness),
     )
 
 

@@ -187,6 +187,8 @@ def run_round(
     protocol=None,
     mesh=None,
     codec: str = "f32",
+    topology: str = "flat",
+    tree_groups: int = 0,
 ) -> FederatedState:
     """One aggregation round over the provided participating clients.
 
@@ -217,11 +219,23 @@ def run_round(
     under secure aggregation — pair masks cancel bit-exactly only on the f32
     grid.
 
+    ``topology`` selects the aggregation tree (DESIGN.md §13): ``'flat'`` is
+    the single fused scatter-add; ``'tree'`` splits the decode across
+    ``tree_groups`` sub-aggregators (0 = auto, ~sqrt(cohort)), each owning a
+    contiguous index range of the dense buffer, combined by concatenation —
+    bit-exact with flat (params, residuals, CommLedger), including secagg
+    dropout recovery, for any group count. Requires THGS.
+
     All participants' batch pytrees must share one structure and one set of
     array shapes (they are stacked on a leading client axis for the batched
     local-SGD program); pad ragged local data to fixed [steps, batch] first,
     as data/federated.py::client_batches does.
     """
+    if topology not in ("flat", "tree"):
+        raise ValueError(f"unknown topology {topology!r}")
+    if topology == "tree" and thgs is None:
+        raise ValueError("topology='tree' requires THGS sparse streams; "
+                         "dense rounds have no stream decode to shard")
     participants = sorted(client_batches.keys())
     C = len(participants)
     sharded = se.can_shard_clients(mesh, C)
@@ -310,6 +324,9 @@ def run_round(
         if sharded:
             res_stacked = [se.shard_client_tree(r, mesh) for r in res_stacked]
 
+        groups = tree_groups if tree_groups > 0 else max(
+            2, int(round(C ** 0.5)))
+
         agg_leaves, new_res_leaves = [], []
         ks_acct, k_masks_acct, leaf_sizes_acct = [], [], []
         for leaf_id, (d_st, r_st, k, shape) in enumerate(
@@ -326,7 +343,8 @@ def run_round(
                     recovery_seeds=recovery_seeds if dropped else None,
                     alive=alive if dropped else None,
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
-                    leaf_id=leaf_id, weights=w_vec, codec=codec)
+                    leaf_id=leaf_id, weights=w_vec, codec=codec,
+                    topology=topology, tree_groups=groups)
             else:
                 # ---- 2. batched unified-stream encode (all clients, one
                 # jit) ----
@@ -337,12 +355,23 @@ def run_round(
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
                     leaf_id=leaf_id, weights=w_vec, codec=codec)
                 # ---- 3. fused scatter-add decode + dropout recovery ----
-                dense = se.decode_leaf_batch(
-                    streams_b, nb=1, m=size, size=size,
-                    alive=alive if dropped else None,
-                    pair_seeds=recovery_seeds if dropped else None,
-                    pair_signs=pair_signs if dropped else None,
-                    k_mask=k_mask, mask_p=sa.p, mask_q=sa.q, leaf_id=leaf_id)
+                if topology == "tree":
+                    dense = se.decode_leaf_tree(
+                        streams_b, nb=1, m=size, size=size,
+                        splits=se.tree_splits(size, groups),
+                        alive=alive if dropped else None,
+                        pair_seeds=recovery_seeds if dropped else None,
+                        pair_signs=pair_signs if dropped else None,
+                        k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
+                        leaf_id=leaf_id)
+                else:
+                    dense = se.decode_leaf_batch(
+                        streams_b, nb=1, m=size, size=size,
+                        alive=alive if dropped else None,
+                        pair_seeds=recovery_seeds if dropped else None,
+                        pair_signs=pair_signs if dropped else None,
+                        k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
+                        leaf_id=leaf_id)
             agg_leaves.append(
                 (dense / w_surv_total).reshape(shape)
                 .astype(leaf_dtypes[leaf_id]))
@@ -412,6 +441,146 @@ def run_round(
     state.params = jax.tree_util.tree_map(
         lambda p, d: p + fed.server_lr * d, state.params, agg
     )
+    state.comm_log.append(rec)
+    state.round += 1
+    return state
+
+
+# -------------------------------------------- async (FedBuff-style) updates
+def staleness_weight(tau: int) -> float:
+    """FedBuff's polynomial staleness discount ``(1 + tau)^(-1/2)``
+    (Nguyen et al. 2022): a report trained on params ``tau`` server updates
+    old contributes with this weight. ``tau == 0`` gives weight 1, so an
+    all-fresh buffer reproduces the synchronous round exactly."""
+    return (1.0 + float(tau)) ** -0.5
+
+
+@partial(jax.jit, static_argnames=("loss_fn", "local_steps", "prox_mu"))
+def batched_client_update_multi(
+    params_stacked: PyTree,  # leading axis = reports (per-report stale params)
+    batches_stacked: Any,    # leading axis = reports, then local_steps
+    loss_fn: LossFn,
+    local_steps: int,
+    lr: float,
+    prox_mu: float = 0.0,
+) -> tuple[PyTree, jax.Array]:
+    """Async twin of ``batched_client_update``: every report trains from its
+    OWN (stale) parameter version, so params are vmapped alongside the
+    batches instead of broadcast. Returns (deltas stacked [B, ...],
+    losses [B])."""
+    return jax.vmap(
+        lambda p, b: _client_update(p, b, loss_fn, local_steps, lr, prox_mu)
+    )(params_stacked, batches_stacked)
+
+
+def run_async_update(
+    state: FederatedState,
+    client_batches: dict[int, Any],
+    client_params: Mapping[int, PyTree],
+    loss_fn: LossFn,
+    fed: FedConfig,
+    thgs: THGSConfig,
+    bits: costs.BitModel = costs.PAPER_BITS,
+    staleness: Mapping[int, int] | None = None,
+    client_weights: Mapping[int, float] | None = None,
+    codec: str = "f32",
+    topology: str = "flat",
+    tree_groups: int = 0,
+) -> FederatedState:
+    """One FedBuff-style buffered server update (DESIGN.md §13).
+
+    The buffer holds one report per client in ``client_batches``: client
+    ``c`` ran local SGD from the stale parameter version ``client_params[c]``
+    (``staleness[c]`` server updates old) and its THGS-sparsified delta joins
+    the aggregate with weight ``staleness_weight(tau) * client_weights[c]``.
+    The server applies the weight-normalized aggregate exactly like a
+    synchronous round — with ``staleness`` all zero this IS ``run_round``
+    bit-exactly (tested in tests/test_async_sim.py).
+
+    Secure aggregation is not supported in async mode: pair masks are agreed
+    round-synchronously among a known cohort, which a streaming buffer breaks
+    (SimConfig.validate rejects the combination). THGS is required — the
+    async path exists to exercise the sparse-stream data plane. Clients in
+    one buffer must be distinct: error-feedback residual write-back is
+    per-client, and a duplicate's first report would be silently clobbered.
+    """
+    if thgs is None:
+        raise ValueError("run_async_update requires THGS sparse streams")
+    if topology not in ("flat", "tree"):
+        raise ValueError(f"unknown topology {topology!r}")
+    participants = sorted(client_batches.keys())
+    B = len(participants)
+    assert len(set(participants)) == B, "buffer clients must be distinct"
+    staleness = staleness or {}
+    taus = [int(staleness.get(c, 0)) for c in participants]
+    w_list = [staleness_weight(t) *
+              (float(client_weights.get(c, 1.0)) if client_weights else 1.0)
+              for c, t in zip(participants, taus)]
+    w_vec = jnp.asarray(w_list, jnp.float32)
+    w_total = float(sum(w_list))
+
+    leaves, treedef = jax.tree_util.tree_flatten(state.params)
+    leaf_shapes = [x.shape for x in leaves]
+    leaf_dtypes = [x.dtype for x in leaves]
+    model_size = sum(x.size for x in leaves)
+
+    # ---- 1. every report's local SGD from its own stale params ----
+    batches_stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[client_batches[c] for c in participants])
+    params_stacked = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs), *[client_params[c] for c in participants])
+    deltas_stacked, losses = batched_client_update_multi(
+        params_stacked, batches_stacked, loss_fn, fed.local_steps,
+        fed.local_lr, fed.prox_mu if fed.algorithm == "fedprox" else 0.0)
+    losses_list = [float(x) for x in losses]
+
+    loss_prev = _mean_or_none([state.losses.get(c) for c in participants])
+    loss_curr = _mean_or_none(losses_list)
+    ks = schedules.leaf_ks(
+        thgs, [x.size for x in leaves], t=state.round,
+        total_rounds=fed.rounds, loss_prev=loss_prev, loss_curr=loss_curr)
+    groups = tree_groups if tree_groups > 0 else max(2, int(round(B ** 0.5)))
+
+    delta_leaves = jax.tree_util.tree_leaves(deltas_stacked)
+    res_per_client = [jax.tree_util.tree_leaves(state.residuals[c])
+                      for c in participants]
+    res_stacked = [jnp.stack([rl[i] for rl in res_per_client])
+                   for i in range(len(leaves))]
+
+    agg_leaves, new_res_leaves = [], []
+    ks_acct, leaf_sizes_acct = [], []
+    for leaf_id, (d_st, r_st, k, shape) in enumerate(
+            zip(delta_leaves, res_stacked, ks, leaf_shapes)):
+        size = leaves[leaf_id].size
+        # ---- 2. batched unified-stream encode, staleness-weighted ----
+        streams_b, new_res = se.encode_leaf_batch(
+            d_st, r_st, k=k, nb=1, m=size, size=size,
+            selector=thgs.selector, sample_frac=thgs.sample_frac,
+            leaf_id=leaf_id, weights=w_vec, codec=codec)
+        # ---- 3. fused decode (flat or hierarchical) ----
+        if topology == "tree":
+            dense = se.decode_leaf_tree(
+                streams_b, nb=1, m=size, size=size,
+                splits=se.tree_splits(size, groups))
+        else:
+            dense = se.decode_leaf_batch(streams_b, nb=1, m=size, size=size)
+        agg_leaves.append(
+            (dense / w_total).reshape(shape).astype(leaf_dtypes[leaf_id]))
+        new_res_leaves.append(new_res)
+        ks_acct.append(min(int(k), size))
+        leaf_sizes_acct.append(size)
+
+    agg = jax.tree_util.tree_unflatten(treedef, agg_leaves)
+    for ci, c in enumerate(participants):
+        state.residuals[c] = jax.tree_util.tree_unflatten(
+            treedef, [nr[ci] for nr in new_res_leaves])
+        state.losses[c] = losses_list[ci]
+    rec = costs.round_record(
+        state.round, model_size, ks_acct, [0] * len(ks_acct),
+        n_clients=B, bits=bits, n_survivors=B, threshold=0,
+        codec=codec, leaf_sizes=leaf_sizes_acct, staleness=tuple(taus))
+    state.params = jax.tree_util.tree_map(
+        lambda p, d: p + fed.server_lr * d, state.params, agg)
     state.comm_log.append(rec)
     state.round += 1
     return state

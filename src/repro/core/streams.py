@@ -654,6 +654,31 @@ def _scatter_flat(flat_idx: jax.Array, flat_vals: jax.Array,
     return jnp.zeros((padded,), jnp.float32).at[flat_idx].add(flat_vals)
 
 
+def _flatten_round_stream(
+    streams: StreamBatch,
+    alive: jax.Array | None,
+    weights: jax.Array | None,
+    extra: StreamBatch | None,
+) -> tuple[jax.Array, jax.Array]:
+    """The round's single flat (idx, vals) stream: per-client gating applied,
+    recovery streams appended. Shared by the flat and tree decodes so both
+    topologies fold the *identical* slot sequence (DESIGN.md §13)."""
+    C = streams.indices.shape[0]
+    gate = jnp.ones((C,), jnp.float32)
+    if weights is not None:
+        gate = gate * jnp.asarray(weights, jnp.float32)
+    if alive is not None:
+        gate = gate * jnp.asarray(alive, jnp.float32)
+    vals = streams.values * gate[:, None, None]
+    flat_idx = streams.indices.reshape(-1)
+    flat_vals = vals.reshape(-1)
+    if extra is not None:
+        flat_idx = jnp.concatenate([flat_idx, extra.indices.reshape(-1)])
+        flat_vals = jnp.concatenate(
+            [flat_vals, extra.values.reshape(-1).astype(jnp.float32)])
+    return flat_idx, flat_vals
+
+
 def decode_sum_blocks(
     streams: StreamBatch,      # [C, nb, k_total] global indices/values
     nb: int,
@@ -669,20 +694,86 @@ def decode_sum_blocks(
     fused pass (Pallas on TPU, XLA scatter elsewhere). Returns f32[nb*m]."""
     if use_pallas is None:
         use_pallas = jax.default_backend() == "tpu"
-    C = streams.indices.shape[0]
-    gate = jnp.ones((C,), jnp.float32)
-    if weights is not None:
-        gate = gate * jnp.asarray(weights, jnp.float32)
-    if alive is not None:
-        gate = gate * jnp.asarray(alive, jnp.float32)
-    vals = streams.values * gate[:, None, None]
-    flat_idx = streams.indices.reshape(-1)
-    flat_vals = vals.reshape(-1)
-    if extra is not None:
-        flat_idx = jnp.concatenate([flat_idx, extra.indices.reshape(-1)])
-        flat_vals = jnp.concatenate(
-            [flat_vals, extra.values.reshape(-1).astype(jnp.float32)])
+    flat_idx, flat_vals = _flatten_round_stream(streams, alive, weights,
+                                                extra)
     return _scatter_flat(flat_idx, flat_vals, nb * m, use_pallas)
+
+
+# ------------------------------------------- hierarchical (tree) decode (§13)
+def tree_splits(padded: int, n_groups: int) -> tuple[int, ...]:
+    """Near-even contiguous index-range boundaries for ``n_groups``
+    sub-aggregators over a ``padded``-element dense buffer.
+
+    Returns ``G + 1`` monotone boundaries ``(0, ..., padded)``; group ``g``
+    owns ``[splits[g], splits[g+1])``. ``n_groups`` is clamped to
+    ``[1, padded]`` (a group must own at least one position). Any monotone
+    boundary tuple is a valid partition for :func:`decode_sum_tree` — the
+    property suite exercises arbitrary uneven ones.
+    """
+    G = max(1, min(int(n_groups), int(padded)))
+    base, rem = divmod(int(padded), G)
+    bounds = [0]
+    for g in range(G):
+        bounds.append(bounds[-1] + base + (1 if g < rem else 0))
+    return tuple(bounds)
+
+
+def _scatter_range(flat_idx: jax.Array, flat_vals: jax.Array,
+                   lo: int, hi: int, use_pallas: bool) -> jax.Array:
+    """One sub-aggregator's partial: scatter the slots landing in
+    ``[lo, hi)`` of the padded buffer, in the round stream's slot order.
+
+    Out-of-range slots are redirected to a dump slot at position ``width``
+    (buffer ``width + 1``, sliced off on return) with value 0.0 — NOT zeroed
+    in place: an in-range position must never receive a redirected ``+0.0``
+    (``-0.0 + 0.0 == +0.0`` would flip the sign bit of a ``-0.0`` partial
+    and break bit-exactness with the flat scatter).
+    """
+    width = hi - lo
+    in_range = (flat_idx >= lo) & (flat_idx < hi)
+    local = jnp.where(in_range, flat_idx - lo, width)
+    vals = jnp.where(in_range, flat_vals, 0.0)
+    return _scatter_flat(local, vals, width + 1, use_pallas)[:width]
+
+
+def decode_sum_tree(
+    streams: StreamBatch,      # [C, nb, k_total] global indices/values
+    nb: int,
+    m: int,
+    *,
+    splits: Sequence[int],               # G + 1 boundaries (tree_splits)
+    alive: jax.Array | None = None,      # bool/f32[C] survivor gate
+    weights: jax.Array | None = None,    # f32[C] server-side weights
+    extra: StreamBatch | None = None,    # reconstruction streams, weight 1
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Hierarchical decode: G sub-aggregators each scatter-add the round
+    stream's slots landing in their contiguous index range of the dense
+    buffer; the inter-group combine is pure concatenation. Returns f32[nb*m].
+
+    Because each position of the buffer is owned by exactly one group and
+    every group folds its positions' contributions in the same slot order as
+    the flat decode, the result is **bit-exact** with
+    :func:`decode_sum_blocks` for *any* partition — the combine performs zero
+    floating-point additions (DESIGN.md §13; client-group dense partials
+    would re-associate f32 sums and drift). Mask cancellation needs no
+    protocol change: both endpoints of every pair mask target the same
+    positions, so their slots route to the same sub-aggregator and cancel
+    inside its partial.
+    """
+    if use_pallas is None:
+        use_pallas = jax.default_backend() == "tpu"
+    splits = tuple(int(s) for s in splits)
+    if len(splits) < 2 or splits[0] != 0 or splits[-1] != nb * m or \
+            any(b < a for a, b in zip(splits, splits[1:])):
+        raise ValueError(
+            f"splits must be monotone boundaries (0, ..., {nb * m}), "
+            f"got {splits}")
+    flat_idx, flat_vals = _flatten_round_stream(streams, alive, weights,
+                                                extra)
+    parts = [_scatter_range(flat_idx, flat_vals, lo, hi, use_pallas)
+             for lo, hi in zip(splits[:-1], splits[1:]) if hi > lo]
+    return jnp.concatenate(parts) if len(parts) > 1 else parts[0]
 
 
 def dropout_cancel_streams(
@@ -836,6 +927,43 @@ def decode_leaf_batch(
     return dense[:size]
 
 
+@functools.partial(
+    jax.jit,
+    static_argnames=("nb", "m", "size", "splits", "k_mask", "mask_p",
+                     "mask_q", "use_pallas"))
+def decode_leaf_tree(
+    streams: StreamBatch,
+    *,
+    nb: int,
+    m: int,
+    size: int,
+    splits: tuple,
+    alive: jax.Array | None = None,
+    weights: jax.Array | None = None,
+    pair_signs: jax.Array | None = None,
+    pair_seeds: jax.Array | None = None,
+    k_mask: int = 0,
+    mask_p: float = -1.0,
+    mask_q: float = 2.0,
+    leaf_id: int | jax.Array = 0,
+    use_pallas: bool | None = None,
+) -> jax.Array:
+    """Hierarchical twin of :func:`decode_leaf_batch`: identical arguments
+    plus the static ``splits`` boundary tuple (see :func:`tree_splits`), and
+    identical — bit-exact — output. Dropout recovery streams join the round
+    stream before range routing, so each sub-aggregator cancels the
+    reconstruction masks landing in its own index range (DESIGN.md §13)."""
+    extra = None
+    if alive is not None and pair_seeds is not None and k_mask > 0:
+        extra = dropout_cancel_streams_seeded(
+            pair_seeds, pair_signs, alive, nb, k_mask, m,
+            p=mask_p, q=mask_q, leaf_id=leaf_id)
+    dense = decode_sum_tree(
+        streams, nb, m, splits=splits, alive=alive, weights=weights,
+        extra=extra, use_pallas=use_pallas)
+    return dense[:size]
+
+
 # ----------------------------------------------------- the stream exchange
 def all_gather_round(tree, axis_name: str, *, tiled: bool = False,
                      replicate: bool = False):
@@ -917,7 +1045,8 @@ def can_shard_clients(mesh, n_clients: int) -> bool:
 def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
                           selector: str, sample_frac: float, k_mask: int,
                           mask_p: float, mask_q: float, with_dropout: bool,
-                          use_pallas, codec: str = "f32"):
+                          use_pallas, codec: str = "f32",
+                          splits: tuple = ()):
     """Build + cache the jitted shard_map program for one leaf signature.
 
     The cache key is the static signature (mesh + block layout + schedule
@@ -993,10 +1122,20 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
             extra = dropout_cancel_streams_seeded(
                 recovery_seeds, pair_signs, alive, nb, k_mask, m,
                 p=mask_p, q=mask_q, leaf_id=leaf_id)
-        dense = decode_sum_blocks(
-            StreamBatch(indices=g_idx, values=g_val), nb, m,
-            alive=alive if with_dropout else None, extra=extra,
-            use_pallas=use_pallas)  # with_dropout: survivor gate, masked or not
+        gathered = StreamBatch(indices=g_idx, values=g_val)
+        if splits:
+            # hierarchical decode over the gathered stream: replicated on
+            # fake CPU devices (like the flat scatter above), range-sharded
+            # on real hierarchies — bit-exact either way (§13)
+            dense = decode_sum_tree(
+                gathered, nb, m, splits=splits,
+                alive=alive if with_dropout else None, extra=extra,
+                use_pallas=use_pallas)
+        else:
+            dense = decode_sum_blocks(
+                gathered, nb, m,
+                alive=alive if with_dropout else None, extra=extra,
+                use_pallas=use_pallas)  # with_dropout: survivor gate
         new_res = jax.vmap(lambda b: from_blocks(b, size, leaf_shape))(
             new_acc).astype(residuals_l.dtype)
         return dense[:size], new_res
@@ -1031,6 +1170,8 @@ def encode_decode_leaf_sharded(
     weights: jax.Array | None = None,
     use_pallas: bool | None = None,
     codec: str = "f32",
+    topology: str = "flat",
+    tree_groups: int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Client-parallel encode + decode for one leaf, fused in one shard_map.
 
@@ -1069,10 +1210,16 @@ def encode_decode_leaf_sharded(
         recovery_seeds = pair_seeds
     if alive is None:
         alive = jnp.ones((C,), bool)
+    if topology not in ("flat", "tree"):
+        raise ValueError(f"unknown topology {topology!r}")
+    splits = ()
+    if topology == "tree":
+        splits = tree_splits(nb * m, tree_groups if tree_groups > 0
+                             else max(2, int(round(C ** 0.5))))
     fn = _sharded_leaf_program(
         mesh, int(k), int(nb), int(m), int(size), selector,
         float(sample_frac), int(k_mask), float(mask_p), float(mask_q),
-        bool(with_dropout), use_pallas, str(codec))
+        bool(with_dropout), use_pallas, str(codec), splits)
     return fn(updates, residuals, jnp.asarray(weights, jnp.float32),
               pair_seeds, pair_signs, recovery_seeds, alive,
               jnp.asarray(leaf_id))

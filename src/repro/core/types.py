@@ -148,6 +148,8 @@ class CommRecord:
     k_masks: tuple = ()          # per-leaf per-pair mask-support slots
     codec: str = "f32"           # stream value codec (core/codecs.py)
     leaf_sizes: tuple = ()       # per-leaf dense sizes (codec index widths)
+    staleness: tuple = ()        # per-report staleness taus (async rounds
+                                 # only — empty on synchronous rounds)
 
     @property
     def compression(self) -> float:

@@ -63,6 +63,16 @@ def clients_mesh_for(cohort_size: int):
     return make_clients_mesh(best)
 
 
+def default_tree_groups(cohort_size: int) -> int:
+    """Auto group count for the hierarchical aggregation tree (DESIGN.md
+    §13): ~sqrt(cohort) sub-aggregators balances per-group ingress
+    (O(n·k/G) stream slots) against the root combine (G partials), the
+    classic two-level fan-in. Always >= 2 so 'tree' actually builds a tree.
+    Must match the inline fallback in core/fedavg.run_round (core cannot
+    import launch)."""
+    return max(2, int(round(cohort_size ** 0.5)))
+
+
 def logical_rules(mesh, *, fsdp: bool = True, fed_axis: str | None = None) -> dict:
     """Map the model code's logical axis names onto this mesh's physical axes.
 

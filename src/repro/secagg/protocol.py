@@ -21,6 +21,14 @@ phases (Bonawitz et al. 2017, adapted to the paper's sparse masks):
    :class:`ThresholdError` — the round aborts, exactly the real protocol's
    failure mode.
 
+Hierarchical aggregation (DESIGN.md §13) needs **no change** to this
+protocol: the tree's sub-aggregators are index-range shards of the dense
+buffer, and pair masks cancel per-position — both endpoints of a pair mask
+target the same positions, so their contributions route to the same
+sub-aggregator and cancel inside its partial regardless of which clients the
+pair spans. Pair seeds stay all-pairs over the cohort; dropout recovery
+streams route by range exactly like client streams.
+
 Threat-model boundary (DESIGN.md §10): DH and Shamir arithmetic are real
 (modular exponentiation over GF(2^61-1); polynomial shares), their
 *parameters* are toy and their randomness is derived deterministically from

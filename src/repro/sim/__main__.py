@@ -18,7 +18,7 @@ import sys
 
 from repro.core.codecs import CODECS
 from repro.sim import presets
-from repro.sim.engine import Simulation
+from repro.sim.engine import AsyncSimulation, Simulation
 from repro.sim.ledger import mib
 
 
@@ -124,6 +124,12 @@ def main(argv=None) -> int:
                     help="stream wire codec (DESIGN.md §12); a non-f32 codec "
                          "on a secagg preset disables secure aggregation "
                          "loudly (masks cancel only on the f32 grid)")
+    ap.add_argument("--topology", choices=("flat", "tree"), default=None,
+                    help="aggregation topology (DESIGN.md §13); 'tree' is "
+                         "bit-exact with 'flat'")
+    ap.add_argument("--tree-groups", type=int, default=None,
+                    help="sub-aggregator count for --topology tree "
+                         "(0 = auto, ~sqrt cohort)")
     args = ap.parse_args(argv)
 
     if args.list or not args.preset:
@@ -161,6 +167,10 @@ def main(argv=None) -> int:
         over["out_json"] = args.out
     if args.shard_clients is not None:
         over["shard_clients"] = args.shard_clients
+    if args.topology is not None:
+        over["topology"] = args.topology
+    if args.tree_groups is not None:
+        over["tree_groups"] = args.tree_groups
     if args.codec is not None:
         over["codec"] = args.codec
         if args.codec != "f32" and cfg.sa.enabled:
@@ -175,12 +185,18 @@ def main(argv=None) -> int:
         over["eval_every"] = 1
     cfg = cfg.replace(**over)
 
-    sim = Simulation(cfg)
+    sim = (AsyncSimulation if cfg.mode == "async" else Simulation)(cfg)
     mesh_note = (f" clients_mesh={sim.mesh.devices.size}dev"
                  if sim.mesh is not None else "")
+    mode_note = (f" mode=async buffer={sim.buffer} "
+                 f"max_staleness={cfg.max_staleness}"
+                 if cfg.mode == "async" else "")
+    topo_note = (f" topology=tree groups={cfg.tree_groups or 'auto'}"
+                 if cfg.topology == "tree" else "")
     print(f"# preset={args.preset} model={cfg.model} dataset={cfg.dataset} "
           f"partition={cfg.partition} rounds={cfg.rounds} "
-          f"cohort={cfg.clients_per_round}/{cfg.n_clients}{mesh_note}",
+          f"cohort={cfg.clients_per_round}/{cfg.n_clients}"
+          f"{mesh_note}{mode_note}{topo_note}",
           flush=True)
     res = sim.run(resume=not args.no_resume, hooks=[_progress_hook])
 

@@ -18,6 +18,8 @@ PARTITIONS = ("iid", "noniid", "dirichlet")
 SAMPLERS = ("uniform", "weighted")
 ACCOUNTINGS = ("paper", "tpu")
 SHARD_CLIENTS = ("auto", "on", "off")
+TOPOLOGIES = ("flat", "tree")
+MODES = ("sync", "async")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -67,6 +69,28 @@ class SimConfig:
         'on' insists (raises without a usable mesh); 'off' disables.
         Sharded and serial rounds are bit-exact, so this is purely a
         throughput knob.
+    topology : {'flat', 'tree'}
+        Aggregation topology (DESIGN.md §13). 'tree' splits the decode over
+        ``tree_groups`` sub-aggregators, each owning a contiguous index range
+        of the dense buffer — bit-exact with 'flat' (another pure throughput
+        knob). Requires ``thgs``.
+    tree_groups : int
+        Sub-aggregator count for 'tree'; 0 picks ~sqrt(cohort)
+        (launch.mesh.default_tree_groups).
+    mode : {'sync', 'async'}
+        'async' runs FedBuff-style buffered updates (DESIGN.md §13): each
+        server step aggregates ``buffer_size`` reports trained on stale
+        parameter versions (simulated staleness drawn counter-based, at most
+        ``max_staleness`` steps old) with weights ``(1+tau)^-0.5``. Requires
+        ``thgs``; rejects ``sa.enabled`` (masks are agreed
+        round-synchronously) and ``dropout_rate > 0`` (a buffer only ever
+        holds arrived reports).
+    buffer_size : int
+        Async buffer size B (reports per server update); 0 uses
+        ``clients_per_round``.
+    max_staleness : int
+        Upper bound on simulated staleness (also clamped by the number of
+        parameter versions that exist yet).
     ckpt_dir : str, optional
         Directory for checkpoint/resume through ``checkpoint.store``;
         ``None`` disables checkpointing.
@@ -113,6 +137,13 @@ class SimConfig:
     # the single-device vmap path; 'on' requires a usable clients mesh and
     # raises when none exists (tests/CI use it to prove the path ran)
     shard_clients: str = "auto"
+    # aggregation topology (DESIGN.md §13): 'tree' is bit-exact with 'flat'
+    topology: str = "flat"
+    tree_groups: int = 0       # 0 = auto (~sqrt cohort)
+    # async (FedBuff-style) buffered updates (DESIGN.md §13)
+    mode: str = "sync"
+    buffer_size: int = 0       # 0 = clients_per_round
+    max_staleness: int = 4
     # accounting + I/O
     accounting: str = "paper"
     ckpt_dir: Optional[str] = None
@@ -170,6 +201,49 @@ class SimConfig:
                 "aggregation: sparse pair masks cancel bit-exactly only on "
                 "the f32 grid (DESIGN.md §12); set sa.enabled=False or run "
                 "codec='f32' until integer-grid masked quantization lands")
+        if self.topology not in TOPOLOGIES:
+            raise ValueError(f"topology must be one of {TOPOLOGIES}, "
+                             f"got {self.topology!r}")
+        if self.topology == "tree" and self.thgs is None:
+            raise ValueError(
+                "topology='tree' requires THGS sparse streams (dense rounds "
+                "have no stream decode to shard across sub-aggregators)")
+        if self.tree_groups < 0:
+            raise ValueError(f"tree_groups must be >= 0 (0 = auto), "
+                             f"got {self.tree_groups}")
+        if self.mode not in MODES:
+            raise ValueError(f"mode must be one of {MODES}, "
+                             f"got {self.mode!r}")
+        if self.mode == "async":
+            if self.thgs is None:
+                raise ValueError(
+                    "mode='async' requires THGS sparse streams (the async "
+                    "path exercises the sparse-stream data plane)")
+            if self.sa.enabled:
+                raise ValueError(
+                    "mode='async' cannot run secure aggregation: pair masks "
+                    "are agreed round-synchronously among a known cohort, "
+                    "which a streaming buffer breaks (DESIGN.md §13)")
+            if self.dropout_rate > 0:
+                raise ValueError(
+                    "mode='async' has no dropout: a buffer only ever holds "
+                    "reports that arrived (set dropout_rate=0)")
+            B = self.buffer_size or self.clients_per_round
+            if not (1 <= B <= self.n_clients):
+                raise ValueError(
+                    f"need 1 <= buffer_size <= n_clients, got {B} vs "
+                    f"{self.n_clients}")
+            if self.max_staleness < 0:
+                raise ValueError(
+                    f"max_staleness must be >= 0, got {self.max_staleness}")
+            if self.shard_clients == "on":
+                raise ValueError(
+                    "mode='async' runs the serial update path; "
+                    "shard_clients='on' cannot be honoured (use 'auto' or "
+                    "'off')")
+        elif self.buffer_size:
+            raise ValueError("buffer_size is only meaningful with "
+                             "mode='async'")
         if self.thgs is not None:
             self.thgs.validate()
 

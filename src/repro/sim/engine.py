@@ -39,7 +39,8 @@ import numpy as np
 
 from repro import checkpoint
 from repro.core import costs
-from repro.core.fedavg import FederatedState, init_state, run_round
+from repro.core.fedavg import (FederatedState, init_state, run_async_update,
+                               run_round)
 from repro.data import (client_batches, dirichlet, iid, make_dataset,
                         noniid_label_k)
 from repro.data.datasets import SPECS
@@ -121,8 +122,15 @@ class Simulation:
     picks up from the latest checkpoint in ``cfg.ckpt_dir`` when one exists.
     """
 
+    sim_mode = "sync"   # the cfg.mode this class implements (see simulate())
+
     def __init__(self, cfg: SimConfig):
         cfg.validate()
+        if cfg.mode != self.sim_mode:
+            raise ValueError(
+                f"{type(self).__name__} runs mode={self.sim_mode!r} but the "
+                f"config asks for mode={cfg.mode!r}; use simulate() (or "
+                "AsyncSimulation directly) for async configs")
         self.cfg = cfg
         self.model = PAPER_MODELS[cfg.model]
         spec = SPECS[cfg.dataset]
@@ -195,11 +203,24 @@ class Simulation:
     def _sidecar_path(self, step: int) -> str:
         return os.path.join(self.cfg.ckpt_dir, f"sim_{step:08d}.json")
 
+    # the four hooks AsyncSimulation extends to persist its parameter-version
+    # ring alongside params/residuals
+    def _ckpt_tree(self, state: FederatedState) -> dict:
+        return {"params": state.params, "residuals": state.residuals}
+
+    def _ckpt_like(self, state: FederatedState, meta: dict) -> dict:
+        return {"params": state.params, "residuals": state.residuals}
+
+    def _load_ckpt_tree(self, state: FederatedState, tree: dict) -> None:
+        state.params = tree["params"]
+        state.residuals = tree["residuals"]
+
+    def _sidecar_extra(self) -> dict:
+        return {}
+
     def _save_ckpt(self, round_done: int, state: FederatedState,
                    accs: list, losses: list) -> None:
-        checkpoint.save(self.cfg.ckpt_dir, round_done,
-                        {"params": state.params,
-                         "residuals": state.residuals})
+        checkpoint.save(self.cfg.ckpt_dir, round_done, self._ckpt_tree(state))
         sidecar = {
             "round": round_done,
             "client_losses": {str(c): float(v)
@@ -208,6 +229,7 @@ class Simulation:
             "losses": [float(x) for x in losses],
             "ledger_entries": self.ledger.summary()["entries"],
         }
+        sidecar.update(self._sidecar_extra())
         with open(self._sidecar_path(round_done), "w") as f:
             json.dump(sidecar, f)
 
@@ -230,14 +252,11 @@ class Simulation:
             raise ValueError(
                 f"checkpoint at round {step} > rounds={cfg.rounds}; "
                 "refusing to resume past the configured horizon")
-        side = self._sidecar_path(step)
-        tree = checkpoint.restore(
-            cfg.ckpt_dir, step,
-            like={"params": state.params, "residuals": state.residuals})
-        state.params = tree["params"]
-        state.residuals = tree["residuals"]
-        with open(side) as f:
+        with open(self._sidecar_path(step)) as f:
             meta = json.load(f)
+        tree = checkpoint.restore(
+            cfg.ckpt_dir, step, like=self._ckpt_like(state, meta))
+        self._load_ckpt_tree(state, tree)
         state.losses = {int(c): float(v)
                         for c, v in meta["client_losses"].items()}
         state.round = step
@@ -272,7 +291,8 @@ class Simulation:
                 state, batches, self.loss_fn, self.fed,
                 cfg.thgs, cfg.sa, bits=self.bits,
                 client_weights=self.client_weights, dropped=dropped,
-                mesh=self.mesh, codec=cfg.codec)
+                mesh=self.mesh, codec=cfg.codec,
+                topology=cfg.topology, tree_groups=cfg.tree_groups)
             rec = state.comm_log[-1]
             self.ledger.record(rec)
             loss = float(np.mean([state.losses[c] for c in batches]))
@@ -301,6 +321,126 @@ class Simulation:
         )
 
 
+class AsyncSimulation(Simulation):
+    """FedBuff-style async simulation (DESIGN.md §13).
+
+    Each server step ``t`` drains a buffer of ``B = cfg.buffer_size or
+    cfg.clients_per_round`` *distinct* client reports. Report ``c`` trained
+    from the parameter version ``tau_c`` server steps old, where the
+    simulated staleness ``tau_c`` is drawn counter-based from
+    ``(seed, 0xA5, t)`` — like the cohort sampler's draws, a pure function of
+    the round index, which is what makes checkpoint/resume replay
+    bit-identically (tests/test_async_sim.py). The server keeps a ring of
+    the last ``max_staleness + 1`` parameter versions and applies the
+    ``(1 + tau)^-0.5``-weighted aggregate through
+    ``core.fedavg.run_async_update``; each update's taus land on the ledger
+    entry as the ``staleness`` fact.
+    """
+
+    sim_mode = "async"
+    _STALENESS_TAG = 0xA5
+
+    def __init__(self, cfg: SimConfig):
+        super().__init__(cfg)
+        self.buffer = cfg.buffer_size or cfg.clients_per_round
+        # B distinct reports per buffer: duplicate clients would clobber the
+        # error-feedback residual write-back, so the buffer is sampled like a
+        # cohort (without replacement); dropout is rejected by validate()
+        self.sampler = ClientSampler(
+            cfg.n_clients, self.buffer, mode=cfg.sampler,
+            weights=self.data_counts if cfg.sampler == "weighted" else None,
+            dropout_rate=0.0, seed=cfg.seed)
+        self.mesh = None          # async runs the serial update path
+        self.versions: list = []  # parameter ring, newest last
+
+    def _staleness_for(self, round_t: int) -> list[int]:
+        """Counter-based per-report staleness draws for server step
+        ``round_t``: uniform over [0, min(t, ring, max_staleness)] — early
+        steps cannot be staler than the number of versions that exist."""
+        hi = min(round_t, len(self.versions) - 1, self.cfg.max_staleness)
+        rng = np.random.default_rng(
+            [self.cfg.seed, self._STALENESS_TAG, round_t])
+        return [int(t) for t in rng.integers(0, hi + 1, size=self.buffer)]
+
+    # ------------------------------------------------- checkpoint ring hooks
+    def _ckpt_tree(self, state: FederatedState) -> dict:
+        d = super()._ckpt_tree(state)
+        d["ring"] = {str(i): v for i, v in enumerate(self.versions)}
+        return d
+
+    def _ckpt_like(self, state: FederatedState, meta: dict) -> dict:
+        like = super()._ckpt_like(state, meta)
+        like["ring"] = {str(i): state.params
+                        for i in range(int(meta["ring_len"]))}
+        return like
+
+    def _load_ckpt_tree(self, state: FederatedState, tree: dict) -> None:
+        super()._load_ckpt_tree(state, tree)
+        ring = tree["ring"]
+        self.versions = [ring[str(i)] for i in range(len(ring))]
+
+    def _sidecar_extra(self) -> dict:
+        return {"ring_len": len(self.versions)}
+
+    # ------------------------------------------------------------------- run
+    def run(self, *, resume: bool = True,
+            hooks: Sequence[RoundHook] = ()) -> SimResult:
+        cfg = self.cfg
+        self.ledger = CommLedger()
+        state = self._fresh_state()
+        self.versions = [state.params]
+        accs: list = []
+        losses: list = []
+        start = self._try_resume(state, accs, losses) if resume else 0
+        t0 = time.time()
+        for r in range(start, cfg.rounds):
+            cohort = self.sampler.cohort_for(r)
+            assert len(cohort) == self.buffer, (
+                "fixed-buffer contract violated: "
+                f"{len(cohort)} != {self.buffer}")
+            taus = self._staleness_for(r)
+            batches = self._batches_for(r, cohort)
+            client_params = {int(c): self.versions[-1 - tau]
+                             for c, tau in zip(cohort, taus)}
+            state = run_async_update(
+                state, batches, client_params, self.loss_fn, self.fed,
+                cfg.thgs, bits=self.bits,
+                staleness={int(c): tau for c, tau in zip(cohort, taus)},
+                client_weights=self.client_weights, codec=cfg.codec,
+                topology=cfg.topology, tree_groups=cfg.tree_groups)
+            self.versions.append(state.params)
+            if len(self.versions) > cfg.max_staleness + 1:
+                self.versions = self.versions[-(cfg.max_staleness + 1):]
+            rec = state.comm_log[-1]
+            self.ledger.record(rec)
+            loss = float(np.mean([state.losses[c] for c in batches]))
+            losses.append(loss)
+            info = {"state": state, "cohort": cohort, "dropped": (),
+                    "staleness": taus, "loss": loss, "record": rec}
+            if (r + 1) % max(1, cfg.eval_every) == 0:
+                acc = accuracy(self.model, state.params, self.xt, self.yt)
+                accs.append(acc)
+                info["acc"] = acc
+            if (cfg.ckpt_dir and cfg.ckpt_every
+                    and (r + 1) % cfg.ckpt_every == 0):
+                self._save_ckpt(r + 1, state, accs, losses)
+            for hook in hooks:
+                hook(r, info)
+        self.state = state
+        return SimResult(
+            name=cfg.name,
+            rounds=cfg.rounds,
+            eval_every=cfg.eval_every,
+            accuracies=accs,
+            losses=losses,
+            wall_s=time.time() - t0,
+            ledger=self.ledger,
+            config=cfg.to_dict(),
+        )
+
+
 def simulate(cfg: SimConfig, **run_kw) -> SimResult:
-    """One-call convenience: build the Simulation and run it."""
-    return Simulation(cfg).run(**run_kw)
+    """One-call convenience: build the right Simulation for ``cfg.mode``
+    ('sync' -> Simulation, 'async' -> AsyncSimulation) and run it."""
+    cls = AsyncSimulation if cfg.mode == "async" else Simulation
+    return cls(cfg).run(**run_kw)

@@ -51,6 +51,8 @@ class LedgerEntry:
     threshold: int = 0
     codec: str = "f32"      # stream wire codec (core/codecs.py, DESIGN.md §12)
     leaf_sizes: tuple = ()  # per-leaf dense sizes (codec index widths)
+    staleness: tuple = ()   # per-report taus of an async update (§13);
+                            # empty on synchronous rounds
 
     @property
     def sparse(self) -> bool:
@@ -109,7 +111,9 @@ class LedgerEntry:
                    ks=tuple(rec.ks), k_masks=tuple(rec.k_masks),
                    threshold=int(rec.threshold),
                    codec=str(getattr(rec, "codec", "f32")),
-                   leaf_sizes=tuple(getattr(rec, "leaf_sizes", ())))
+                   leaf_sizes=tuple(getattr(rec, "leaf_sizes", ())),
+                   staleness=tuple(
+                       int(t) for t in getattr(rec, "staleness", ())))
 
 
 class CommLedger:
@@ -243,5 +247,7 @@ class CommLedger:
                                 threshold=int(d.get("threshold", 0)),
                                 codec=str(d.get("codec", "f32")),
                                 leaf_sizes=tuple(
-                                    int(s) for s in d.get("leaf_sizes", ())))
+                                    int(s) for s in d.get("leaf_sizes", ())),
+                                staleness=tuple(
+                                    int(t) for t in d.get("staleness", ())))
                     for d in dicts])

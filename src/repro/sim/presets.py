@@ -69,6 +69,26 @@ PRESETS: dict[str, SimConfig] = {
         eval_every=2, thgs=_THGS, sa=_SA, sampler="weighted",
         weight_by_data_count=True, dropout_rate=0.2,
         out_json="experiments/sim/dropout_quick.json"),
+    # FedBuff-style async smoke (DESIGN.md §13): buffered staleness-weighted
+    # updates, counter-based staleness draws, bit-identical resume — the CI
+    # runs this with --quick and asserts the staleness facts on the ledger
+    "async_quick": SimConfig(
+        name="async_quick", partition="noniid", noniid_k=4, n_clients=12,
+        clients_per_round=4, rounds=8, n_train=1200, n_test=400,
+        eval_every=2, local_steps=3, local_batch=32, thgs=_THGS,
+        sa=SecureAggConfig(enabled=False), mode="async", buffer_size=4,
+        max_staleness=3, seed=5,
+        out_json="experiments/sim/async_quick.json"),
+    # hierarchical-topology smoke: the tree decode is bit-exact with flat
+    # (tests/test_hierarchical_round.py), this preset keeps it on a
+    # multi-round secagg+dropout path
+    "tree_quick": SimConfig(
+        name="tree_quick", partition="noniid", noniid_k=4, n_clients=12,
+        clients_per_round=6, rounds=8, n_train=1200, n_test=400,
+        eval_every=2, local_steps=3, local_batch=32, thgs=_THGS,
+        sa=SecureAggConfig(mask_ratio=0.01, threshold=0.6),
+        dropout_rate=0.25, seed=11, topology="tree", tree_groups=3,
+        out_json="experiments/sim/tree_quick.json"),
     # tiny smoke config for tests/CI plumbing checks (~seconds)
     "ci_smoke": SimConfig(
         name="ci_smoke", partition="noniid", noniid_k=4, n_clients=6,

@@ -1,0 +1,235 @@
+"""FedBuff-style async mode (DESIGN.md §13): buffered staleness-weighted
+updates, counter-based simulated staleness, and bit-identical
+checkpoint/resume of the parameter-version ring."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.fedavg import (init_state, run_async_update, run_round,
+                               staleness_weight)
+from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+from repro.sim import AsyncSimulation, SimConfig, Simulation, presets
+from repro.sim.engine import simulate
+
+THGS = THGSConfig(s0=0.2, alpha=0.9, s_min=0.05, time_varying=False)
+
+_ASYNC = SimConfig(
+    name="async_tiny", partition="noniid", noniid_k=4, n_clients=6,
+    clients_per_round=3, rounds=5, n_train=300, n_test=120,
+    local_steps=2, local_batch=8, eval_every=1, thgs=THGS,
+    sa=SecureAggConfig(enabled=False), mode="async", buffer_size=3,
+    max_staleness=2, seed=9)
+
+
+# ---------------------------------------------------------- update semantics
+def _setup(C=4, steps=2, batch=8):
+    from repro.models.paper_models import PAPER_MODELS, cross_entropy_loss
+
+    model = PAPER_MODELS["mnist_mlp"]
+    loss_fn = cross_entropy_loss(model)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(1)
+    x = jax.random.normal(key, (C, steps, batch, 784))
+    y = jax.random.randint(key, (C, steps, batch), 0, 10)
+    batches = {c: (x[c], y[c]) for c in range(C)}
+    fed = FedConfig(n_clients=C, clients_per_round=C, local_steps=steps,
+                    local_batch=batch, local_lr=0.05, rounds=10)
+    return loss_fn, params, batches, fed
+
+
+def _trees_equal(a, b):
+    return all(bool(jnp.all(x == y))
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+def test_staleness_weight_values():
+    assert staleness_weight(0) == 1.0
+    assert staleness_weight(3) == pytest.approx(0.5)
+    ws = [staleness_weight(t) for t in range(6)]
+    assert ws == sorted(ws, reverse=True) and all(w > 0 for w in ws)
+
+
+def test_all_fresh_buffer_is_the_sync_round():
+    """tau == 0 everywhere -> run_async_update IS run_round, bit for bit:
+    params, residuals and losses identical (the async path only adds the
+    staleness machinery, never a different code path for weight 1)."""
+    loss_fn, params, batches, fed = _setup()
+    weights = {c: float(c + 1) for c in batches}
+    sa_off = SecureAggConfig(enabled=False)
+
+    s_sync = run_round(init_state(params, fed), batches, loss_fn, fed,
+                       THGS, sa_off, client_weights=weights)
+    s_async = run_async_update(
+        init_state(params, fed), batches,
+        {c: params for c in batches}, loss_fn, fed, THGS,
+        client_weights=weights)
+    assert _trees_equal(s_sync.params, s_async.params)
+    for c in batches:
+        assert _trees_equal(s_sync.residuals[c], s_async.residuals[c])
+    assert s_sync.losses == s_async.losses
+    # the records agree on every shared fact; async additionally logs taus
+    r_s, r_a = s_sync.comm_log[-1], s_async.comm_log[-1]
+    assert (r_s.ks, r_s.model_size, r_s.n_clients) == (
+        r_a.ks, r_a.model_size, r_a.n_clients)
+    assert r_a.staleness == (0,) * len(batches)
+    assert r_s.staleness == ()
+
+
+def test_staleness_is_exactly_a_multiplicative_weight():
+    """A report at staleness tau aggregates identically to a fresh report
+    whose client weight was pre-multiplied by (1 + tau)^-0.5 — staleness
+    enters the data plane through the weight vector and nowhere else."""
+    loss_fn, params, batches, fed = _setup()
+    # give the 'stale' clients genuinely stale params so the deltas differ
+    older = jax.tree_util.tree_map(lambda x: x * 0.9, params)
+    client_params = {0: params, 1: older, 2: older, 3: params}
+    taus = {0: 0, 1: 2, 2: 1, 3: 0}
+    base_w = {c: float(c + 1) for c in batches}
+
+    s_tau = run_async_update(
+        init_state(params, fed), batches, client_params, loss_fn, fed, THGS,
+        staleness=taus, client_weights=base_w)
+    folded = {c: base_w[c] * staleness_weight(taus[c]) for c in batches}
+    s_folded = run_async_update(
+        init_state(params, fed), batches, client_params, loss_fn, fed, THGS,
+        client_weights=folded)
+    assert _trees_equal(s_tau.params, s_folded.params)
+    for c in batches:
+        assert _trees_equal(s_tau.residuals[c], s_folded.residuals[c])
+    assert s_tau.comm_log[-1].staleness == (0, 2, 1, 0)  # sorted participants
+
+
+def test_async_update_tree_topology_matches_flat():
+    loss_fn, params, batches, fed = _setup()
+    older = jax.tree_util.tree_map(lambda x: x * 0.95, params)
+    client_params = {c: (older if c % 2 else params) for c in batches}
+    taus = {c: c % 3 for c in batches}
+    s_flat = run_async_update(init_state(params, fed), batches, client_params,
+                              loss_fn, fed, THGS, staleness=taus)
+    s_tree = run_async_update(init_state(params, fed), batches, client_params,
+                              loss_fn, fed, THGS, staleness=taus,
+                              topology="tree", tree_groups=3)
+    assert _trees_equal(s_flat.params, s_tree.params)
+    assert s_flat.comm_log[-1] == s_tree.comm_log[-1]
+
+
+def test_async_update_rejections():
+    loss_fn, params, batches, fed = _setup(C=2)
+    with pytest.raises(ValueError, match="requires THGS"):
+        run_async_update(init_state(params, fed), batches,
+                         {c: params for c in batches}, loss_fn, fed, None)
+    with pytest.raises(ValueError, match="unknown topology"):
+        run_async_update(init_state(params, fed), batches,
+                         {c: params for c in batches}, loss_fn, fed, THGS,
+                         topology="star")
+
+
+# ------------------------------------------------------------------- engine
+def test_async_engine_staleness_facts_are_counter_based():
+    """Every ledger entry's staleness taus replay from the documented
+    counter-based draw (seed, 0xA5, t) with hi = min(t, ring-1, max) — a
+    pure function of the round index, independent of execution history."""
+    cfg = _ASYNC
+    res = AsyncSimulation(cfg).run()
+    assert len(res.ledger) == cfg.rounds
+    for t, e in enumerate(res.ledger.entries):
+        hi = min(t, cfg.max_staleness)   # ring has min(t+1, max+1) versions
+        rng = np.random.default_rng([cfg.seed, 0xA5, t])
+        expect = tuple(int(x) for x in
+                       rng.integers(0, hi + 1, size=cfg.buffer_size))
+        assert e.staleness == expect
+        assert all(0 <= tau <= hi for tau in e.staleness)
+        assert e.n_clients == e.n_survivors == cfg.buffer_size
+    # round 0 has no older version to be stale against
+    assert res.ledger.entries[0].staleness == (0,) * cfg.buffer_size
+    # with max_staleness=2 and 5 rounds some report is actually stale
+    assert any(tau > 0 for e in res.ledger.entries for tau in e.staleness)
+
+
+def test_async_engine_checkpoint_resume_bit_identical(tmp_path):
+    """Interrupt mid-run, resume from the checkpointed parameter-version
+    ring: ledger entries (incl. staleness facts) and final params are
+    bit-identical with the uninterrupted run."""
+    ck = str(tmp_path / "ck")
+    cfg = _ASYNC.replace(ckpt_dir=ck, ckpt_every=1)
+
+    class _Killed(Exception):
+        pass
+
+    def die_after_round_1(r, info):
+        if r == 1:
+            raise _Killed
+
+    with pytest.raises(_Killed):
+        AsyncSimulation(cfg).run(hooks=[die_after_round_1])
+    resumed_sim = AsyncSimulation(cfg)
+    resumed = resumed_sim.run()
+    full_sim = AsyncSimulation(_ASYNC)
+    full = full_sim.run()
+    assert resumed.ledger.entries == full.ledger.entries
+    assert [e.staleness for e in resumed.ledger.entries] == [
+        e.staleness for e in full.ledger.entries]
+    assert _trees_equal(resumed_sim.state.params, full_sim.state.params)
+    for v_r, v_f in zip(resumed_sim.versions, full_sim.versions):
+        assert _trees_equal(v_r, v_f)
+    np.testing.assert_array_equal(resumed.losses, full.losses)
+    np.testing.assert_array_equal(resumed.accuracies, full.accuracies)
+
+
+def test_async_engine_ledger_json_carries_staleness(tmp_path):
+    import json
+
+    res = AsyncSimulation(_ASYNC.replace(rounds=3)).run()
+    path = res.to_json(str(tmp_path / "ledger.json"))
+    data = json.loads(open(path).read())
+    entries = data["ledger"]["entries"]
+    assert len(entries) == 3
+    assert all(len(e["staleness"]) == _ASYNC.buffer_size for e in entries)
+    assert data["ledger"]["paper"]["upload_bits"] > 0
+    # round-trip: from_entry_dicts restores the staleness fact (resume path)
+    from repro.sim.ledger import CommLedger
+
+    led = CommLedger.from_entry_dicts(entries)
+    assert [e.staleness for e in led.entries] == [
+        tuple(e["staleness"]) for e in entries]
+
+
+# ------------------------------------------------------- config + routing
+def test_simulate_routes_by_mode():
+    r = simulate(_ASYNC.replace(rounds=2))
+    assert len(r.ledger) == 2 and r.ledger.entries[0].staleness
+    with pytest.raises(ValueError, match="mode='async'"):
+        Simulation(_ASYNC)
+    with pytest.raises(ValueError, match="mode='sync'"):
+        AsyncSimulation(_ASYNC.replace(mode="sync", buffer_size=0))
+
+
+def test_async_config_validation():
+    with pytest.raises(ValueError, match="requires THGS"):
+        _ASYNC.replace(thgs=None, codec="f32").validate()
+    with pytest.raises(ValueError, match="secure aggregation"):
+        _ASYNC.replace(sa=SecureAggConfig(mask_ratio=0.05)).validate()
+    with pytest.raises(ValueError, match="no dropout"):
+        _ASYNC.replace(dropout_rate=0.2).validate()
+    with pytest.raises(ValueError, match="buffer_size"):
+        _ASYNC.replace(buffer_size=100).validate()
+    with pytest.raises(ValueError, match="max_staleness"):
+        _ASYNC.replace(max_staleness=-1).validate()
+    with pytest.raises(ValueError, match="serial update path"):
+        _ASYNC.replace(shard_clients="on").validate()
+    with pytest.raises(ValueError, match="only meaningful"):
+        _ASYNC.replace(mode="sync").validate()   # buffer_size=3 left set
+    with pytest.raises(ValueError, match="topology"):
+        _ASYNC.replace(topology="ring").validate()
+    _ASYNC.validate()                            # the base config is legal
+
+
+def test_async_preset_runs():
+    cfg = presets.get("async_quick")
+    cfg.validate()
+    assert cfg.mode == "async" and cfg.thgs is not None
+    cfg = presets.get("tree_quick")
+    cfg.validate()
+    assert cfg.topology == "tree"

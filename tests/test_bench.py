@@ -73,7 +73,8 @@ def test_gate_unmatched_names_do_not_compare():
     assert failures == [] and compared == 0
 
 
-@pytest.mark.parametrize("name", ["BENCH_round.json", "BENCH_agg.json"])
+@pytest.mark.parametrize("name", ["BENCH_round.json", "BENCH_agg.json",
+                                  "BENCH_cohort.json"])
 def test_committed_baselines_are_valid(name):
     """The perf-trajectory baselines at the repo root stay schema-valid."""
     path = os.path.join(ROOT, name)
@@ -110,3 +111,36 @@ def test_run_suite_unknown_raises():
 
     with pytest.raises(KeyError):
         run_suite("nope")
+
+
+def test_measure_returns_min_of_reps(monkeypatch):
+    """timing.measure is min-of-single-rep wall clock: a scripted clock with
+    one slow rep must not move the result (the flake the 3x gate kept
+    tripping on before min-of-reps)."""
+    from repro.bench import timing
+
+    # perf_counter pairs per timed rep -> durations 100us, 10us, 50us; the
+    # warmup call takes no clock readings (time_us(warmup=0) reads 2/rep)
+    ticks = iter([0.0, 100e-6, 1.0, 1.0 + 10e-6, 2.0, 2.0 + 50e-6])
+    monkeypatch.setattr(timing.time, "perf_counter", lambda: next(ticks))
+    calls = []
+    us = timing.measure(lambda: calls.append(1), reps=3, warmup=1)
+    assert us == pytest.approx(10.0)
+    assert len(calls) == 4  # 1 warmup + 3 timed reps
+
+
+def test_all_json_suites_time_with_min_of_reps():
+    """Every BENCH suite must time through timing.measure (min-of-reps) —
+    mean-of-reps entries trip the CI gate on a single scheduler stall
+    (ISSUE 7 satellite; PR 6 hit this on the agg micro-entries)."""
+    import importlib
+    import inspect
+
+    from repro.bench import JSON_SUITES
+
+    for name, (mod_name, _) in JSON_SUITES.items():
+        src = inspect.getsource(importlib.import_module(mod_name))
+        assert "measure(" in src, f"suite {name} does not use timing.measure"
+        assert "time_us(" not in src, (
+            f"suite {name} still times with mean-of-reps time_us; "
+            "use timing.measure")

@@ -151,6 +151,65 @@ def test_sharded_round_parity_inprocess():
         assert s_ser.comm_log[-1] == s_sh.comm_log[-1]
 
 
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device process (CI runs this file "
+                           "under XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+def test_sharded_tree_round_parity_inprocess():
+    """Hierarchical topology over a sharded cohort: serial-flat ==
+    serial-tree == sharded-tree, bit for bit, including a dropout-recovery
+    round (DESIGN.md §13 — after the all_gather every device folds the
+    identical range-partitioned slot sequence)."""
+    import jax.numpy as jnp
+
+    from repro.core import fedavg
+    from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
+    from repro.launch.mesh import clients_mesh_for
+
+    C, steps, batch = 4, 2, 8
+    mesh = clients_mesh_for(C)
+    assert mesh is not None
+
+    from repro.models.paper_models import PAPER_MODELS, cross_entropy_loss
+
+    model = PAPER_MODELS["mnist_mlp"]
+    loss_fn = cross_entropy_loss(model)
+    params = model.init(jax.random.key(0))
+    key = jax.random.key(2)
+    x = jax.random.normal(key, (C, steps, batch, 784))
+    y = jax.random.randint(key, (C, steps, batch), 0, 10)
+    batches = {c: (x[c], y[c]) for c in range(C)}
+    fed = FedConfig(n_clients=C, clients_per_round=C, local_steps=steps,
+                    local_batch=batch, local_lr=0.05, rounds=10)
+    thgs = THGSConfig(s0=0.05, alpha=0.9, s_min=0.01)
+    sa = SecureAggConfig(mask_ratio=0.02, seed=5)
+    weights = {c: float(c + 1) for c in range(C)}
+
+    def one_round(mesh_arg, topology, dropped):
+        state = fedavg.init_state(params, fed)
+        return fedavg.run_round(state, batches, loss_fn, fed, thgs, sa,
+                                client_weights=weights, dropped=dropped,
+                                mesh=mesh_arg, topology=topology,
+                                tree_groups=3)
+
+    for dropped in ((), (1,)):
+        s_flat = one_round(None, "flat", dropped)
+        s_tree = one_round(None, "tree", dropped)
+        s_shard = one_round(mesh, "tree", dropped)
+        for variant, s in (("serial-tree", s_tree), ("sharded-tree", s_shard)):
+            for a, b in zip(jax.tree_util.tree_leaves(s_flat.params),
+                            jax.tree_util.tree_leaves(s.params)):
+                assert bool(jnp.all(a == b)), (
+                    f"params diverge: {variant} (dropped={dropped})")
+            for c in range(C):
+                for a, b in zip(
+                        jax.tree_util.tree_leaves(s_flat.residuals[c]),
+                        jax.tree_util.tree_leaves(s.residuals[c])):
+                    assert bool(jnp.all(a == b)), (
+                        f"residuals diverge: {variant} c={c}")
+            assert s_flat.comm_log[-1] == s.comm_log[-1]
+
+
 def test_can_shard_clients_gates():
     """The fallback predicate: 1 device / indivisible cohorts refuse."""
     from repro.core import streams as se
