@@ -19,7 +19,6 @@ from __future__ import annotations
 
 import glob
 import json
-import math
 import os
 
 from repro import configs

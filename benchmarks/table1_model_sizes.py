@@ -19,10 +19,10 @@ TABLE1_VOLUMES = {"mnist_mlp": "1.2M", "mnist_cnn": "4.44M",
 def run(quick: bool = False):
     rows = []
     for name, model in PAPER_MODELS.items():
-        t0 = time.time()
+        t0 = time.perf_counter()
         p = jax.eval_shape(model.init, jax.random.key(0))
         n = sum(x.size for x in jax.tree_util.tree_leaves(p))
-        us = (time.time() - t0) * 1e6
+        us = (time.perf_counter() - t0) * 1e6
         dense_mb = mib(costs.PAPER_BITS.dense_bits(n))
         tpu_mb = mib(costs.TPU_BITS.dense_bits(n))
         ok = n == TABLE1_PARAMS[name]

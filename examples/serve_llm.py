@@ -34,9 +34,9 @@ def main():
     prompts = jnp.asarray(prompts)
 
     cache_len = args.prompt_len + args.n_new + 8
-    t0 = time.time()
+    t0 = time.perf_counter()
     out = greedy_generate(params, cfg, prompts, args.n_new, cache_len)
-    dt = time.time() - t0
+    dt = time.perf_counter() - t0
     print(f"arch={cfg.name} (reduced)  batch={args.batch} "
           f"prompt={args.prompt_len} new={args.n_new}")
     for i in range(args.batch):

@@ -70,7 +70,8 @@ def make_doc(entries: list[dict], *, suite: str | None = None,
     doc = {
         "schema": SCHEMA_VERSION,
         "quick": bool(quick),
-        "created_unix": time.time(),
+        # intentional epoch stamp (doc metadata, not a timed duration)
+        "created_unix": time.time(),  # repro-lint: disable=RPL001
         "env": env_info(),
     }
     if suite is not None:

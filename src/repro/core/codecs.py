@@ -57,6 +57,24 @@ def wire_bits(k: int, size: int, codec: str) -> int:
             + SCALE_BITS)
 
 
+def reject_codec_with_masks(codec: str, k_mask: int | bool) -> None:
+    """THE codec x secure-aggregation guard (repro.lint RPL003 pins it).
+
+    Every public entry point that accepts both a ``codec`` and a
+    secure-aggregation parameter (``sa``/``k_mask``/``pair_seeds``/...)
+    must route the combination through this one function — scattered
+    hand-rolled rejections drift apart. ``k_mask`` is truthy when masks are
+    in play (a slot count or an enabled flag); quantized codecs leave the
+    f32 2^-24 grid that the pair masks cancel on, so the pair is rejected.
+    """
+    if codec != "f32" and k_mask:
+        raise ValueError(
+            f"codec {codec!r} cannot run under sparse-mask secure "
+            "aggregation: pair masks cancel bit-exactly only on the f32 "
+            "2^-24 grid (DESIGN.md §12); use codec='f32' until integer-grid "
+            "masked quantization lands")
+
+
 # ------------------------------------------------------------- value codecs
 def quantize_rows(vals: jax.Array, codec: str):
     """Quantize f32[..., k] row-wise. Returns ``(q int32[..., k] in

@@ -98,10 +98,7 @@ def upload_bits_sparse(ks: Sequence[int], k_masks: Sequence[int], n_pairs: int,
     if codec != "f32":
         from repro.core import codecs
 
-        if any(km > 0 for km in k_masks):
-            raise ValueError(
-                f"codec {codec!r} does not compose with sparse-mask secure "
-                "aggregation (masks cancel on the f32 grid only)")
+        codecs.reject_codec_with_masks(codec, any(km > 0 for km in k_masks))
         if len(leaf_sizes) != len(ks):
             raise ValueError(
                 "quantized-codec accounting needs leaf_sizes aligned with "
@@ -191,6 +188,10 @@ def round_record(
         Totals under ``bits`` plus the slot-level facts, so any other
         accounting can be re-derived later (repro/sim/ledger.py).
     """
+    if codec != "f32":
+        from repro.core import codecs
+
+        codecs.reject_codec_with_masks(codec, any(km > 0 for km in k_masks))
     surv = n_clients if n_survivors is None else n_survivors
     up = surv * upload_bits_sparse(ks, k_masks, max(n_clients - 1, 0), bits,
                                    codec=codec, leaf_sizes=leaf_sizes)

@@ -295,12 +295,7 @@ def run_round(
             loss_curr=loss_curr,
         )
         use_masks = sa.enabled and C >= 2
-        if codec != "f32" and use_masks:
-            raise ValueError(
-                f"codec {codec!r} cannot run under secure aggregation: pair "
-                "masks cancel bit-exactly only on the f32 grid (DESIGN.md "
-                "§12); disable sa or use codec='f32' until integer-grid "
-                "masked quantization lands")
+        se.reject_codec_with_masks(codec, use_masks)
         if use_masks:
             # the round protocol: DH pair secrets + Shamir shares (phases
             # 0-1); layering note — secagg sits beside core, this local

@@ -18,7 +18,6 @@ def layer_rates(cfg: THGSConfig, n_layers: int) -> list[float]:
     the paper's observation that deeper layers tolerate stronger sparsification.
     """
     rates: list[float] = []
-    s = cfg.s0
     for i in range(n_layers):
         if i == 0:
             rates.append(cfg.s0)

@@ -54,6 +54,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# the codec x secagg rejection lives in ONE place (repro.lint RPL003)
+from repro.core.codecs import reject_codec_with_masks
+
 # The mesh axis name the client-parallel round shards over. Defined here (not
 # in launch/mesh.py) because core must not import launch; the mesh builders in
 # launch/mesh.py import this constant.
@@ -527,13 +530,6 @@ def codec_wire_roundtrip(cols_s, q_s, scales, m: int, codec: str):
     return cols2, codecs.dequantize_rows(q2, scales)
 
 
-def _reject_codec_with_masks(codec: str, k_mask: int) -> None:
-    if codec != "f32" and k_mask > 0:
-        raise ValueError(
-            f"codec {codec!r} cannot run under sparse-mask secure "
-            "aggregation: pair masks cancel bit-exactly only on the f32 "
-            "2^-24 grid (DESIGN.md §12); use codec='f32' until integer-grid "
-            "masked quantization lands")
 
 
 @functools.partial(
@@ -622,9 +618,8 @@ def encode_leaf_batch(
         Updated error feedback: transmitted positions zeroed, same dtype as
         ``residuals``.
     """
-    C = updates.shape[0]
     leaf_shape = updates.shape[1:]
-    _reject_codec_with_masks(codec, k_mask)
+    reject_codec_with_masks(codec, k_mask)
     acc = jax.vmap(lambda u, r: to_blocks(
         r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
             updates, residuals)
@@ -1193,7 +1188,7 @@ def encode_decode_leaf_sharded(
     assert can_shard_clients(mesh, C), (
         f"mesh {mesh} cannot shard {C} clients; use encode_leaf_batch")
     with_masks = pair_seeds is not None and k_mask > 0 and C >= 2
-    _reject_codec_with_masks(codec, k_mask if with_masks else 0)
+    reject_codec_with_masks(codec, k_mask if with_masks else 0)
     # dropouts gate the decode even without masks (serial parity: the serial
     # path passes `alive` to decode_leaf_batch whenever clients dropped);
     # recovery streams additionally need the masks

@@ -7,7 +7,7 @@ step function is traced.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Mapping
+from typing import Any
 
 import jax
 import jax.numpy as jnp

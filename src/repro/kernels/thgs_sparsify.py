@@ -10,7 +10,6 @@ Block layout: inputs flattened to [rows, 128-lane] tiles; block_rows chosen so
 """
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

@@ -27,7 +27,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro import configs
@@ -205,7 +204,7 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, fl: bool = False,
             else (rules["batch"],)
         rules = {**rules, "kv_seq": tuple(a for a in batch_axes if a) + ("model",),
                  "batch": None}
-    t0 = time.time()
+    t0 = time.perf_counter()
     rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind, "fl": fl,
            "kv_int8": kv_int8, "n_devices": int(mesh.devices.size)}
     try:
@@ -223,9 +222,9 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, fl: bool = False,
             jitted = jax.jit(fn, in_shardings=tuple(
                 shards[k] for k in args), donate_argnums=donate)
             lowered = jitted.lower(*[args[k] for k in args])
-            t_lower = time.time() - t0
+            t_lower = time.perf_counter() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.perf_counter() - t0 - t_lower
         rec.update(
             status="ok",
             lower_s=round(t_lower, 2),

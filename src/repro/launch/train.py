@@ -33,9 +33,7 @@ from repro.core import streams as se
 from repro.core.blocked import decode_blocked_sum, encode_leaf_blocked
 from repro.core.types import SecureAggConfig, THGSConfig
 from repro.launch import shardings as shd
-from repro.launch.specs import InputShape, input_pspecs, input_specs
 from repro.models import transformer as tf
-from repro.models.sharding import logical_axis_rules
 
 PyTree = Any
 

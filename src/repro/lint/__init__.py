@@ -1,0 +1,68 @@
+"""repro.lint — AST-based invariant checks for the repro codebase.
+
+The type system sees none of the invariants this codebase actually rests
+on: bit-exact cross-process replay, pair-mask cancellation that only holds
+on the f32 2^-24 grid, min-of-reps bench timing, the concatenation combine
+of the tree decode, and the Pallas kernel-twin contract.  ``repro.lint``
+codifies each known bug class as a named, testable static check
+(DESIGN.md §14 is the catalogue):
+
+========  ==============================================================
+RPL001    nondeterminism sources (hash(), time.time(), stdlib random,
+          argless datetime.now(), set iteration order)
+RPL002    bench suites timing outside ``timing.measure`` (min-of-reps)
+RPL003    codec x secagg entry points missing the shared non-f32 guard
+RPL004    non-associative (psum-style) combines in decode modules
+RPL005    pallas_call wrappers without a kernels/ref.py twin or
+          interpret fallback
+RPL006    Python branching on traced values inside ``@jit`` functions
+========  ==============================================================
+
+``python -m repro.lint src tests --gate`` runs the suite and exits
+non-zero on any unsuppressed finding (CI runs it before tier-1); findings
+are suppressed per line with ``# repro-lint: disable=RPLxxx``.
+
+Import discipline: like ``repro.bench``, this package imports no jax — the
+gate runs without touching a backend.
+"""
+
+from __future__ import annotations
+
+from repro.lint import bench_checks as _bench_checks
+from repro.lint import determinism as _determinism
+from repro.lint import kernel_checks as _kernel_checks
+from repro.lint import secagg_checks as _secagg_checks
+from repro.lint.core import (
+    CHECKS,
+    PARSE_ERROR_ID,
+    Check,
+    Finding,
+    LintContext,
+    SourceFile,
+    iter_python_files,
+    lint_file,
+    lint_paths,
+    lint_source,
+    register,
+)
+from repro.lint.report import SCHEMA_VERSION, make_doc, render_text, validate_doc
+
+del _bench_checks, _determinism, _kernel_checks, _secagg_checks
+
+__all__ = [
+    "CHECKS",
+    "Check",
+    "Finding",
+    "LintContext",
+    "PARSE_ERROR_ID",
+    "SCHEMA_VERSION",
+    "SourceFile",
+    "iter_python_files",
+    "lint_file",
+    "lint_paths",
+    "lint_source",
+    "make_doc",
+    "register",
+    "render_text",
+    "validate_doc",
+]

@@ -1,0 +1,67 @@
+"""RPL002 — bench suites must time through ``timing.measure``.
+
+The CI perf gate compares every ``--quick`` run against committed
+``BENCH_*.json`` baselines with a 3x slowdown bound; a mean over 2-3 reps of
+a sub-millisecond op trips it on a single OS scheduler stall (PR 6 hit this
+on the agg micro-entries).  ``timing.measure`` (min-of-reps) is the
+canonical suite timer — this check replaces the ``measure(``/``time_us(``
+source greps that used to live in ``tests/test_bench.py``.
+
+Scope: ``*_bench.py`` modules under ``repro/bench/`` (``timing.py`` itself
+is the sanctioned ``perf_counter`` call site and is out of scope).
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint.core import Check, Finding, LintContext, SourceFile, register
+from repro.lint.determinism import _call_name
+
+
+@register
+class BenchTiming(Check):
+    id = "RPL002"
+    title = "bench suite times outside timing.measure"
+    rationale = (
+        "the 3x CI gate needs min-of-reps timings; raw perf_counter or "
+        "mean-of-reps time_us trips it on one scheduler stall"
+    )
+
+    def applies(self, src: SourceFile) -> bool:
+        if "repro/bench/" not in src.path:
+            return False
+        return src.path.endswith("_bench.py")
+
+    def run(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        saw_measure = False
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node.func)
+            if name == "measure":
+                saw_measure = True
+            elif name == "time_us":
+                yield self.finding(
+                    src,
+                    node,
+                    "suite times with mean-of-reps time_us(); use "
+                    "timing.measure (min-of-reps)",
+                )
+            elif name == "perf_counter":
+                yield self.finding(
+                    src,
+                    node,
+                    "suite reads perf_counter directly; time through "
+                    "timing.measure (min-of-reps)",
+                )
+        if not saw_measure:
+            yield Finding(
+                self.id,
+                src.path,
+                1,
+                1,
+                "bench suite never calls timing.measure — entries must be "
+                "min-of-reps timings (tests/test_bench.py pins this)",
+            )

@@ -1,0 +1,256 @@
+"""RPL001/RPL006 — nondeterminism sources and traced-value branching.
+
+RPL001 codifies the PR-5 bug class: ``data/datasets.py`` once seeded its
+class prototypes from builtin ``hash()``, which is salted per process
+(``PYTHONHASHSEED``), so identical runs produced different accuracies across
+invocations.  The check flags every statically recognizable source of
+cross-process nondeterminism: builtin ``hash()``, wall-clock ``time.time()``
+(use ``time.perf_counter()`` for durations; suppress for intentional epoch
+stamps), argless ``datetime.now()``/``today()``/``utcnow()``, the
+process-global stdlib ``random`` module (counter-based RNG — ``jax.random``
+or seeded ``np.random.RandomState`` — is the sanctioned source), and
+iteration-order dependence on sets (``for x in set(...)``, ``list(set(...))``
+— wrap in ``sorted()``).
+
+RPL006 flags Python-level branching on traced values inside ``@jit``-deco-
+rated functions: an ``if``/``while``/ternary whose test uses a non-static
+parameter as a boolean or comparison operand fails at trace time (or, worse,
+silently bakes in the tracer's shape-dependent answer).  ``x is None`` /
+``x is not None`` and attribute tests (``x.ndim == 3``) are static at trace
+time and pass.
+"""
+
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from repro.lint.core import Check, Finding, LintContext, SourceFile, register
+
+_DATETIME_NOW = {"now", "today", "utcnow"}
+_ORDERED_CONSUMERS = {"list", "tuple", "enumerate", "iter"}
+
+_HASH_MSG = (
+    "builtin hash() is salted per process (PYTHONHASHSEED) — the PR-5 "
+    "prototype-seeding bug; use zlib.crc32 or hashlib for a stable digest"
+)
+_TIME_MSG = (
+    "wall-clock time.time() is nondeterministic; use time.perf_counter() "
+    "for durations, or suppress for an intentional epoch stamp"
+)
+_RANDOM_MSG = (
+    "stdlib random draws from process-global state; use counter-based RNG "
+    "(jax.random / seeded np.random.RandomState)"
+)
+_DATETIME_MSG = (
+    "argless datetime.{attr}() reads the wall clock; pass an explicit "
+    "timestamp in"
+)
+_SET_ORDER_MSG = "set iteration order is unstable across processes; wrap in sorted(...)"
+
+
+def _is_set_expr(node: ast.AST) -> bool:
+    if isinstance(node, (ast.Set, ast.SetComp)):
+        return True
+    if isinstance(node, ast.Call) and isinstance(node.func, ast.Name):
+        return node.func.id in ("set", "frozenset")
+    return False
+
+
+def _call_name(func: ast.AST) -> str:
+    """Rightmost name of a call target: ``a.b.c(...)`` -> ``'c'``."""
+    if isinstance(func, ast.Name):
+        return func.id
+    if isinstance(func, ast.Attribute):
+        return func.attr
+    return ""
+
+
+@register
+class NondeterminismSources(Check):
+    id = "RPL001"
+    title = "nondeterminism source in seed/sim path"
+    rationale = (
+        "bit-exact cross-process replay is a stated contract (DESIGN.md §9); "
+        "salted hash()/wall clocks/global random/set order silently break it"
+    )
+
+    def run(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        random_names = self._stdlib_random_imports(src.tree)
+        for node in ast.walk(src.tree):
+            if isinstance(node, ast.Call):
+                yield from self._check_call(src, node, random_names)
+            elif isinstance(node, (ast.For, ast.comprehension)):
+                if _is_set_expr(node.iter):
+                    yield self.finding(src, node.iter, _SET_ORDER_MSG)
+
+    @staticmethod
+    def _stdlib_random_imports(tree: ast.Module) -> set[str]:
+        """Names bound to the stdlib ``random`` module or its members."""
+        names: set[str] = set()
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    if alias.name == "random":
+                        names.add(alias.asname or "random")
+            elif isinstance(node, ast.ImportFrom):
+                if node.module == "random" and node.level == 0:
+                    for alias in node.names:
+                        names.add(alias.asname or alias.name)
+        return names
+
+    def _check_call(
+        self, src: SourceFile, node: ast.Call, random_names: set[str]
+    ) -> Iterator[Finding]:
+        func = node.func
+        if isinstance(func, ast.Name):
+            if func.id == "hash":
+                yield self.finding(src, node, _HASH_MSG)
+            elif func.id in random_names and func.id != "random":
+                yield self.finding(src, node, _RANDOM_MSG)
+            elif func.id in _ORDERED_CONSUMERS:
+                if node.args and _is_set_expr(node.args[0]):
+                    yield self.finding(src, node, _SET_ORDER_MSG)
+        elif isinstance(func, ast.Attribute):
+            base = func.value
+            argless = not node.args and not node.keywords
+            if isinstance(base, ast.Name):
+                if base.id == "time" and func.attr == "time":
+                    yield self.finding(src, node, _TIME_MSG)
+                elif base.id in random_names:
+                    yield self.finding(src, node, _RANDOM_MSG)
+                elif base.id == "datetime" and func.attr in _DATETIME_NOW:
+                    if argless:
+                        msg = _DATETIME_MSG.format(attr=func.attr)
+                        yield self.finding(src, node, msg)
+            elif func.attr == "join" and node.args and _is_set_expr(node.args[0]):
+                yield self.finding(src, node, _SET_ORDER_MSG)
+            elif func.attr in _DATETIME_NOW and isinstance(base, ast.Attribute):
+                if base.attr == "datetime" and argless:
+                    msg = _DATETIME_MSG.format(attr=func.attr)
+                    yield self.finding(src, node, msg)
+
+
+def _jit_decorator_statics(dec: ast.AST) -> tuple[bool, set[str], set[int]]:
+    """Classify one decorator: ``(is_jit, static_argnames, static_argnums)``.
+
+    Recognizes ``@jax.jit``, ``@jit``, and the repo idiom
+    ``@[functools.]partial(jax.jit, static_argnames=(...))`` (plus
+    ``static_argnums``); a jit applied at call sites (``jax.jit(fn)``) is
+    out of static reach and documented as such in DESIGN.md §14.
+    """
+
+    def is_jit_name(node: ast.AST) -> bool:
+        return (isinstance(node, ast.Name) and node.id == "jit") or (
+            isinstance(node, ast.Attribute) and node.attr == "jit"
+        )
+
+    if is_jit_name(dec):
+        return True, set(), set()
+    if not isinstance(dec, ast.Call):
+        return False, set(), set()
+    is_partial = _call_name(dec.func) == "partial"
+    if is_partial and dec.args and is_jit_name(dec.args[0]):
+        pass  # @partial(jax.jit, ...)
+    elif is_jit_name(dec.func):
+        pass  # @jax.jit(...) factory form
+    else:
+        return False, set(), set()
+    names: set[str] = set()
+    nums: set[int] = set()
+    for kw in dec.keywords:
+        try:
+            value = ast.literal_eval(kw.value)
+        except (ValueError, SyntaxError):
+            continue
+        if kw.arg == "static_argnames":
+            values = (value,) if isinstance(value, str) else value
+            names.update(str(v) for v in values)
+        elif kw.arg == "static_argnums":
+            values = (value,) if isinstance(value, int) else value
+            nums.update(int(v) for v in values)
+    return True, names, nums
+
+
+def _traced_params(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    is_jit = False
+    static_names: set[str] = set()
+    static_nums: set[int] = set()
+    for dec in fn.decorator_list:
+        jit, names, nums = _jit_decorator_statics(dec)
+        is_jit = is_jit or jit
+        static_names |= names
+        static_nums |= nums
+    if not is_jit:
+        return set()
+    positional = [a.arg for a in fn.args.posonlyargs + fn.args.args]
+    params = set(positional) | {a.arg for a in fn.args.kwonlyargs}
+    params -= static_names | {"self", "cls"}
+    params -= {positional[i] for i in static_nums if i < len(positional)}
+    return params
+
+
+def _bound_params(
+    node: ast.FunctionDef | ast.AsyncFunctionDef | ast.Lambda,
+) -> set[str]:
+    args = node.args
+    return {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+
+
+def _traced_bool_operands(test: ast.AST, traced: set[str]) -> list[ast.Name]:
+    """Traced names used directly as boolean/comparison operands in a test."""
+    out: list[ast.Name] = []
+
+    def visit(e: ast.AST) -> None:
+        if isinstance(e, ast.BoolOp):
+            for v in e.values:
+                visit(v)
+        elif isinstance(e, ast.UnaryOp) and isinstance(e.op, ast.Not):
+            visit(e.operand)
+        elif isinstance(e, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot)) for op in e.ops):
+                return  # `x is [not] None`: static at trace time
+            for operand in [e.left, *e.comparators]:
+                if isinstance(operand, ast.Name) and operand.id in traced:
+                    out.append(operand)
+        elif isinstance(e, ast.Name) and e.id in traced:
+            out.append(e)
+
+    visit(test)
+    return out
+
+
+@register
+class TracedBranching(Check):
+    id = "RPL006"
+    title = "Python branching on a traced value inside @jit"
+    rationale = (
+        "an if/while on a tracer either fails at trace time or bakes the "
+        "tracer's answer into the compiled program; use lax.cond/jnp.where"
+    )
+
+    def run(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            traced = _traced_params(node)
+            if traced:
+                yield from self._scan_body(src, node, traced)
+
+    def _scan_body(
+        self, src: SourceFile, node: ast.AST, traced: set[str]
+    ) -> Iterator[Finding]:
+        for child in ast.iter_child_nodes(node):
+            scope = traced
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda)):
+                scope = traced - _bound_params(child)
+            if isinstance(child, (ast.If, ast.While, ast.IfExp)):
+                for name in _traced_bool_operands(child.test, scope):
+                    yield self.finding(
+                        src,
+                        name,
+                        f"branch tests traced parameter {name.id!r} inside a "
+                        "@jit function; hoist to static_argnames or use "
+                        "lax.cond / jnp.where",
+                    )
+            yield from self._scan_body(src, child, scope)

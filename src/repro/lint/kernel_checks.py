@@ -1,0 +1,136 @@
+"""RPL005 — the Pallas kernel-twin contract (DESIGN.md §8/§14).
+
+Every wrapper in ``kernels/`` that issues a ``pl.pallas_call`` must (a) have
+a pure-jnp twin in ``kernels/ref.py`` — the bit-parity reference that the
+kernel tests pin and that CPU/interpret environments fall back to — and
+(b) accept an ``interpret`` parameter and forward it to ``pallas_call``, so
+the same body runs without a TPU backend.
+
+Twin resolution: for a wrapper ``name`` the check accepts ``name_ref``, the
+``_apply``-stripped form (``mask_prng_apply`` -> ``mask_prng_ref``), and the
+de-pluralized form (``pair_mask_streams`` -> ``pair_mask_stream_ref``); an
+explicit ``# repro-lint: twin=<ref_name>`` comment on the ``def`` line
+overrides the search.
+"""
+
+from __future__ import annotations
+
+import ast
+import posixpath
+from typing import Iterator
+
+from repro.lint.core import Check, Finding, LintContext, SourceFile, register
+
+_EXEMPT = {"ref.py", "ops.py", "__init__.py"}
+
+
+def _twin_candidates(name: str) -> set[str]:
+    cands = {f"{name}_ref"}
+    if name.endswith("_apply"):
+        cands.add(f"{name[: -len('_apply')]}_ref")
+    if name.endswith("s"):
+        cands.add(f"{name[:-1]}_ref")
+    return cands
+
+
+def _ref_names(src: SourceFile, ctx: LintContext) -> set[str] | None:
+    """Top-level def names in the sibling ``ref.py``; None when absent."""
+    ref_path = posixpath.join(posixpath.dirname(src.path), "ref.py")
+    key = ("rpl005-ref-names", ref_path)
+    if key not in ctx.cache:
+        try:
+            with open(ref_path, encoding="utf-8") as f:
+                tree = ast.parse(f.read())
+        except (OSError, SyntaxError):
+            ctx.cache[key] = None
+        else:
+            ctx.cache[key] = {
+                node.name
+                for node in tree.body
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef))
+            }
+    return ctx.cache[key]
+
+
+def _pallas_calls(fn: ast.FunctionDef) -> list[ast.Call]:
+    calls = []
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Call):
+            func = node.func
+            is_pallas = (isinstance(func, ast.Name) and func.id == "pallas_call") or (
+                isinstance(func, ast.Attribute) and func.attr == "pallas_call"
+            )
+            if is_pallas:
+                calls.append(node)
+    return calls
+
+
+@register
+class KernelTwinContract(Check):
+    id = "RPL005"
+    title = "pallas_call wrapper missing its ref twin or interpret fallback"
+    rationale = (
+        "kernel==ref bit-parity and the interpret fallback are what keep "
+        "kernels testable off-TPU (DESIGN.md §8); an untwinned kernel is "
+        "unverifiable"
+    )
+
+    def applies(self, src: SourceFile) -> bool:
+        in_kernels = posixpath.basename(posixpath.dirname(src.path)) == "kernels"
+        return in_kernels and posixpath.basename(src.path) not in _EXEMPT
+
+    def run(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        wrappers = [
+            (node, _pallas_calls(node))
+            for node in src.tree.body
+            if isinstance(node, ast.FunctionDef)
+        ]
+        wrappers = [(fn, calls) for fn, calls in wrappers if calls]
+        if not wrappers:
+            return
+        ref_names = _ref_names(src, ctx)
+        for fn, calls in wrappers:
+            yield from self._check_wrapper(src, fn, calls, ref_names)
+
+    def _check_wrapper(
+        self,
+        src: SourceFile,
+        fn: ast.FunctionDef,
+        calls: list[ast.Call],
+        ref_names: set[str] | None,
+    ) -> Iterator[Finding]:
+        args = fn.args
+        params = {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+        if "interpret" not in params:
+            yield self.finding(
+                src,
+                fn,
+                f"kernel wrapper {fn.name}() takes no 'interpret' parameter; "
+                "every pallas_call body needs an interpret fallback for "
+                "TPU-less environments",
+            )
+        for call in calls:
+            if not any(kw.arg == "interpret" for kw in call.keywords):
+                yield self.finding(
+                    src,
+                    call,
+                    f"pallas_call in {fn.name}() does not forward "
+                    "interpret=...; the kernel cannot run off-TPU",
+                )
+        override = src.twin_overrides.get(fn.lineno)
+        cands = {override} if override else _twin_candidates(fn.name)
+        if ref_names is None:
+            yield self.finding(
+                src,
+                fn,
+                f"kernel wrapper {fn.name}() has no kernels/ref.py sibling "
+                "to host its reference twin",
+            )
+        elif not (cands & ref_names):
+            yield self.finding(
+                src,
+                fn,
+                f"kernel wrapper {fn.name}() has no reference twin in "
+                f"kernels/ref.py (looked for {sorted(cands)}); add the twin "
+                "or a '# repro-lint: twin=<name>' marker on the def line",
+            )

@@ -1,0 +1,115 @@
+"""RPL003/RPL004 — secagg x codec guard and decode-combine invariants.
+
+RPL003: sparse pair masks cancel bit-exactly only on the f32 2^-24 grid
+(Beguier et al., arXiv 2007.14861; DESIGN.md §12), so every public entry
+point that accepts both a ``codec`` and a secure-aggregation parameter must
+route the combination through the one shared guard,
+``repro.core.codecs.reject_codec_with_masks`` — scattered hand-rolled
+``if codec != "f32"`` raises drift apart (and did, before this check).
+
+RPL004: DESIGN.md §13 mandates the *concatenation* combine for the tree
+decode — f32 addition is non-associative, and any ``psum``-style partial-sum
+combine of per-group dense buffers silently breaks the tree==flat bit-parity
+that every hierarchical-aggregation test relies on.  Scope: the decode
+modules (``core/streams.py``, ``core/blocked.py``, ``kernels/*decode*``).
+"""
+
+from __future__ import annotations
+
+import ast
+import posixpath
+from typing import Iterator
+
+from repro.lint.core import Check, Finding, LintContext, SourceFile, register
+from repro.lint.determinism import _call_name
+
+GUARD_NAMES = {"reject_codec_with_masks", "_reject_codec_with_masks"}
+
+#: parameters whose presence marks a secure-aggregation surface
+MASK_PARAMS = {"sa", "k_mask", "k_masks", "pair_seeds", "pair_keys", "use_masks"}
+
+_FORBIDDEN_COMBINES = {"psum", "psum_scatter", "all_reduce", "pmean"}
+
+_DECODE_FILES = {"core/streams.py", "core/blocked.py"}
+
+
+def _param_names(fn: ast.FunctionDef | ast.AsyncFunctionDef) -> set[str]:
+    args = fn.args
+    return {a.arg for a in args.posonlyargs + args.args + args.kwonlyargs}
+
+
+@register
+class CodecMaskGuard(Check):
+    id = "RPL003"
+    title = "codec x secagg entry point misses the shared rejection guard"
+    rationale = (
+        "quantized codecs off the f32 2^-24 grid break pair-mask "
+        "cancellation; one shared guard keeps every layer's rejection "
+        "identical"
+    )
+
+    def run(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                continue
+            if node.name.startswith("_") or node.name in GUARD_NAMES:
+                continue
+            params = _param_names(node)
+            if "codec" not in params or not (params & MASK_PARAMS):
+                continue
+            calls_guard = any(
+                isinstance(sub, ast.Call) and _call_name(sub.func) in GUARD_NAMES
+                for sub in ast.walk(node)
+            )
+            if not calls_guard:
+                yield self.finding(
+                    src,
+                    node,
+                    f"public entry point {node.name}() accepts 'codec' and a "
+                    f"secagg parameter ({sorted(params & MASK_PARAMS)}) but "
+                    "never calls codecs.reject_codec_with_masks — non-f32 "
+                    "codecs must be rejected under masks (DESIGN.md §12)",
+                )
+
+
+@register
+class DecodeCombine(Check):
+    id = "RPL004"
+    title = "non-associative reduction in a decode module"
+    rationale = (
+        "f32 addition is non-associative; DESIGN.md §13 mandates the "
+        "concatenation combine so tree==flat stays bit-exact"
+    )
+
+    def applies(self, src: SourceFile) -> bool:
+        if any(src.path.endswith(f) for f in _DECODE_FILES):
+            return True
+        name = posixpath.basename(src.path)
+        return "decode" in name and name.endswith(".py")
+
+    def run(self, src: SourceFile, ctx: LintContext) -> Iterator[Finding]:
+        for node in ast.walk(src.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = _call_name(node.func)
+            if name in _FORBIDDEN_COMBINES:
+                yield self.finding(
+                    src,
+                    node,
+                    f"{name}() combines partial sums in a decode module — "
+                    "f32 addition is non-associative and breaks tree==flat "
+                    "bit-parity; use the range-sharded concatenation combine "
+                    "(DESIGN.md §13)",
+                )
+            elif name == "reduce" and node.args:
+                first = node.args[0]
+                if _call_name(first) == "add" or (
+                    isinstance(first, ast.Attribute) and first.attr == "add"
+                ):
+                    yield self.finding(
+                        src,
+                        node,
+                        "reduce(add, ...) over decode partials is order-"
+                        "dependent in f32; use the concatenation combine "
+                        "(DESIGN.md §13)",
+                    )

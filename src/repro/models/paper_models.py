@@ -79,7 +79,6 @@ def make_mlp(dims) -> PaperModel:
                 h = jax.nn.relu(h)
         return h
 
-    side = int((dims[0] // (3 if dims[0] % 3 == 0 else 1)) ** 0.5)
     shape = (32, 32, 3) if dims[0] == 3072 else (28, 28, 1)
     return PaperModel(f"mlp{dims}", init, apply, shape)
 

@@ -13,8 +13,6 @@ Layout decisions that matter at scale (see DESIGN.md §6):
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 from typing import Any, NamedTuple, Optional
 
 import jax

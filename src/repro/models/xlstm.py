@@ -17,7 +17,6 @@ means no separate FFN: each cell carries its own factor-2 up/down projection.
 """
 from __future__ import annotations
 
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp

@@ -186,7 +186,7 @@ class SimConfig:
             raise ValueError(f"rounds must be >= 1, got {self.rounds}")
         if self.algorithm not in ("fedavg", "fedprox"):
             raise ValueError(f"unknown algorithm {self.algorithm!r}")
-        from repro.core.codecs import CODECS
+        from repro.core.codecs import CODECS, reject_codec_with_masks
         if self.codec not in CODECS:
             raise ValueError(f"codec must be one of {CODECS}, "
                              f"got {self.codec!r}")
@@ -195,12 +195,8 @@ class SimConfig:
                 f"codec {self.codec!r} requires THGS sparse streams "
                 "(thgs=None runs the dense baseline, which has no stream "
                 "wire to quantize)")
-        if self.codec != "f32" and self.sa.enabled:
-            raise ValueError(
-                f"codec {self.codec!r} cannot be combined with secure "
-                "aggregation: sparse pair masks cancel bit-exactly only on "
-                "the f32 grid (DESIGN.md §12); set sa.enabled=False or run "
-                "codec='f32' until integer-grid masked quantization lands")
+        # the shared guard (core/codecs.py, repro.lint RPL003)
+        reject_codec_with_masks(self.codec, self.sa.enabled)
         if self.topology not in TOPOLOGIES:
             raise ValueError(f"topology must be one of {TOPOLOGIES}, "
                              f"got {self.topology!r}")

@@ -277,7 +277,7 @@ class Simulation:
         accs: list = []
         losses: list = []
         start = self._try_resume(state, accs, losses) if resume else 0
-        t0 = time.time()
+        t0 = time.perf_counter()
         for r in range(start, cfg.rounds):
             cohort = self.sampler.cohort_for(r)
             # the compile-once contract: the stacked shapes never change
@@ -315,7 +315,7 @@ class Simulation:
             eval_every=cfg.eval_every,
             accuracies=accs,
             losses=losses,
-            wall_s=time.time() - t0,
+            wall_s=time.perf_counter() - t0,
             ledger=self.ledger,
             config=cfg.to_dict(),
         )
@@ -392,7 +392,7 @@ class AsyncSimulation(Simulation):
         accs: list = []
         losses: list = []
         start = self._try_resume(state, accs, losses) if resume else 0
-        t0 = time.time()
+        t0 = time.perf_counter()
         for r in range(start, cfg.rounds):
             cohort = self.sampler.cohort_for(r)
             assert len(cohort) == self.buffer, (
@@ -433,7 +433,7 @@ class AsyncSimulation(Simulation):
             eval_every=cfg.eval_every,
             accuracies=accs,
             losses=losses,
-            wall_s=time.time() - t0,
+            wall_s=time.perf_counter() - t0,
             ledger=self.ledger,
             config=cfg.to_dict(),
         )

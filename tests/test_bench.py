@@ -132,15 +132,32 @@ def test_measure_returns_min_of_reps(monkeypatch):
 def test_all_json_suites_time_with_min_of_reps():
     """Every BENCH suite must time through timing.measure (min-of-reps) —
     mean-of-reps entries trip the CI gate on a single scheduler stall
-    (ISSUE 7 satellite; PR 6 hit this on the agg micro-entries)."""
+    (ISSUE 7 satellite; PR 6 hit this on the agg micro-entries). Enforced
+    by repro.lint RPL002 (the AST check that replaced the source greps that
+    used to live here)."""
     import importlib
-    import inspect
 
+    from repro import lint
     from repro.bench import JSON_SUITES
 
     for name, (mod_name, _) in JSON_SUITES.items():
-        src = inspect.getsource(importlib.import_module(mod_name))
-        assert "measure(" in src, f"suite {name} does not use timing.measure"
-        assert "time_us(" not in src, (
-            f"suite {name} still times with mean-of-reps time_us; "
-            "use timing.measure")
+        mod = importlib.import_module(mod_name)
+        findings = lint.lint_file(mod.__file__, select={"RPL002"})
+        assert [f for f in findings if not f.suppressed] == [], (
+            f"suite {name}: " + "; ".join(f.message for f in findings))
+
+
+def test_rpl002_is_not_vacuous_on_suite_paths():
+    """The RPL002 scope must actually cover the suite modules: a time_us
+    call at a suite-shaped path has to flag (guards the check against a
+    path-scoping regression silently blessing every suite)."""
+    from repro import lint
+
+    bad = (
+        "from repro.bench.timing import time_us\n"
+        "def entries(quick=False):\n"
+        "    return [('x', time_us(lambda: None, reps=2))]\n"
+    )
+    findings = lint.lint_source(
+        bad, path="src/repro/bench/fake_bench.py", select={"RPL002"})
+    assert any("time_us" in f.message for f in findings)

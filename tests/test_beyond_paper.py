@@ -37,7 +37,6 @@ def test_int8_state_dtype():
     cfg = dataclasses.replace(configs.reduced(configs.get("yi_6b")),
                               kv_dtype="int8")
     st = tf.init_decode_state(cfg, 2, 16)
-    k_leaf = jax.tree_util.tree_leaves(st.caches)[0]
     assert any(x.dtype == jnp.int8
                for x in jax.tree_util.tree_leaves(st.caches))
 

@@ -1,0 +1,440 @@
+"""repro.lint: fixture-driven good/bad pairs per check id, suppressions,
+the repro.lint/v1 JSON schema, and the committed-tree gate pins
+(DESIGN.md §14)."""
+
+import json
+import os
+
+import pytest
+
+from repro import lint
+from repro.lint import report
+from repro.lint.__main__ import main
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# --------------------------------------------------------------------------
+# fixture snippets: (virtual path, source) per check id; the path places the
+# snippet inside the check's scope (bench suite, decode module, kernels/...)
+# --------------------------------------------------------------------------
+
+GOOD = {
+    "RPL001": (
+        "src/repro/sim/clock.py",
+        (
+            "import time\n"
+            "import zlib\n"
+            "\n"
+            "\n"
+            "def digest(name):\n"
+            "    return zlib.crc32(name.encode())\n"
+            "\n"
+            "\n"
+            "def wall(t0):\n"
+            "    return time.perf_counter() - t0\n"
+            "\n"
+            "\n"
+            "def stable(xs):\n"
+            "    return sorted(set(xs))\n"
+        ),
+    ),
+    "RPL002": (
+        "src/repro/bench/good_bench.py",
+        (
+            "from repro.bench.timing import entry, measure\n"
+            "\n"
+            "\n"
+            "def entries(quick=False):\n"
+            "    us = measure(lambda: None, reps=3)\n"
+            "    return [entry('agg/noop', us, reps=3)]\n"
+        ),
+    ),
+    "RPL003": (
+        "src/repro/core/wire.py",
+        (
+            "from repro.core.codecs import reject_codec_with_masks\n"
+            "\n"
+            "\n"
+            "def encode(updates, codec='f32', k_mask=0):\n"
+            "    reject_codec_with_masks(codec, k_mask)\n"
+            "    return updates\n"
+        ),
+    ),
+    "RPL004": (
+        "src/repro/core/streams.py",
+        (
+            "import jax.numpy as jnp\n"
+            "\n"
+            "\n"
+            "def combine(parts):\n"
+            "    return jnp.concatenate(parts, axis=-1)\n"
+        ),
+    ),
+    "RPL005": (
+        "kernels/goodop.py",
+        (
+            "from jax.experimental import pallas as pl\n"
+            "\n"
+            "\n"
+            "def _kernel(x_ref, o_ref):\n"
+            "    o_ref[...] = x_ref[...]\n"
+            "\n"
+            "\n"
+            "def goodop(x, *, interpret=False):\n"
+            "    return pl.pallas_call(_kernel, interpret=interpret)(x)\n"
+        ),
+    ),
+    "RPL006": (
+        "src/repro/core/jitted.py",
+        (
+            "import functools\n"
+            "\n"
+            "import jax\n"
+            "\n"
+            "\n"
+            "@functools.partial(jax.jit, static_argnames=('k',))\n"
+            "def scale(x, k, w=None):\n"
+            "    if k > 0 and w is not None:\n"
+            "        return x * w * k\n"
+            "    return x\n"
+        ),
+    ),
+}
+
+BAD = {
+    "RPL001": (
+        "src/repro/sim/clock.py",
+        (
+            "import random\n"
+            "import time\n"
+            "\n"
+            "\n"
+            "def seed_for(name):\n"
+            "    return hash(name) % 100\n"
+            "\n"
+            "\n"
+            "def stamp():\n"
+            "    return time.time()\n"
+            "\n"
+            "\n"
+            "def pick(xs):\n"
+            "    return random.choice(xs)\n"
+            "\n"
+            "\n"
+            "def order(xs):\n"
+            "    return list(set(xs))\n"
+        ),
+    ),
+    "RPL002": (
+        "src/repro/bench/bad_bench.py",
+        (
+            "from repro.bench.timing import entry, time_us\n"
+            "\n"
+            "\n"
+            "def entries(quick=False):\n"
+            "    us = time_us(lambda: None, reps=2)\n"
+            "    return [entry('agg/noop', us, reps=2)]\n"
+        ),
+    ),
+    "RPL003": (
+        "src/repro/core/wire.py",
+        (
+            "def encode(updates, codec='f32', k_mask=0):\n"
+            "    return updates, codec, k_mask\n"
+        ),
+    ),
+    "RPL004": (
+        "src/repro/core/streams.py",
+        (
+            "import jax\n"
+            "\n"
+            "\n"
+            "def combine(parts):\n"
+            "    return jax.lax.psum(parts, 'clients')\n"
+        ),
+    ),
+    "RPL005": (
+        "kernels/badop.py",
+        (
+            "from jax.experimental import pallas as pl\n"
+            "\n"
+            "\n"
+            "def _kernel(x_ref, o_ref):\n"
+            "    o_ref[...] = x_ref[...]\n"
+            "\n"
+            "\n"
+            "def badop(x):\n"
+            "    return pl.pallas_call(_kernel)(x)\n"
+        ),
+    ),
+    "RPL006": (
+        "src/repro/core/jitted.py",
+        (
+            "import functools\n"
+            "\n"
+            "import jax\n"
+            "\n"
+            "\n"
+            "@functools.partial(jax.jit, static_argnames=('k',))\n"
+            "def scale(x, k):\n"
+            "    if x > 0:\n"
+            "        return x * k\n"
+            "    return x\n"
+        ),
+    ),
+}
+
+CHECK_IDS = sorted(GOOD)
+
+
+def _write_fixture(tmp_path, rel_path, source):
+    path = tmp_path / rel_path
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(source)
+    if rel_path.startswith("kernels/"):
+        ref = path.parent / "ref.py"
+        if not ref.exists():
+            ref.write_text("def goodop_ref(x):\n    return x\n")
+    return path
+
+
+# ------------------------------------------------------------- check pairs
+@pytest.mark.parametrize("check_id", CHECK_IDS)
+def test_bad_fixture_flags_exactly_this_check(check_id, tmp_path):
+    rel_path, source = BAD[check_id]
+    path = _write_fixture(tmp_path, rel_path, source)
+    findings = lint.lint_file(str(path), select={check_id})
+    assert findings, f"{check_id} bad fixture produced no findings"
+    assert {f.check for f in findings} == {check_id}
+    assert all(not f.suppressed for f in findings)
+
+
+@pytest.mark.parametrize("check_id", CHECK_IDS)
+def test_good_fixture_is_clean(check_id, tmp_path):
+    rel_path, source = GOOD[check_id]
+    path = _write_fixture(tmp_path, rel_path, source)
+    assert lint.lint_file(str(path), select={check_id}) == []
+
+
+@pytest.mark.parametrize("check_id", CHECK_IDS)
+def test_gate_exits_nonzero_on_bad_fixture(check_id, tmp_path, capsys):
+    rel_path, source = BAD[check_id]
+    _write_fixture(tmp_path, rel_path, source)
+    assert main([str(tmp_path), "--gate", "--select", check_id]) == 1
+    capsys.readouterr()
+
+
+def test_rpl001_flags_pr5_hash_pattern_reintroduced():
+    """Acceptance pin: the exact PR-5 datasets.py bug must be caught."""
+    path = os.path.join(ROOT, "src", "repro", "data", "datasets.py")
+    with open(path) as f:
+        text = f.read()
+    bad = text.replace(
+        'zlib.crc32(f"{spec.name}/17".encode())', 'hash(f"{spec.name}/17")'
+    )
+    assert bad != text, "datasets.py digest line moved; update this test"
+    findings = lint.lint_source(bad, path=path, select={"RPL001"})
+    assert [f.check for f in findings] == ["RPL001"]
+    assert "PYTHONHASHSEED" in findings[0].message
+    # ... and the committed (crc32) version is clean
+    assert lint.lint_source(text, path=path, select={"RPL001"}) == []
+
+
+# ------------------------------------------------------- per-check details
+def test_rpl001_message_variety():
+    _, source = BAD["RPL001"]
+    findings = lint.lint_source(source, path="src/repro/sim/clock.py")
+    blob = " ".join(f.message for f in findings)
+    for needle in ("hash()", "time.time()", "random", "sorted"):
+        assert needle in blob, needle
+
+
+def test_rpl002_out_of_scope_paths_not_flagged():
+    _, source = BAD["RPL002"]
+    assert lint.lint_source(source, path="src/repro/bench/timing.py") == []
+    assert lint.lint_source(source, path="src/repro/sim/engine.py") == []
+
+
+def test_rpl002_flags_raw_perf_counter_and_missing_measure():
+    source = (
+        "import time\n"
+        "\n"
+        "\n"
+        "def entries(quick=False):\n"
+        "    t0 = time.perf_counter()\n"
+        "    return [('agg/noop', time.perf_counter() - t0)]\n"
+    )
+    findings = lint.lint_source(source, path="src/repro/bench/x_bench.py")
+    messages = " ".join(f.message for f in findings)
+    assert "perf_counter" in messages
+    assert "never calls timing.measure" in messages
+
+
+def test_rpl003_private_helpers_exempt():
+    source = (
+        "def _encode(updates, codec='f32', k_mask=0):\n"
+        "    return updates, codec, k_mask\n"
+    )
+    assert lint.lint_source(source, path="src/repro/core/wire.py") == []
+
+
+def test_rpl004_out_of_decode_scope_not_flagged():
+    _, source = BAD["RPL004"]
+    assert lint.lint_source(source, path="src/repro/core/fedavg.py") == []
+
+
+def test_rpl005_twin_override_comment(tmp_path):
+    source = (
+        "from jax.experimental import pallas as pl\n"
+        "\n"
+        "\n"
+        "def weird(x, *, interpret=False):  # repro-lint: twin=goodop_ref\n"
+        "    return pl.pallas_call(lambda i, o: None, interpret=interpret)(x)\n"
+    )
+    path = _write_fixture(tmp_path, "kernels/weird.py", source)
+    assert lint.lint_file(str(path), select={"RPL005"}) == []
+
+
+def test_rpl005_real_kernel_modules_satisfy_the_contract():
+    """Every committed pallas_call wrapper has its ref twin + interpret."""
+    kdir = os.path.join(ROOT, "src", "repro", "kernels")
+    for name in sorted(os.listdir(kdir)):
+        if not name.endswith(".py"):
+            continue
+        path = os.path.join(kdir, name)
+        assert lint.lint_file(path, select={"RPL005"}) == [], name
+
+
+def test_rpl006_static_argnames_and_is_none_pass():
+    _, source = GOOD["RPL006"]
+    assert lint.lint_source(source, path="src/repro/core/jitted.py") == []
+
+
+def test_rpl006_undecorated_functions_out_of_scope():
+    source = "def f(x):\n    if x > 0:\n        return x\n    return -x\n"
+    assert lint.lint_source(source, path="src/repro/core/free.py") == []
+
+
+# ------------------------------------------------------------ suppressions
+def test_suppression_same_line():
+    source = "import time\n\nT0 = time.time()  # repro-lint: disable=RPL001\n"
+    findings = lint.lint_source(source, path="src/repro/x.py")
+    assert [f.suppressed for f in findings] == [True]
+
+
+def test_suppression_disable_next():
+    source = (
+        "import time\n"
+        "\n"
+        "# repro-lint: disable-next=RPL001\n"
+        "T0 = time.time()\n"
+    )
+    findings = lint.lint_source(source, path="src/repro/x.py")
+    assert [f.suppressed for f in findings] == [True]
+
+
+def test_suppression_disable_file():
+    source = (
+        "# repro-lint: disable-file=RPL001\n"
+        "import time\n"
+        "\n"
+        "T0 = time.time()\n"
+        "T1 = time.time()\n"
+    )
+    findings = lint.lint_source(source, path="src/repro/x.py")
+    assert [f.suppressed for f in findings] == [True, True]
+
+
+def test_suppression_wrong_id_does_not_apply():
+    source = "import time\n\nT0 = time.time()  # repro-lint: disable=RPL002\n"
+    findings = lint.lint_source(source, path="src/repro/x.py")
+    assert [f.suppressed for f in findings] == [False]
+
+
+def test_suppressed_findings_do_not_fail_the_gate(tmp_path, capsys):
+    path = tmp_path / "x.py"
+    path.write_text(
+        "import time\n\nT0 = time.time()  # repro-lint: disable=RPL001\n"
+    )
+    assert main([str(path), "--gate"]) == 0
+    capsys.readouterr()
+
+
+# ------------------------------------------------------------- JSON schema
+def test_json_report_schema_roundtrip():
+    _, source = BAD["RPL001"]
+    findings = lint.lint_source(source, path="src/repro/sim/clock.py")
+    doc = report.make_doc(findings, n_files=1, paths=["src"])
+    restored = json.loads(json.dumps(doc))
+    assert report.validate_doc(restored) == []
+    assert restored["schema"] == lint.SCHEMA_VERSION
+    assert restored["files"] == 1
+    assert len(restored["findings"]) == len(findings)
+    assert sum(restored["counts"].values()) == len(findings)
+
+
+def test_validate_doc_rejects_malformed():
+    assert report.validate_doc({"schema": "nope"})
+    assert report.validate_doc([])
+    good = report.make_doc([], n_files=1, paths=["src"])
+    bad_id = dict(good)
+    bad_id["findings"] = [
+        {"check": "X1", "path": "a.py", "line": 1, "col": 1, "message": "m"}
+    ]
+    bad_id["counts"] = {"X1": 1}
+    assert any("RPLxxx" in e for e in report.validate_doc(bad_id))
+    bad_counts = dict(good)
+    bad_counts["counts"] = {"RPL001": 7}
+    assert any("counts" in e for e in report.validate_doc(bad_counts))
+
+
+def test_cli_json_out(tmp_path, capsys):
+    src_file = tmp_path / "x.py"
+    src_file.write_text("import time\n\nT0 = time.time()\n")
+    out = tmp_path / "lint.json"
+    rc = main([str(src_file), "--format", "json", "--out", str(out)])
+    capsys.readouterr()
+    assert rc == 0  # reporting without --gate never fails the process
+    doc = json.loads(out.read_text())
+    assert report.validate_doc(doc) == []
+    assert doc["counts"] == {"RPL001": 1}
+
+
+# ------------------------------------------------------------ CLI behavior
+def test_parse_error_is_a_gating_finding(tmp_path, capsys):
+    path = tmp_path / "broken.py"
+    path.write_text("def f(:\n")
+    findings = lint.lint_file(str(path))
+    assert [f.check for f in findings] == [lint.PARSE_ERROR_ID]
+    assert main([str(path), "--gate"]) == 1
+    capsys.readouterr()
+
+
+def test_vacuous_gate_fails(tmp_path, capsys):
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert main([str(empty), "--gate"]) == 1
+    capsys.readouterr()
+
+
+def test_unknown_check_id_is_a_usage_error(capsys):
+    assert main(["--select", "RPL999", "src"]) == 2
+    capsys.readouterr()
+
+
+def test_list_checks(capsys):
+    assert main(["--list-checks"]) == 0
+    out = capsys.readouterr().out
+    for check_id in CHECK_IDS:
+        assert check_id in out
+
+
+# ------------------------------------------------------- committed-tree pin
+def test_committed_tree_is_lint_clean(capsys):
+    """Acceptance pin: `python -m repro.lint src` exits 0 on the tree, and
+    the full CI gate (src + tests + examples + benchmarks) stays clean."""
+    paths = [os.path.join(ROOT, p) for p in ("src", "tests")]
+    assert main(paths) == 0
+    extra = [os.path.join(ROOT, p) for p in ("examples", "benchmarks")]
+    assert main([*paths, *extra, "--gate"]) == 0
+    capsys.readouterr()

@@ -1,5 +1,4 @@
 """Eq. 1 (hierarchical) + Eq. 2 (time-varying) schedule properties."""
-import math
 
 import pytest
 pytest.importorskip("hypothesis")  # dev-only dep; tier-1 must collect without it

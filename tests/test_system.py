@@ -8,7 +8,6 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import costs
 from repro.core.fedavg import init_state, run_round
 from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
 from repro.data import MNIST, client_batches, make_dataset, noniid_label_k
