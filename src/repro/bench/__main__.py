@@ -140,16 +140,20 @@ def main(argv=None) -> int:
     json_suites = {n: es for n, es in results.items() if n in JSON_SUITES}
     if args.out:
         doc = make_doc(None, suites=json_suites, quick=args.quick)
-        with open(args.out, "w") as f:
+        tmp = args.out + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(doc, f, indent=1)
+        os.replace(tmp, args.out)
         print(f"wrote {args.out} "
               f"({sum(len(v) for v in json_suites.values())} entries)")
     else:
         for name, entries in json_suites.items():
             path = JSON_SUITES[name][1]
             doc = make_doc(entries, suite=name, quick=args.quick)
-            with open(path, "w") as f:
+            tmp = path + ".tmp"
+            with open(tmp, "w") as f:
                 json.dump(doc, f, indent=1)
+            os.replace(tmp, path)
             print(f"wrote {path} ({len(entries)} entries)")
     return 0
 

@@ -53,8 +53,13 @@ def save(ckpt_dir: str, step: int, tree: PyTree) -> str:
         "leaves": {k: {"shape": list(v.shape), "dtype": str(v.dtype)}
                    for k, v in arrays.items()},
     }
-    with open(os.path.join(ckpt_dir, f"step_{step:08d}.json"), "w") as f:
+    # same tmp + rename discipline as the npz: a crash mid-dump must not
+    # leave a truncated manifest masquerading as a complete checkpoint
+    mpath = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    mtmp = mpath + ".tmp"
+    with open(mtmp, "w") as f:
         json.dump(manifest, f)
+    os.replace(mtmp, mpath)
     return path
 
 

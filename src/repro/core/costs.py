@@ -141,6 +141,9 @@ def round_record(
     codec: str = "f32",
     leaf_sizes: Sequence[int] = (),
     staleness: Sequence[int] = (),
+    dp_clip: float = 0.0,
+    dp_sigma: float = 0.0,
+    dp_delta: float = 0.0,
 ) -> CommRecord:
     """Eq. 7-8 accounting for one sparse aggregation round.
 
@@ -181,6 +184,12 @@ def round_record(
         Per-report staleness taus for async (FedBuff-style) updates; empty on
         synchronous rounds. A stored fact — the bit totals are unaffected
         (each buffered report uploads the same sparse stream).
+    dp_clip, dp_sigma, dp_delta : float
+        Distributed-DP facts of the round (core/dp.py, DESIGN.md §15): the
+        per-client L2 clip S, the cohort-sum noise multiplier z and the
+        accountant's target δ. Stored facts only — the noise rides existing
+        stream slots, so the bit totals are unaffected. 0.0 (the default)
+        means the corresponding mechanism was off.
 
     Returns
     -------
@@ -218,6 +227,9 @@ def round_record(
         codec=codec,
         leaf_sizes=tuple(int(s) for s in leaf_sizes),
         staleness=tuple(int(t) for t in staleness),
+        dp_clip=float(dp_clip),
+        dp_sigma=float(dp_sigma),
+        dp_delta=float(dp_delta),
     )
 
 

@@ -1,0 +1,229 @@
+"""Distributed differential privacy under secure aggregation (DESIGN.md §15).
+
+The DP plane composes with the sparse secagg data plane without touching the
+wire format: each client clips its local model delta to a global L2 bound
+``S`` (``DPConfig.clip``) and adds discrete Gaussian noise *under* its pair
+masks, on the transmitted slots of its unified stream. The noise values are
+drawn on the same f32-exact 2^-24 grid as the pair masks
+(``kernels/ref.dp_noise_stream_ref``), so masks cancel and noise survives
+exactly in the server's scatter-add — the server only ever sees the noised
+sum, and the noise adds ZERO wire bits (it rides the existing stream slots).
+
+Per-client noise is ``sigma_client = z * S / sqrt(C)`` with noise multiplier
+``z = DPConfig.sigma`` over a ``C``-client cohort, so the *sum* over a full
+cohort carries noise ``z * S`` — the distributed-DP analogue of the central
+Gaussian mechanism (Byrd & Polychroniadou 2020; Beguier et al. 2020 for the
+grid/quantized composition). With ``d`` survivors the realized sum noise is
+``z * S * sqrt(d / C)``; the accountant uses that survivor-aware effective
+multiplier per round (``CommLedger.privacy``).
+
+Replayability: noise seeds are derived host-side per (dp seed, round, client)
+via sha256 (:meth:`DPConfig.client_seeds` — the same derivation discipline as
+``masks.pair_seed``) and folded with the leaf id in-trace, so a resumed sim
+replays the identical noise stream from config + round index alone, and the
+client-sharded round slices the same seed rows the serial round uses
+(bit-identical by construction).
+
+``sigma == 0`` and ``clip == inf`` statically skip every DP op, making such
+rounds bit-identical to plain secagg rounds (property-tested in
+tests/test_dp.py, same style as the tau=0 async and tree==flat guarantees).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import hashlib
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.types import PyTree
+
+
+@dataclasses.dataclass(frozen=True)
+class DPConfig:
+    """Distributed-DP knobs for one federated run.
+
+    ``clip`` is the per-client global-L2 sensitivity bound S applied to the
+    local model delta (inf disables clipping); ``sigma`` is the *noise
+    multiplier* z of the cohort sum — each client adds ``z * S / sqrt(C)``.
+    ``delta`` is the accountant's target δ. Defaults are the identity
+    (``clip=inf, sigma=0``): a DPConfig() round is bit-identical to no DP.
+    """
+
+    clip: float = math.inf
+    sigma: float = 0.0
+    delta: float = 1e-5
+    seed: int = 0xD1FFC0DE
+
+    @property
+    def clips(self) -> bool:
+        return math.isfinite(self.clip)
+
+    @property
+    def noised(self) -> bool:
+        return self.sigma > 0.0
+
+    @property
+    def active(self) -> bool:
+        return self.clips or self.noised
+
+    def validate(self) -> None:
+        if not (self.clip > 0.0):
+            raise ValueError(f"dp.clip must be positive, got {self.clip}")
+        if self.sigma < 0.0:
+            raise ValueError(f"dp.sigma must be >= 0, got {self.sigma}")
+        if self.noised and not self.clips:
+            raise ValueError(
+                "dp.sigma > 0 requires a finite dp.clip: the noise scale is "
+                "sigma * clip / sqrt(C), and unclipped updates have no "
+                "sensitivity bound to calibrate against")
+        if not (0.0 < self.delta < 1.0):
+            raise ValueError(f"dp.delta must be in (0, 1), got {self.delta}")
+
+    def sigma_client(self, cohort: int) -> float:
+        """Per-client noise stddev so the full-cohort sum carries z*S."""
+        if not self.noised:
+            return 0.0
+        return self.sigma * self.clip / math.sqrt(max(1, cohort))
+
+    def client_seeds(self, round_t: int, client_ids: Sequence[int]):
+        """uint32[C] noise-stream seeds for one round's participants.
+
+        sha256 of (dp seed, round, client) — the derivation discipline of
+        ``masks.pair_seed``, so the stream is a pure function of config +
+        round + client id: resume replays it bit-identically and the
+        sharded round slices the identical rows.
+        """
+        out = np.empty(len(client_ids), np.uint32)
+        for i, c in enumerate(client_ids):
+            h = hashlib.sha256(
+                f"dpnoise:{self.seed}:{round_t}:{int(c)}".encode()).digest()
+            out[i] = int.from_bytes(h[:4], "little")
+        return out
+
+
+# ------------------------------------------------------------------ clipping
+@functools.partial(jax.jit, static_argnames=("clip",))
+def clip_client_updates(updates: PyTree, *, clip: float) -> PyTree:
+    """Per-client global-L2 clip of stacked client updates (leading axis C).
+
+    ``factor = min(1, clip / norm)`` over each client's full delta tree.
+    Clients already inside the bound get factor exactly 1.0, and ``x * 1.0``
+    is a bitwise no-op in f32 — so clipping never perturbs compliant clients.
+    """
+    leaves = jax.tree_util.tree_leaves(updates)
+    sq = sum(
+        jnp.sum(jnp.square(x.astype(jnp.float32)).reshape(x.shape[0], -1),
+                axis=1)
+        for x in leaves)
+    norm = jnp.sqrt(sq)
+    factor = jnp.minimum(1.0, jnp.float32(clip) / jnp.maximum(norm, 1e-30))
+
+    def scale(x):
+        f = factor.reshape((-1,) + (1,) * (x.ndim - 1))
+        return (x.astype(jnp.float32) * f).astype(x.dtype)
+
+    return jax.tree_util.tree_map(scale, updates)
+
+
+# ------------------------------------------------------------ noise injection
+def noise_slot_gate(pair_signs: jax.Array | None, k_eff: int, k_mask: int):
+    """f32[..., k_total] gate: 1 on transmitted slots, 0 on gated self slots.
+
+    The unified stream's slot layout is ``[k_eff top-k][C pairs x k_mask]``;
+    the self-pair block (sign 0) is value-gated to zero and support-gated onto
+    the top-1 index — it never reaches the wire, so it must carry no noise
+    (noise there would double-count onto the top-1 position and break the
+    k + (C-1)*k_mask wire accounting). ``pair_signs`` may be the full [C, C]
+    matrix or a sliced rows view (sharded path); None/k_mask==0 means every
+    slot is a transmitted top-k slot (returns None: no gating needed).
+    """
+    if pair_signs is None or k_mask <= 0:
+        return None
+    active = (jnp.asarray(pair_signs, jnp.float32) != 0.0)
+    mask_gate = jnp.repeat(active, k_mask, axis=-1).astype(jnp.float32)
+    top = jnp.ones(mask_gate.shape[:-1] + (k_eff,), jnp.float32)
+    return jnp.concatenate([top, mask_gate], axis=-1)
+
+
+def add_stream_noise(
+    values: jax.Array,          # f32[..., nb, k_total] batched stream values
+    dp_seeds: jax.Array,        # uint32[...] per-client noise seeds
+    *,
+    sigma: float,               # per-client noise stddev (sigma_client)
+    leaf_id,
+    pair_signs: jax.Array | None = None,
+    k_eff: int = 0,
+    k_mask: int = 0,
+) -> jax.Array:
+    """Inject grid-exact Gaussian noise into a batched stream's values.
+
+    One noise draw per transmitted slot, under the pair masks (the noise is
+    added to the same f32 values the masks were added to, before any gather),
+    drawn from the per-(round, client) counter stream folded with the leaf id
+    — exactly the pair-mask stream discipline, so serial/sharded/resumed
+    rounds agree bit for bit.
+    """
+    from repro.kernels import ref as kref
+
+    seeds = kref.fold_leaf_seed(jnp.asarray(dp_seeds, jnp.uint32), leaf_id)
+    noise = kref.dp_noise_stream_ref(
+        seeds, values.shape[-2], values.shape[-1], sigma=float(sigma))
+    gate = noise_slot_gate(pair_signs, k_eff, k_mask)
+    if gate is not None:
+        noise = noise * gate[..., None, :]
+    return values + noise
+
+
+def reject_codec_with_noise(codec: str, sigma: float) -> None:
+    """DP noise, like pair masks, cancels/composes only on the f32 grid —
+    quantized wire codecs would re-grid the noised values. One shared
+    rejection (the RPL003 discipline, mirroring reject_codec_with_masks)."""
+    if sigma > 0.0 and codec != "f32":
+        raise ValueError(
+            f"codec {codec!r} cannot carry DP noise: grid-exact noise "
+            "composition requires the f32 wire (codec='f32')")
+
+
+# ------------------------------------------------------- privacy accounting
+# Renyi orders for the RDP accountant; the standard grid spans small orders
+# (tight for large noise) through large ones (tight for small noise).
+RDP_ALPHAS: tuple[float, ...] = (
+    1.25, 1.5, 1.75, 2.0, 2.5, 3.0, 3.5, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0,
+    16.0, 20.0, 24.0, 32.0, 48.0, 64.0, 96.0, 128.0, 256.0, 512.0)
+
+
+def gaussian_rdp(noise_multiplier: float, alpha: float) -> float:
+    """RDP of the Gaussian mechanism at order alpha: alpha / (2 z^2)."""
+    if noise_multiplier <= 0.0:
+        return math.inf
+    return alpha / (2.0 * noise_multiplier ** 2)
+
+
+def compose_epsilon(noise_multipliers: Sequence[float], delta: float) -> float:
+    """(ε at δ) of adaptively composed Gaussian mechanisms.
+
+    Additive RDP composition across rounds at each order, then the standard
+    RDP→(ε, δ) conversion ``ε = min_α [ Σ_t α/(2 z_t²) + log(1/δ)/(α−1) ]``
+    (Mironov 2017). Any round with ``z <= 0`` (no noise) makes the
+    composition non-private: returns inf. An empty sequence returns 0.
+    """
+    zs = [float(z) for z in noise_multipliers]
+    if not zs:
+        return 0.0
+    if any(z <= 0.0 for z in zs):
+        return math.inf
+    if not (0.0 < delta < 1.0):
+        raise ValueError(f"delta must be in (0, 1), got {delta}")
+    inv_2z2 = sum(1.0 / (2.0 * z * z) for z in zs)
+    return min(alpha * inv_2z2 + math.log(1.0 / delta) / (alpha - 1.0)
+               for alpha in RDP_ALPHAS)
+
+
+def round_epsilon(noise_multiplier: float, delta: float) -> float:
+    """Single-round (ε at δ) of one Gaussian mechanism."""
+    return compose_epsilon([noise_multiplier], delta)

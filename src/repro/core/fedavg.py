@@ -189,6 +189,7 @@ def run_round(
     codec: str = "f32",
     topology: str = "flat",
     tree_groups: int = 0,
+    dp=None,
 ) -> FederatedState:
     """One aggregation round over the provided participating clients.
 
@@ -226,6 +227,15 @@ def run_round(
     bit-exact with flat (params, residuals, CommLedger), including secagg
     dropout recovery, for any group count. Requires THGS.
 
+    ``dp`` takes a ``core.dp.DPConfig`` (DESIGN.md §15): per-client global-L2
+    clipping of the local deltas plus grid-exact Gaussian noise on every
+    transmitted stream slot, injected under the pair masks, seeded per
+    (round, client) so resume replays it. Requires THGS and the f32 codec;
+    the sensitivity calibration assumes uniform client weights (the sim
+    config rejects ``weight_by_data_count`` with DP). ``None`` or an
+    inactive config (``clip=inf, sigma=0``) leaves the round bit-identical
+    to the pre-DP path.
+
     All participants' batch pytrees must share one structure and one set of
     array shapes (they are stacked on a leading client axis for the batched
     local-SGD program); pad ragged local data to fixed [steps, batch] first,
@@ -236,6 +246,16 @@ def run_round(
     if topology == "tree" and thgs is None:
         raise ValueError("topology='tree' requires THGS sparse streams; "
                          "dense rounds have no stream decode to shard")
+    dp_active = dp is not None and dp.active
+    if dp_active:
+        dp.validate()
+        if thgs is None:
+            raise ValueError(
+                "dp requires THGS sparse streams; the DP noise rides the "
+                "unified stream's transmitted slots (thgs is None)")
+        from repro.core.dp import reject_codec_with_noise
+
+        reject_codec_with_noise(codec, dp.sigma)
     participants = sorted(client_batches.keys())
     C = len(participants)
     sharded = se.can_shard_clients(mesh, C)
@@ -281,6 +301,19 @@ def run_round(
     losses_list = [float(x) for x in losses]
 
     if thgs is not None:
+        if dp_active and dp.clips:
+            # per-client global-L2 clip of the whole delta tree, BEFORE the
+            # per-leaf encode loop: the sensitivity bound S covers the full
+            # update (core/dp.py; compliant clients scale by exactly 1.0)
+            from repro.core.dp import clip_client_updates
+
+            deltas_stacked = clip_client_updates(
+                deltas_stacked, clip=float(dp.clip))
+        # per-(round, client) noise seeds, derived host-side so the stream is
+        # replayable from config + round alone (resume, sharded parity)
+        dp_sigma_c = dp.sigma_client(C) if dp_active else 0.0
+        dp_seeds = (jnp.asarray(dp.client_seeds(state.round, participants))
+                    if dp_active and dp.noised else None)
         # Eq. 2's beta from the federation-mean loss trajectory: one static
         # per-leaf k for the whole batched round (per-client k would make the
         # stacked stream shapes ragged — see DESIGN.md §3).
@@ -339,7 +372,8 @@ def run_round(
                     alive=alive if dropped else None,
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
                     leaf_id=leaf_id, weights=w_vec, codec=codec,
-                    topology=topology, tree_groups=groups)
+                    topology=topology, tree_groups=groups,
+                    dp_sigma=dp_sigma_c, dp_seeds=dp_seeds)
             else:
                 # ---- 2. batched unified-stream encode (all clients, one
                 # jit) ----
@@ -348,7 +382,8 @@ def run_round(
                     selector=thgs.selector, sample_frac=thgs.sample_frac,
                     pair_seeds=pair_seeds, pair_signs=pair_signs,
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
-                    leaf_id=leaf_id, weights=w_vec, codec=codec)
+                    leaf_id=leaf_id, weights=w_vec, codec=codec,
+                    dp_sigma=dp_sigma_c, dp_seeds=dp_seeds)
                 # ---- 3. fused scatter-add decode + dropout recovery ----
                 if topology == "tree":
                     dense = se.decode_leaf_tree(
@@ -395,7 +430,12 @@ def run_round(
             n_clients=len(participants), bits=bits,
             n_survivors=len(survivors),
             threshold=proto.t if use_masks else 0,
-            codec=codec, leaf_sizes=leaf_sizes_acct)
+            codec=codec, leaf_sizes=leaf_sizes_acct,
+            # facts-only DP fields: inactive parts stay at the 0.0 defaults
+            # so sigma=0/clip=inf records equal pre-DP records bit for bit
+            dp_clip=float(dp.clip) if dp_active and dp.clips else 0.0,
+            dp_sigma=float(dp.sigma) if dp_active else 0.0,
+            dp_delta=float(dp.delta) if dp_active and dp.noised else 0.0)
     else:
         if codec != "f32":
             raise ValueError(

@@ -535,7 +535,7 @@ def codec_wire_roundtrip(cols_s, q_s, scales, m: int, codec: str):
 @functools.partial(
     jax.jit,
     static_argnames=("k", "nb", "m", "size", "selector", "sample_frac",
-                     "k_mask", "mask_p", "mask_q", "codec"))
+                     "k_mask", "mask_p", "mask_q", "codec", "dp_sigma"))
 def encode_leaf_batch(
     updates: jax.Array,        # [C, *leaf_shape] stacked client updates
     residuals: jax.Array,      # [C, *leaf_shape] stacked error feedback
@@ -555,6 +555,8 @@ def encode_leaf_batch(
     leaf_id: int | jax.Array = 0,
     weights: jax.Array | None = None,
     codec: str = "f32",
+    dp_sigma: float = 0.0,
+    dp_seeds: jax.Array | None = None,
 ) -> tuple[StreamBatch, jax.Array]:
     """Jitted leaf-level encode: accumulate -> block view -> batched encode.
 
@@ -606,6 +608,15 @@ def encode_leaf_batch(
         residuals), sort + delta-pack the indices, and run the packed wire
         round trip in-trace; they require ``k_mask == 0`` — pair masks cancel
         only on the f32 grid.
+    dp_sigma : float (static)
+        Per-client DP noise stddev (``DPConfig.sigma_client``); > 0 adds
+        grid-exact Gaussian noise to every *transmitted* slot under the pair
+        masks (core/dp.py, DESIGN.md §15). 0 statically skips the stage, so
+        DP-off rounds are bit-identical to pre-DP rounds. Requires the f32
+        codec and ``dp_seeds``.
+    dp_seeds : uint32[C], optional
+        Per-(round, client) noise-stream seeds (``DPConfig.client_seeds``),
+        folded with ``leaf_id`` in-trace like the pair seeds.
 
     Returns
     -------
@@ -628,6 +639,21 @@ def encode_leaf_batch(
         pair_keys=pair_keys, pair_signs=pair_signs, pair_seeds=pair_seeds,
         k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, leaf_id=leaf_id,
         weights=weights)
+    if dp_sigma > 0.0:
+        from repro.core import dp as dp_mod
+
+        dp_mod.reject_codec_with_noise(codec, dp_sigma)
+        if dp_seeds is None:
+            raise ValueError("dp_sigma > 0 requires dp_seeds")
+        C = acc.shape[0]
+        use_masks = (pair_seeds is not None or pair_keys is not None) \
+            and k_mask > 0 and C >= 2
+        streams = StreamBatch(
+            indices=streams.indices,
+            values=dp_mod.add_stream_noise(
+                streams.values, dp_seeds, sigma=dp_sigma, leaf_id=leaf_id,
+                pair_signs=pair_signs if use_masks else None,
+                k_eff=min(int(k), m), k_mask=k_mask if use_masks else 0))
     if codec != "f32":
         cols, q, scales, new_acc = codec_wire_stage(
             streams.indices, streams.values, new_acc, weights, m, codec)
@@ -1041,7 +1067,7 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
                           selector: str, sample_frac: float, k_mask: int,
                           mask_p: float, mask_q: float, with_dropout: bool,
                           use_pallas, codec: str = "f32",
-                          splits: tuple = ()):
+                          splits: tuple = (), dp_sigma: float = 0.0):
     """Build + cache the jitted shard_map program for one leaf signature.
 
     The cache key is the static signature (mesh + block layout + schedule
@@ -1053,14 +1079,15 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
     with_masks = k_mask > 0
 
     def body(updates_l, residuals_l, weights_l, pair_seeds, pair_signs,
-             recovery_seeds, alive, leaf_id):
+             recovery_seeds, alive, dp_seeds, leaf_id):
         c_loc = updates_l.shape[0]
         leaf_shape = updates_l.shape[1:]
         acc = jax.vmap(lambda u, r: to_blocks(
             r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
                 updates_l, residuals_l)
+        i0 = jax.lax.axis_index(CLIENT_AXIS) * c_loc
+        signs_rows = None
         if with_masks:
-            i0 = jax.lax.axis_index(CLIENT_AXIS) * c_loc
             seeds_rows = jax.lax.dynamic_slice_in_dim(
                 pair_seeds, i0, c_loc, 0)
             signs_rows = jax.lax.dynamic_slice_in_dim(
@@ -1084,6 +1111,16 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
                     weight=w_c)
 
             gidx, vals, new_acc = jax.vmap(one_plain)(acc, weights_l)
+        if dp_sigma > 0.0:
+            from repro.core import dp as dp_mod
+
+            # each device noises its OWN clients' rows from the same seed
+            # vector the serial round folds — bit-identical by construction
+            dp_rows = jax.lax.dynamic_slice_in_dim(dp_seeds, i0, c_loc, 0)
+            vals = dp_mod.add_stream_noise(
+                vals, dp_rows, sigma=dp_sigma, leaf_id=leaf_id,
+                pair_signs=signs_rows, k_eff=min(int(k), m),
+                k_mask=k_mask if with_masks else 0)
         # the server reduction: ONE collective over the clients axis. An
         # all_gather of the sparse streams (then the identical full fused
         # scatter-add on every device) rather than a psum of per-device dense
@@ -1138,7 +1175,7 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
     fn = shard_map_clients(
         body, mesh,
         in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS), P(CLIENT_AXIS),
-                  P(), P(), P(), P(), P()),
+                  P(), P(), P(), P(), P(), P()),
         out_specs=(P(), P(CLIENT_AXIS)))
     return jax.jit(fn)
 
@@ -1167,6 +1204,8 @@ def encode_decode_leaf_sharded(
     codec: str = "f32",
     topology: str = "flat",
     tree_groups: int = 0,
+    dp_sigma: float = 0.0,
+    dp_seeds: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array]:
     """Client-parallel encode + decode for one leaf, fused in one shard_map.
 
@@ -1189,6 +1228,16 @@ def encode_decode_leaf_sharded(
         f"mesh {mesh} cannot shard {C} clients; use encode_leaf_batch")
     with_masks = pair_seeds is not None and k_mask > 0 and C >= 2
     reject_codec_with_masks(codec, k_mask if with_masks else 0)
+    if dp_sigma > 0.0:
+        from repro.core import dp as dp_mod
+
+        dp_mod.reject_codec_with_noise(codec, dp_sigma)
+        if dp_seeds is None:
+            raise ValueError("dp_sigma > 0 requires dp_seeds")
+    if dp_seeds is None:
+        # placeholder operand keeps the program arity fixed; the dp_sigma
+        # branch is baked statically so it is never read
+        dp_seeds = jnp.zeros((C,), jnp.uint32)
     # dropouts gate the decode even without masks (serial parity: the serial
     # path passes `alive` to decode_leaf_batch whenever clients dropped);
     # recovery streams additionally need the masks
@@ -1214,7 +1263,7 @@ def encode_decode_leaf_sharded(
     fn = _sharded_leaf_program(
         mesh, int(k), int(nb), int(m), int(size), selector,
         float(sample_frac), int(k_mask), float(mask_p), float(mask_q),
-        bool(with_dropout), use_pallas, str(codec), splits)
+        bool(with_dropout), use_pallas, str(codec), splits, float(dp_sigma))
     return fn(updates, residuals, jnp.asarray(weights, jnp.float32),
               pair_seeds, pair_signs, recovery_seeds, alive,
-              jnp.asarray(leaf_id))
+              jnp.asarray(dp_seeds, jnp.uint32), jnp.asarray(leaf_id))

@@ -150,6 +150,9 @@ class CommRecord:
     leaf_sizes: tuple = ()       # per-leaf dense sizes (codec index widths)
     staleness: tuple = ()        # per-report staleness taus (async rounds
                                  # only — empty on synchronous rounds)
+    dp_clip: float = 0.0         # per-client L2 clip S (0 = no DP clipping)
+    dp_sigma: float = 0.0        # DP cohort-sum noise multiplier z (0 = none)
+    dp_delta: float = 0.0        # accountant target delta (0 = n/a)
 
     @property
     def compression(self) -> float:

@@ -113,6 +113,47 @@ def pair_mask_stream_ref(seeds, signs, nb: int, k_mask: int, m: int,
     return idx, vals
 
 
+# Domain-separation salts for the distributed-DP noise streams (core/dp.py,
+# DESIGN.md §15): two independent murmur counter streams per client feed a
+# Box-Muller transform. Distinct from IDX/VAL/LEAF_SALT so DP draws never
+# collide with the pair-mask draws even under equal seeds.
+DP_U1_SALT = 0x94D049BB
+DP_U2_SALT = 0xBF58476D
+
+
+def dp_noise_stream_ref(seeds, nb: int, k: int, *, sigma: float):
+    """Counter-based discrete Gaussian noise on the f32-exact 2^-24 mask grid.
+
+    For each uint32 seed draw ``nb`` blocks of ``k`` noise values with flat
+    counter ``c = block * k + slot`` — the same counter discipline as
+    :func:`pair_mask_stream_ref`, so a resumed run replays the identical
+    stream from (seed, leaf, slot) alone. Two murmur streams give 24-bit
+    uniforms ``u1 in (0, 1]`` and ``u2 in [0, 1)``; Box-Muller maps them to a
+    standard normal ``z``, and the emitted value is
+
+        ``round(z * sigma * 2**24) * 2**-24``
+
+    — an integer multiple of the mask grid. Pair masks are multiples of the
+    same grid (the ``>> 8`` draw above), so masks + noise compose exactly in
+    f32 scatter-adds while per-slot partial sums stay below 1 in magnitude
+    (2^24 grid units — the identical headroom contract the mask plane has;
+    DESIGN.md §15). Returns f32[..., nb, k].
+    """
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    c = jnp.arange(nb * k, dtype=jnp.uint32).reshape(nb, k)
+    c = c.reshape((1,) * seeds.ndim + (nb, k))
+    b1 = _mix32(seeds ^ jnp.uint32(DP_U1_SALT))[..., None, None]
+    b2 = _mix32(seeds ^ jnp.uint32(DP_U2_SALT))[..., None, None]
+    # u1 in (0, 1]: +1 keeps log(u1) finite; u2 in [0, 1) — top 24 bits only,
+    # matching the mask draw's grid discipline
+    u1 = ((_mix32(b1 + c) >> 8).astype(jnp.float32) + 1.0) / jnp.float32(2**24)
+    u2 = (_mix32(b2 + c) >> 8).astype(jnp.float32) / jnp.float32(2**24)
+    z = jnp.sqrt(-2.0 * jnp.log(u1)) * jnp.cos(
+        jnp.float32(2.0 * 3.141592653589793) * u2)
+    q = jnp.round(z * jnp.float32(sigma) * jnp.float32(2**24))
+    return q * jnp.float32(2.0 ** -24)
+
+
 # --------------------------------------------------- wire-format bit packing
 # Fixed-width bit packing of uint fields into uint32 words — the data plane of
 # the StreamCodec wire stage (core/codecs.py, DESIGN.md §12). Rows are packed

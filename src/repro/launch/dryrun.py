@@ -190,9 +190,11 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, fl: bool = False,
         rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
                "status": "skipped", "reason": "encoder-only: no decode step"}
         os.makedirs(out_dir, exist_ok=True)
-        with open(os.path.join(
-                out_dir, f"{arch}__{shape_name}__{mesh_kind}.json"), "w") as f:
+        path = os.path.join(
+            out_dir, f"{arch}__{shape_name}__{mesh_kind}.json")
+        with open(path + ".tmp", "w") as f:
             json.dump(rec, f, indent=1)
+        os.replace(path + ".tmp", path)
         return rec
     mesh = make_production_mesh(multi_pod=(mesh_kind == "pod"))
     fed_axis = ("pod" if "pod" in mesh.axis_names else "data") if fl else None
@@ -239,8 +241,10 @@ def run_one(arch: str, shape_name: str, mesh_kind: str, fl: bool = False,
     os.makedirs(out_dir, exist_ok=True)
     tag = (f"{arch}__{shape_name}__{mesh_kind}" + ("__fl" if fl else "")
            + ("__kvint8" if kv_int8 else ""))
-    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+    path = os.path.join(out_dir, tag + ".json")
+    with open(path + ".tmp", "w") as f:
         json.dump(rec, f, indent=1, default=str)
+    os.replace(path + ".tmp", path)
     return rec
 
 

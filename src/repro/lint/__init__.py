@@ -16,6 +16,8 @@ RPL004    non-associative (psum-style) combines in decode modules
 RPL005    pallas_call wrappers without a kernels/ref.py twin or
           interpret fallback
 RPL006    Python branching on traced values inside ``@jit`` functions
+RPL007    json.dump to a non-tmp path (crash leaves a truncated file;
+          the discipline is dump to path + '.tmp' then os.replace)
 ========  ==============================================================
 
 ``python -m repro.lint src tests --gate`` runs the suite and exits
@@ -30,6 +32,7 @@ from __future__ import annotations
 
 from repro.lint import bench_checks as _bench_checks
 from repro.lint import determinism as _determinism
+from repro.lint import io_checks as _io_checks
 from repro.lint import kernel_checks as _kernel_checks
 from repro.lint import secagg_checks as _secagg_checks
 from repro.lint.core import (
@@ -47,7 +50,7 @@ from repro.lint.core import (
 )
 from repro.lint.report import SCHEMA_VERSION, make_doc, render_text, validate_doc
 
-del _bench_checks, _determinism, _kernel_checks, _secagg_checks
+del _bench_checks, _determinism, _io_checks, _kernel_checks, _secagg_checks
 
 __all__ = [
     "CHECKS",

@@ -52,6 +52,41 @@ def _sweep_overrides(args, cfg):
     return over
 
 
+def _run_dp_sweep(args) -> int:
+    """Run every noise-multiplier arm of a DP frontier sweep and write one
+    combined JSON recording the privacy/accuracy/communication trade-off
+    (arms share protocol and seed; only the DP noise differs — the z=0 arm
+    is a plain secagg run)."""
+    arms = presets.dp_sweep_configs(args.preset)
+    runs: dict[str, dict] = {}
+    for label, cfg in arms.items():
+        cfg = cfg.replace(**_sweep_overrides(args, cfg))
+        print(f"# sweep={args.preset} arm dp={label} rounds={cfg.rounds} "
+              f"cohort={cfg.clients_per_round}/{cfg.n_clients}", flush=True)
+        res = Simulation(cfg).run(resume=False, hooks=[_progress_hook])
+        runs[label] = res.summary()
+    print(f"\n# {args.preset}: privacy/accuracy/communication frontier")
+    for label, summ in runs.items():
+        t = summ["ledger"]["paper"]
+        priv = summ["ledger"].get("privacy")
+        eps = (f"eps={priv['epsilon']:8.3f} at delta={priv['delta']:g}"
+               if priv else "eps=   inf (no noise)  ")
+        print(f"{label:6s} {eps}  acc={summ['final_acc']:.3f}  "
+              f"upload={t['upload_mib']:.2f} MiB "
+              f"({t['upload_vs_dense']:.1%} of dense)")
+    out = args.out or f"experiments/sim/{args.preset}.json"
+    d = os.path.dirname(out)
+    if d:
+        os.makedirs(d, exist_ok=True)
+    tmp = out + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump({"name": args.preset, "runs": runs}, f, indent=2,
+                  default=float)
+    os.replace(tmp, out)
+    print(f"sweep ledger written to {out}")
+    return 0
+
+
 def _run_sweep(args) -> int:
     """Run every codec arm of a sweep preset and write one combined JSON.
 
@@ -130,6 +165,13 @@ def main(argv=None) -> int:
     ap.add_argument("--tree-groups", type=int, default=None,
                     help="sub-aggregator count for --topology tree "
                          "(0 = auto, ~sqrt cohort)")
+    ap.add_argument("--dp-sigma", type=float, default=None,
+                    help="distributed-DP cohort-sum noise multiplier z "
+                         "(core/dp.py, DESIGN.md §15); 0 disables noise")
+    ap.add_argument("--dp-clip", type=float, default=None,
+                    help="per-client L2 clip S for distributed DP")
+    ap.add_argument("--dp-delta", type=float, default=None,
+                    help="DP accountant target delta (default 1e-5)")
     args = ap.parse_args(argv)
 
     if args.list or not args.preset:
@@ -142,10 +184,15 @@ def main(argv=None) -> int:
                   f"cohort={cfg.clients_per_round}/{cfg.n_clients} {mech}")
         for name, arm_codecs in sorted(presets.SWEEPS.items()):
             print(f"{name:22s} sweep over codecs: {', '.join(arm_codecs)}")
+        for name, sigmas in sorted(presets.DP_SWEEPS.items()):
+            print(f"{name:22s} sweep over dp noise z: "
+                  f"{', '.join(f'{z:g}' for z in sigmas)}")
         return 0 if args.list else 2
 
     if args.preset in presets.SWEEPS:
         return _run_sweep(args)
+    if args.preset in presets.DP_SWEEPS:
+        return _run_dp_sweep(args)
 
     try:
         cfg = presets.get(args.preset)
@@ -171,6 +218,19 @@ def main(argv=None) -> int:
         over["topology"] = args.topology
     if args.tree_groups is not None:
         over["tree_groups"] = args.tree_groups
+    if (args.dp_sigma is not None or args.dp_clip is not None
+            or args.dp_delta is not None):
+        from repro.core.dp import DPConfig
+
+        dp = cfg.dp or DPConfig()
+        dp_over = {}
+        if args.dp_sigma is not None:
+            dp_over["sigma"] = args.dp_sigma
+        if args.dp_clip is not None:
+            dp_over["clip"] = args.dp_clip
+        if args.dp_delta is not None:
+            dp_over["delta"] = args.dp_delta
+        over["dp"] = dataclasses.replace(dp, **dp_over)
     if args.codec is not None:
         over["codec"] = args.codec
         if args.codec != "f32" and cfg.sa.enabled:
@@ -193,10 +253,12 @@ def main(argv=None) -> int:
                  if cfg.mode == "async" else "")
     topo_note = (f" topology=tree groups={cfg.tree_groups or 'auto'}"
                  if cfg.topology == "tree" else "")
+    dp_note = (f" dp=clip{cfg.dp.clip:g}/z{cfg.dp.sigma:g}"
+               if cfg.dp is not None and cfg.dp.active else "")
     print(f"# preset={args.preset} model={cfg.model} dataset={cfg.dataset} "
           f"partition={cfg.partition} rounds={cfg.rounds} "
           f"cohort={cfg.clients_per_round}/{cfg.n_clients}"
-          f"{mesh_note}{mode_note}{topo_note}",
+          f"{mesh_note}{mode_note}{topo_note}{dp_note}",
           flush=True)
     res = sim.run(resume=not args.no_resume, hooks=[_progress_hook])
 
@@ -211,6 +273,11 @@ def main(argv=None) -> int:
                   f"{mib(t['share_upload_bits']):.4f} MiB + recovery "
                   f"{mib(t['recovery_upload_bits']):.4f} MiB -> total "
                   f"{t['total_upload_vs_dense']:6.1%} of FedAvg")
+    priv = res.ledger.privacy()
+    if priv is not None:
+        print(f"[dp   ] eps={priv['epsilon']:.3f} at delta={priv['delta']:g} "
+              f"over {priv['rounds']} noised round(s) "
+              f"(clip={priv['clip']:g}, z={priv['noise_multiplier']:g})")
     print(f"final_acc={res.final_acc:.3f}  wall={res.wall_s:.1f}s")
     if cfg.out_json:
         path = res.to_json(cfg.out_json)

@@ -12,6 +12,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.dp import DPConfig
 from repro.core.types import FedConfig, SecureAggConfig, THGSConfig
 
 PARTITIONS = ("iid", "noniid", "dirichlet")
@@ -47,6 +48,14 @@ class SimConfig:
         Stream value wire codec (core/codecs.py, DESIGN.md §12); quantized
         codecs need ``thgs`` and reject ``sa.enabled`` (masks cancel only on
         the f32 grid).
+    dp : DPConfig or None
+        Distributed differential privacy (core/dp.py, DESIGN.md §15):
+        per-client L2 clipping + grid-exact Gaussian noise under the pair
+        masks, with the (ε, δ) accountant in the ledger. Needs ``thgs`` and
+        the f32 codec; rejects ``mode='async'`` (noise is calibrated to a
+        round-synchronous cohort) and ``weight_by_data_count`` (data-count
+        weights break the clip-bound sensitivity analysis). ``None`` or an
+        inactive config (clip=inf, sigma=0) is bit-identical to no DP.
     sampler : {'uniform', 'weighted'}
         Cohort sampling: uniform without replacement, or weighted by each
         client's local data count.
@@ -126,6 +135,8 @@ class SimConfig:
     # 'int8'/'int4'/'1bit' quantized values + delta-packed indices; non-f32
     # requires thgs and rejects secure aggregation (validate())
     codec: str = "f32"
+    # distributed DP (core/dp.py, DESIGN.md §15): None = off
+    dp: Optional[DPConfig] = None
     # scheduling
     sampler: str = "uniform"
     weight_by_data_count: bool = False
@@ -207,6 +218,26 @@ class SimConfig:
         if self.tree_groups < 0:
             raise ValueError(f"tree_groups must be >= 0 (0 = auto), "
                              f"got {self.tree_groups}")
+        if self.dp is not None and self.dp.active:
+            self.dp.validate()
+            if self.thgs is None:
+                raise ValueError(
+                    "dp requires THGS sparse streams (the DP noise rides "
+                    "the unified stream's transmitted slots)")
+            # the shared guard (core/dp.py, the RPL003 discipline)
+            from repro.core.dp import reject_codec_with_noise
+            reject_codec_with_noise(self.codec, self.dp.sigma)
+            if self.mode == "async":
+                raise ValueError(
+                    "dp cannot run with mode='async': the noise scale "
+                    "sigma*clip/sqrt(C) is calibrated to a round-synchronous "
+                    "cohort, which a streaming buffer breaks")
+            if self.weight_by_data_count:
+                raise ValueError(
+                    "dp cannot run with weight_by_data_count: data-count "
+                    "weights scale each client's contribution past the clip "
+                    "bound, breaking the sensitivity analysis (use uniform "
+                    "weights)")
         if self.mode not in MODES:
             raise ValueError(f"mode must be one of {MODES}, "
                              f"got {self.mode!r}")

@@ -230,8 +230,13 @@ class Simulation:
             "ledger_entries": self.ledger.summary()["entries"],
         }
         sidecar.update(self._sidecar_extra())
-        with open(self._sidecar_path(round_done), "w") as f:
+        # tmp + rename so a crash mid-write never leaves a truncated sidecar
+        # shadowing the last good (npz, sidecar) pair
+        path = self._sidecar_path(round_done)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
             json.dump(sidecar, f)
+        os.replace(tmp, path)
 
     def _try_resume(self, state: FederatedState,
                     accs: list, losses: list) -> int:
@@ -240,20 +245,36 @@ class Simulation:
         if not cfg.ckpt_dir or not os.path.isdir(cfg.ckpt_dir):
             return 0
         # newest (npz, sidecar)-consistent pair: a crash between the npz
-        # write and the sidecar write must not orphan the earlier good ones
+        # write and the sidecar write must not orphan the earlier good ones,
+        # and a sidecar that exists but doesn't parse (truncated by a crash
+        # predating the atomic write, or by disk corruption) counts as
+        # missing — fall back to the next older pair instead of dying
         steps = sorted(
             (int(m.group(1)) for f in os.listdir(cfg.ckpt_dir)
              if (m := re.match(r"step_(\d+)\.npz$", f))), reverse=True)
-        step = next((s for s in steps
-                     if os.path.exists(self._sidecar_path(s))), None)
+        step, meta = None, None
+        for s in steps:
+            if not os.path.exists(self._sidecar_path(s)):
+                continue
+            try:
+                with open(self._sidecar_path(s)) as f:
+                    meta = json.load(f)
+            except (ValueError, OSError) as e:
+                import warnings
+
+                warnings.warn(
+                    f"unreadable checkpoint sidecar {self._sidecar_path(s)} "
+                    f"({e}); falling back to an older checkpoint",
+                    RuntimeWarning, stacklevel=2)
+                continue
+            step = s
+            break
         if step is None:
             return 0
         if step > cfg.rounds:
             raise ValueError(
                 f"checkpoint at round {step} > rounds={cfg.rounds}; "
                 "refusing to resume past the configured horizon")
-        with open(self._sidecar_path(step)) as f:
-            meta = json.load(f)
         tree = checkpoint.restore(
             cfg.ckpt_dir, step, like=self._ckpt_like(state, meta))
         self._load_ckpt_tree(state, tree)
@@ -292,7 +313,8 @@ class Simulation:
                 cfg.thgs, cfg.sa, bits=self.bits,
                 client_weights=self.client_weights, dropped=dropped,
                 mesh=self.mesh, codec=cfg.codec,
-                topology=cfg.topology, tree_groups=cfg.tree_groups)
+                topology=cfg.topology, tree_groups=cfg.tree_groups,
+                dp=cfg.dp)
             rec = state.comm_log[-1]
             self.ledger.record(rec)
             loss = float(np.mean([state.losses[c] for c in batches]))

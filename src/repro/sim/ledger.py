@@ -16,6 +16,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import math
 import os
 from typing import Iterable, Optional, Sequence
 
@@ -53,6 +54,9 @@ class LedgerEntry:
     leaf_sizes: tuple = ()  # per-leaf dense sizes (codec index widths)
     staleness: tuple = ()   # per-report taus of an async update (§13);
                             # empty on synchronous rounds
+    dp_clip: float = 0.0    # DP per-client L2 clip S (0 = no clipping; §15)
+    dp_sigma: float = 0.0   # DP cohort-sum noise multiplier z (0 = no noise)
+    dp_delta: float = 0.0   # accountant target delta (0 = n/a)
 
     @property
     def sparse(self) -> bool:
@@ -62,6 +66,23 @@ class LedgerEntry:
     def secagg(self) -> bool:
         """Did the round run sparse-mask secure aggregation?"""
         return any(km > 0 for km in self.k_masks)
+
+    @property
+    def dp(self) -> bool:
+        """Did the round run the distributed-DP plane (clip and/or noise)?"""
+        return self.dp_clip > 0.0 or self.dp_sigma > 0.0
+
+    def dp_z_eff(self) -> float:
+        """Survivor-aware effective noise multiplier of the round's sum.
+
+        Each of the C participants adds ``z * S / sqrt(C)``; only the d
+        survivors' streams reach the aggregate, so the realized sum noise is
+        ``z * S * sqrt(d / C)`` — multiplier ``z * sqrt(d / C)`` against
+        sensitivity S. 0.0 when the round carried no noise.
+        """
+        if self.dp_sigma <= 0.0 or self.n_clients <= 0:
+            return 0.0
+        return self.dp_sigma * math.sqrt(self.n_survivors / self.n_clients)
 
     def upload_bits(self, bits: costs.BitModel) -> int:
         """Round *gradient* upload total (Eq. 6 x survivors, or dense x
@@ -113,7 +134,10 @@ class LedgerEntry:
                    codec=str(getattr(rec, "codec", "f32")),
                    leaf_sizes=tuple(getattr(rec, "leaf_sizes", ())),
                    staleness=tuple(
-                       int(t) for t in getattr(rec, "staleness", ())))
+                       int(t) for t in getattr(rec, "staleness", ())),
+                   dp_clip=float(getattr(rec, "dp_clip", 0.0)),
+                   dp_sigma=float(getattr(rec, "dp_sigma", 0.0)),
+                   dp_delta=float(getattr(rec, "dp_delta", 0.0)))
 
 
 class CommLedger:
@@ -211,13 +235,59 @@ class CommLedger:
             for e in self.entries
         ]
 
-    def summary(self) -> dict:
-        """Both accountings side by side, plus the raw slot facts."""
+    def privacy(self, delta: Optional[float] = None) -> Optional[dict]:
+        """The run's privacy accounting (DESIGN.md §15), or None without DP.
+
+        Per-round Gaussian-mechanism (ε, δ) at the survivor-aware effective
+        noise multiplier ``dp_z_eff``, plus the RDP composition across the
+        whole horizon (core/dp.py). Rounds with clipping but no noise make
+        the composed ε infinite — clipping alone bounds sensitivity, it does
+        not privatize. ``delta`` overrides the recorded target δ.
+        """
+        if not any(e.dp for e in self.entries):
+            return None
+        from repro.core import dp as dp_mod
+
+        if delta is None:
+            delta = next((e.dp_delta for e in self.entries
+                          if e.dp_delta > 0.0), 1e-5)
+        z_effs = [e.dp_z_eff() for e in self.entries]
+        per_round = [
+            {
+                "round": e.round,
+                "z": e.dp_sigma,
+                "z_eff": z,
+                "clip": e.dp_clip,
+                "epsilon": dp_mod.round_epsilon(z, delta),
+            }
+            for e, z in zip(self.entries, z_effs)
+        ]
         return {
+            "delta": float(delta),
+            "epsilon": dp_mod.compose_epsilon(z_effs, delta),
+            "rounds": len(self.entries),
+            "clip": max((e.dp_clip for e in self.entries), default=0.0),
+            "noise_multiplier": max(
+                (e.dp_sigma for e in self.entries), default=0.0),
+            "per_round": per_round,
+        }
+
+    def summary(self) -> dict:
+        """Both accountings side by side, plus the raw slot facts.
+
+        DP runs additionally carry the ``privacy`` block — per-round and
+        composed (ε, δ) next to the bit accounting; runs without DP omit the
+        key, keeping their summaries byte-identical with pre-DP ledgers.
+        """
+        out = {
             "paper": self.totals("paper"),
             "tpu": self.totals("tpu"),
             "entries": [dataclasses.asdict(e) for e in self.entries],
         }
+        priv = self.privacy()
+        if priv is not None:
+            out["privacy"] = priv
+        return out
 
     # ----------------------------------------------------------------- (de)io
     def to_json(self, path: str, *, extra: Optional[dict] = None) -> str:
@@ -249,5 +319,8 @@ class CommLedger:
                                 leaf_sizes=tuple(
                                     int(s) for s in d.get("leaf_sizes", ())),
                                 staleness=tuple(
-                                    int(t) for t in d.get("staleness", ())))
+                                    int(t) for t in d.get("staleness", ())),
+                                dp_clip=float(d.get("dp_clip", 0.0)),
+                                dp_sigma=float(d.get("dp_sigma", 0.0)),
+                                dp_delta=float(d.get("dp_delta", 0.0)))
                     for d in dicts])

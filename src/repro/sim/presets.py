@@ -7,6 +7,7 @@ unsuffixed ones are the paper-scale (CPU-reduced) runs the tables quote.
 """
 from __future__ import annotations
 
+from repro.core.dp import DPConfig
 from repro.core.types import SecureAggConfig, THGSConfig
 from repro.sim.config import SimConfig
 
@@ -89,6 +90,20 @@ PRESETS: dict[str, SimConfig] = {
         sa=SecureAggConfig(mask_ratio=0.01, threshold=0.6),
         dropout_rate=0.25, seed=11, topology="tree", tree_groups=3,
         out_json="experiments/sim/tree_quick.json"),
+    # distributed DP under secure aggregation (core/dp.py, DESIGN.md §15):
+    # the secagg_quick protocol with per-client L2 clipping and discrete
+    # Gaussian noise injected under the pair masks — the server only ever
+    # sees the noised sum, the ledger carries the composed (epsilon, delta),
+    # and the upload bits are unchanged (noise rides existing stream slots).
+    # The CI runs this with --quick and asserts both facts.
+    "dp_quick": SimConfig(
+        name="dp_quick", partition="noniid", noniid_k=4, n_clients=12,
+        clients_per_round=6, rounds=8, n_train=1200, n_test=400,
+        eval_every=2, local_steps=3, local_batch=32, thgs=_THGS,
+        sa=SecureAggConfig(mask_ratio=0.01, threshold=0.6),
+        dropout_rate=0.25, seed=11,
+        dp=DPConfig(clip=1.0, sigma=0.6, delta=1e-5),
+        out_json="experiments/sim/dp_quick.json"),
     # tiny smoke config for tests/CI plumbing checks (~seconds)
     "ci_smoke": SimConfig(
         name="ci_smoke", partition="noniid", noniid_k=4, n_clients=6,
@@ -124,6 +139,42 @@ def sweep_configs(name: str) -> dict[str, SimConfig]:
             sa=SecureAggConfig(enabled=False), codec=codec, **_table2(quick))
         for codec in arm_codecs
     }
+
+
+# Privacy-frontier sweeps: one dp_quick-protocol run per noise multiplier z
+# (plus the z=0 "off" arm, which is bit-identical to a plain secagg run by
+# construction — tests/test_dp.py). Arms share seed/protocol and differ by z
+# alone; dropout is off so the frontier isn't confounded by survivor
+# variance. The combined JSON maps arm -> full run summary, recording the
+# privacy/accuracy/communication trade-off for EXPERIMENTS.md.
+DP_SWEEPS: dict[str, tuple[float, ...]] = {
+    "dp_frontier_quick": (0.0, 0.3, 0.6, 1.2),
+    "dp_frontier": (0.0, 0.3, 0.6, 1.2),
+}
+
+
+def dp_sweep_configs(name: str) -> dict[str, SimConfig]:
+    """The per-noise-multiplier arms of a named DP sweep, keyed by arm label
+    ('off' for z=0, else 'z<value>')."""
+    try:
+        sigmas = DP_SWEEPS[name]
+    except KeyError:
+        raise KeyError(
+            f"unknown dp sweep {name!r}; available: "
+            f"{', '.join(sorted(DP_SWEEPS))}") from None
+    quick = name.endswith("_quick")
+    base = dict(
+        partition="noniid", noniid_k=4, n_clients=12, clients_per_round=6,
+        rounds=8 if quick else 24, n_train=1200 if quick else 4000,
+        n_test=400, eval_every=2, local_steps=3, local_batch=32,
+        thgs=_THGS, sa=SecureAggConfig(mask_ratio=0.01, threshold=0.6),
+        dropout_rate=0.0, seed=11)
+    out = {}
+    for z in sigmas:
+        label = "off" if z == 0.0 else f"z{z:g}"
+        dp = None if z == 0.0 else DPConfig(clip=1.0, sigma=z, delta=1e-5)
+        out[label] = SimConfig(name=f"{name}_{label}", dp=dp, **base)
+    return out
 
 
 def names() -> list[str]:

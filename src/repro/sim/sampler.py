@@ -38,8 +38,8 @@ class ClientSampler:
         still without replacement.
     weights : mapping of int -> float, optional
         Per-client selection weights for ``mode='weighted'``; missing clients
-        default to 0 (never sampled). Must leave at least ``cohort`` clients
-        with positive weight.
+        default to 0 (never sampled). Weights must be non-negative and leave
+        at least ``cohort`` clients with positive weight.
     dropout_rate : float
         Per-round probability that each sampled client's upload is lost
         *after* mask agreement. At least one client always survives.
@@ -70,6 +70,11 @@ class ClientSampler:
         if mode == "weighted":
             w = np.zeros(n_clients, np.float64)
             for c, v in (weights or {}).items():
+                if float(v) < 0.0:
+                    raise ValueError(
+                        f"weighted sampling got negative weight {v!r} for "
+                        f"client {c}: weights must be >= 0 (they normalize "
+                        "to selection probabilities)")
                 w[int(c)] = float(v)
             if (w > 0).sum() < cohort:
                 raise ValueError(

@@ -30,6 +30,38 @@ def test_latest_step(tmp_path):
     assert checkpoint.latest_step(str(tmp_path)) == 12
 
 
+def test_manifest_crash_mid_dump_keeps_last_good_pair(tmp_path, monkeypatch):
+    """A crash inside the step-2 manifest dump must not corrupt anything:
+    the tmp + os.replace discipline means the target manifest is either the
+    complete old file or absent, never truncated."""
+    import json
+    import os
+
+    t = {"x": jnp.arange(4, dtype=jnp.float32)}
+    checkpoint.save(str(tmp_path), 1, t)
+
+    real_dump = json.dump
+
+    def dump_partially_then_die(obj, fp, *a, **kw):
+        fp.write('{"step": 2, "leaves": {"x"')      # partial JSON
+        raise OSError("simulated crash mid-manifest-write")
+
+    monkeypatch.setattr(json, "dump", dump_partially_then_die)
+    try:
+        checkpoint.save(str(tmp_path), 2, t)
+        assert False, "expected the injected crash"
+    except OSError:
+        pass
+    finally:
+        monkeypatch.setattr(json, "dump", real_dump)
+
+    # step-1 manifest still parses; step-2 manifest never appeared (the
+    # partial bytes live only in the .tmp file, which resume ignores)
+    with open(tmp_path / "step_00000001.json") as f:
+        assert json.load(f)["step"] == 1
+    assert not os.path.exists(tmp_path / "step_00000002.json")
+
+
 def test_shape_mismatch_raises(tmp_path):
     t = {"x": jnp.zeros((2, 2))}
     checkpoint.save(str(tmp_path), 0, t)

@@ -1,0 +1,309 @@
+"""Distributed DP under secure aggregation (core/dp.py, DESIGN.md §15):
+grid-exact noise, exact noise+mask composition over survivor subsets >= t,
+sigma=0/clip=inf bit-identity with plain secagg, the RDP accountant, and
+bit-identical resume of the noise stream."""
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import costs, dp, streams
+from repro.core.types import SecureAggConfig, THGSConfig
+from repro.kernels import ref as kref
+from repro.sim import CommLedger, SimConfig, Simulation
+from repro.sim.config import SimConfig as _SimConfig  # noqa: F401 (re-export)
+
+GRID = 2.0 ** -24
+
+
+# ------------------------------------------------------------- noise sampler
+def test_noise_stream_on_grid_deterministic_and_seed_sensitive():
+    seeds = jnp.arange(64, dtype=jnp.uint32)
+    a = kref.dp_noise_stream_ref(seeds, 4, 16, sigma=0.5)
+    b = kref.dp_noise_stream_ref(seeds, 4, 16, sigma=0.5)
+    assert np.array_equal(np.asarray(a), np.asarray(b))  # replayable
+    units = np.asarray(a, np.float64) / GRID
+    assert np.array_equal(units, np.round(units))        # on the 2^-24 grid
+    c = kref.dp_noise_stream_ref(seeds + 1, 4, 16, sigma=0.5)
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+    # sigma=0 noise is exactly zero (round(0 * z) stays 0 on the grid)
+    z = kref.dp_noise_stream_ref(seeds, 4, 16, sigma=0.0)
+    assert np.array_equal(np.asarray(z), np.zeros_like(np.asarray(z)))
+
+
+def test_noise_stream_distribution():
+    seeds = jnp.arange(512, dtype=jnp.uint32)
+    n = np.asarray(kref.dp_noise_stream_ref(seeds, 4, 64, sigma=0.25))
+    assert abs(float(n.mean())) < 0.005
+    assert abs(float(n.std()) - 0.25) < 0.01
+
+
+# ------------------------------------------------------------------ clipping
+def test_clip_scales_violators_and_is_noop_inside_bound():
+    upd = {"w": jnp.stack([jnp.ones(16) * 2.0, jnp.ones(16) * 0.01]),
+           "b": jnp.stack([jnp.ones(4) * 2.0, jnp.ones(4) * 0.01])}
+    out = dp.clip_client_updates(upd, clip=1.0)
+    norm0 = math.sqrt(sum(float(jnp.sum(jnp.square(out[k][0])))
+                          for k in upd))
+    assert abs(norm0 - 1.0) < 1e-5                 # clipped onto the sphere
+    for k in upd:                                   # compliant client: bitwise
+        assert np.array_equal(np.asarray(out[k][1]), np.asarray(upd[k][1]))
+    # clip=inf touches nothing, bitwise
+    out_inf = dp.clip_client_updates(upd, clip=float("inf"))
+    for k in upd:
+        assert np.array_equal(np.asarray(out_inf[k]), np.asarray(upd[k]))
+
+
+# ------------------------------------------------------------------- config
+def test_dpconfig_validation_and_seed_derivation():
+    dp.DPConfig(clip=1.0, sigma=0.5).validate()
+    dp.DPConfig().validate()                        # identity config is fine
+    with pytest.raises(ValueError, match="clip must be positive"):
+        dp.DPConfig(clip=0.0).validate()
+    with pytest.raises(ValueError, match="sigma must be >= 0"):
+        dp.DPConfig(clip=1.0, sigma=-0.1).validate()
+    with pytest.raises(ValueError, match="requires a finite dp.clip"):
+        dp.DPConfig(sigma=0.5).validate()           # noise without clip
+    with pytest.raises(ValueError, match="delta must be in"):
+        dp.DPConfig(clip=1.0, sigma=0.5, delta=0.0).validate()
+    c = dp.DPConfig(clip=1.0, sigma=0.5)
+    s1 = c.client_seeds(3, [1, 5, 9])
+    assert s1.dtype == np.uint32 and len(set(s1.tolist())) == 3
+    assert np.array_equal(s1, c.client_seeds(3, [1, 5, 9]))   # pure function
+    assert not np.array_equal(s1, c.client_seeds(4, [1, 5, 9]))  # per round
+    assert c.sigma_client(4) == pytest.approx(0.25)
+    with pytest.raises(ValueError, match="cannot carry DP noise"):
+        dp.reject_codec_with_noise("int8", 0.5)
+    dp.reject_codec_with_noise("int8", 0.0)         # no noise: any codec
+
+
+# ---------------------------------------------- exact noise+mask composition
+def _scatter64(idx, vals, padded):
+    out = np.zeros(padded, np.float64)
+    np.add.at(out, np.asarray(idx).ravel(),
+              np.asarray(vals, np.float64).ravel())
+    return out
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_noise_and_masks_compose_exactly_on_grid(seed):
+    """The tentpole property: with gradients, masks AND noise all on the
+    f32-exact 2^-24 grid (and per-slot sums < 1), every f32 add in the
+    encode is exact, so the server-visible sum equals the unmasked top-k
+    sum plus exactly the injected noise — over the full cohort and over any
+    survivor subset >= t with Bonawitz mask recovery."""
+    C, n, k = 5, 512, 12
+    rng = np.random.default_rng(seed)
+    # gradients snapped to the grid at |g| ~ 0.03: every slot value
+    # g + mask + noise stays < 1 (< 2^24 grid units), the f32 exactness bound
+    g = jnp.asarray(np.round(rng.normal(size=(C, n)) * 2 ** 19) * GRID,
+                    jnp.float32)
+    r = jnp.zeros_like(g)
+    # p=-0.5, q=1.0 keeps mask values on the grid with |mask| <= 0.5
+    sa = SecureAggConfig(mask_ratio=0.25, p=-0.5, q=1.0, seed=seed)
+    km = sa.k_mask_for(n, C)
+    pk, ps = streams.pair_seed_matrix(sa, list(range(C)), round_t=seed)
+    dpc = dp.DPConfig(clip=1.0, sigma=0.5, delta=1e-5, seed=seed)
+    sigma_c = 0.01                                  # |noise| < ~0.07 at 7 sd
+    dp_seeds = jnp.asarray(dpc.client_seeds(seed, list(range(C))))
+    enc = dict(k=k, nb=1, m=n, size=n, pair_seeds=pk, pair_signs=ps,
+               k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
+    st_p, nr_p = streams.encode_leaf_batch(g, r, **enc)
+    st_n, nr_n = streams.encode_leaf_batch(
+        g, r, dp_sigma=sigma_c, dp_seeds=dp_seeds, **enc)
+    # noise never touches indices or residuals
+    assert np.array_equal(np.asarray(st_n.indices), np.asarray(st_p.indices))
+    assert np.array_equal(np.asarray(nr_n), np.asarray(nr_p))
+    # every stream value is still an exact grid multiple: no f32 add rounded
+    units = np.asarray(st_n.values, np.float64) / GRID
+    assert np.array_equal(units, np.round(units)), "f32 encode left the grid"
+    noise = (np.asarray(st_n.values, np.float64)
+             - np.asarray(st_p.values, np.float64))
+    assert float(np.abs(noise).max()) > 0.0
+    # --- full cohort: masks cancel exactly under the noise ---------------
+    transmitted = (np.asarray(g, np.float64)
+                   - np.asarray(nr_n, np.float64))   # per-client g-parts
+    full = _scatter64(st_n.indices, st_n.values, n)
+    noise_sum = _scatter64(st_n.indices, noise, n)
+    assert np.array_equal(full, transmitted.sum(0) + noise_sum)
+    # --- survivor subsets >= t, with mask recovery -----------------------
+    t = sa.t_for(C)
+    for dead in ((), (1,), (0, 3)):
+        alive_np = np.array([c not in dead for c in range(C)])
+        assert int(alive_np.sum()) >= t
+        alive = jnp.asarray(alive_np)
+        # oracle: survivors' streams minus their reconstructed masks toward
+        # the dead (recomputed independently from the seed matrix rows)
+        m_idx, m_vals = streams.mask_streams_rows(
+            pk, ps, 1, km, n, p=sa.p, q=sa.q, leaf_id=0)
+        mi = np.asarray(m_idx).reshape(C, C, km)     # [client, peer, k_mask]
+        mv = np.asarray(m_vals, np.float64).reshape(C, C, km)
+        oracle = np.zeros(n, np.float64)
+        for c in range(C):
+            if not alive_np[c]:
+                continue
+            oracle += _scatter64(st_n.indices[c], st_n.values[c], n)
+            for j in dead:
+                oracle -= _scatter64(mi[c, j], mv[c, j], n)
+        dec = np.asarray(streams.decode_leaf_batch(
+            st_n, nb=1, m=n, size=n, alive=alive, pair_seeds=pk,
+            pair_signs=ps, k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0),
+            np.float64)
+        # the survivors' pairwise masks cancel exactly in the f64 oracle:
+        # what remains is exactly their g-parts plus their noise
+        surv_noise = sum(_scatter64(st_n.indices[c], noise[c], n)
+                         for c in range(C) if alive_np[c])
+        expected = transmitted[alive_np].sum(0) + surv_noise
+        assert np.array_equal(oracle, expected)
+        # and the real f32 decode matches the oracle to scatter-order ulps
+        np.testing.assert_allclose(dec, oracle, rtol=0, atol=2 ** -20)
+
+
+# --------------------------------------------------- sigma=0 == plain secagg
+_DP_TINY = SimConfig(
+    name="dp_tiny", partition="noniid", noniid_k=4, n_clients=5,
+    clients_per_round=3, rounds=4, n_train=300, n_test=120,
+    local_steps=2, local_batch=8, eval_every=1,
+    thgs=THGSConfig(s0=0.1, alpha=0.9, s_min=0.02),
+    sa=SecureAggConfig(mask_ratio=0.02), dropout_rate=0.25, seed=3)
+
+
+def test_sim_sigma0_clip_inf_bit_identical_to_secagg():
+    """A DPConfig() (sigma=0, clip=inf) run is bit-identical to dp=None —
+    params, losses, accuracies and the full CommLedger (same style as the
+    tau=0 async and tree==flat guarantees)."""
+    s0 = Simulation(_DP_TINY)
+    r0 = s0.run(resume=False)
+    s1 = Simulation(_DP_TINY.replace(dp=dp.DPConfig()))
+    r1 = s1.run(resume=False)
+    for a, b in zip(jax.tree_util.tree_leaves(s0.state.params),
+                    jax.tree_util.tree_leaves(s1.state.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert r0.losses == r1.losses
+    assert r0.accuracies == r1.accuracies
+    assert r0.ledger.entries == r1.ledger.entries
+    assert "privacy" not in r0.ledger.summary()
+    assert "privacy" not in r1.ledger.summary()     # inactive dp: no block
+
+
+def test_sim_dp_run_has_privacy_ledger_and_same_wire_bits():
+    """Noised DP perturbs values only: the bit accounting is identical to the
+    same run without DP, and the ledger gains a finite composed epsilon."""
+    cfg = _DP_TINY.replace(dp=dp.DPConfig(clip=1.0, sigma=0.6, delta=1e-5))
+    r_dp = Simulation(cfg).run(resume=False)
+    r_plain = Simulation(_DP_TINY).run(resume=False)
+    pb = costs.PAPER_BITS
+    # round 0 starts from identical params, so its slot counts match exactly:
+    # the noise itself costs zero wire bits (it rides existing stream slots).
+    # Later rounds' top-k counts drift — Eq. 2's schedule adapts to the loss
+    # trajectory, which the noised aggregate shifts — but the mask plane and
+    # the secagg control traffic stay bit-for-bit identical throughout.
+    e0_dp, e0_pl = r_dp.ledger.entries[0], r_plain.ledger.entries[0]
+    assert e0_dp.ks == e0_pl.ks
+    assert e0_dp.upload_bits(pb) == e0_pl.upload_bits(pb)
+    for e_dp, e_pl in zip(r_dp.ledger.entries, r_plain.ledger.entries):
+        assert e_dp.k_masks == e_pl.k_masks
+        assert e_dp.share_upload_bits(pb) == e_pl.share_upload_bits(pb)
+        assert e_dp.dp_sigma == 0.6 and e_dp.dp_clip == 1.0
+        assert e_dp.dp
+    priv = r_dp.ledger.privacy()
+    assert priv is not None
+    assert math.isfinite(priv["epsilon"]) and priv["epsilon"] > 0
+    assert priv["delta"] == 1e-5
+    assert priv["rounds"] == cfg.rounds
+    assert len(priv["per_round"]) == cfg.rounds
+    # survivor-aware z_eff never exceeds the configured z
+    assert all(0 < p["z_eff"] <= 0.6 + 1e-12 for p in priv["per_round"])
+    assert "privacy" in r_dp.ledger.summary()
+
+
+def test_sim_dp_resume_replays_noise_bit_identically(tmp_path):
+    """Kill mid-horizon, resume from the checkpoint: the per-round noise
+    seeds are a pure function of (dp seed, round, client), so the resumed
+    run's params are bit-identical to the uninterrupted run's."""
+    cfg = _DP_TINY.replace(
+        dp=dp.DPConfig(clip=1.0, sigma=0.6, delta=1e-5),
+        ckpt_dir=str(tmp_path / "ck"), ckpt_every=1)
+
+    class _Killed(Exception):
+        pass
+
+    def die_after_round_1(r, info):
+        if r == 1:
+            raise _Killed
+
+    with pytest.raises(_Killed):
+        Simulation(cfg).run(hooks=[die_after_round_1])
+    s_res = Simulation(cfg)
+    r_res = s_res.run()
+    s_full = Simulation(cfg.replace(ckpt_dir=None, ckpt_every=0))
+    r_full = s_full.run(resume=False)
+    for a, b in zip(jax.tree_util.tree_leaves(s_res.state.params),
+                    jax.tree_util.tree_leaves(s_full.state.params)):
+        assert np.array_equal(np.asarray(a), np.asarray(b))
+    assert r_res.ledger.entries == r_full.ledger.entries
+    assert r_res.ledger.privacy() == r_full.ledger.privacy()
+
+
+# --------------------------------------------------------------- accountant
+def test_accountant_values_and_monotonicity():
+    eps1 = dp.compose_epsilon([1.0], 1e-5)
+    assert 3.0 < eps1 < 6.0                  # z=1, delta=1e-5: ~5.3 on grid
+    assert dp.round_epsilon(1.0, 1e-5) == eps1
+    eps8 = dp.compose_epsilon([1.0] * 8, 1e-5)
+    assert eps8 > eps1                       # more rounds cost more
+    assert dp.compose_epsilon([2.0], 1e-5) < eps1    # more noise costs less
+    assert dp.compose_epsilon([0.0], 1e-5) == math.inf   # no noise: not DP
+    assert dp.compose_epsilon([1.0, 0.0], 1e-5) == math.inf
+    assert dp.compose_epsilon([], 1e-5) == 0.0
+    with pytest.raises(ValueError):
+        dp.compose_epsilon([1.0], 0.0)
+    assert dp.gaussian_rdp(1.0, 2.0) == 1.0
+    assert dp.gaussian_rdp(0.0, 2.0) == math.inf
+
+
+def test_ledger_privacy_survivor_aware_and_json_roundtrip(tmp_path):
+    led = CommLedger()
+    for t, surv in enumerate((4, 3, 4)):
+        led.record(costs.round_record(
+            t, model_size=1000, ks=[8], k_masks=[2], n_clients=4,
+            n_survivors=surv, threshold=3, dp_clip=1.0, dp_sigma=0.8,
+            dp_delta=1e-5))
+    e = led.entries[1]
+    assert e.dp_z_eff() == pytest.approx(0.8 * math.sqrt(3 / 4))
+    priv = led.privacy()
+    assert priv["noise_multiplier"] == 0.8 and priv["clip"] == 1.0
+    # dropout rounds realize less sum-noise -> worse (larger) epsilon than
+    # the full-cohort composition of the same z
+    full_eps = dp.compose_epsilon([0.8] * 3, 1e-5)
+    assert priv["epsilon"] > full_eps
+    path = led.to_json(str(tmp_path / "led.json"))
+    data = json.loads(open(path).read())["ledger"]
+    assert data["privacy"]["epsilon"] == pytest.approx(priv["epsilon"])
+    # entries -> ledger roundtrip keeps the dp facts
+    led2 = CommLedger.from_entry_dicts(data["entries"])
+    assert led2.privacy()["epsilon"] == pytest.approx(priv["epsilon"])
+    assert [e.dp_sigma for e in led2.entries] == [0.8] * 3
+
+
+# ------------------------------------------------------------ config gating
+def test_simconfig_dp_rejections():
+    base = _DP_TINY.replace(dp=dp.DPConfig(clip=1.0, sigma=0.5))
+    base.validate()
+    with pytest.raises(ValueError, match="dp requires THGS"):
+        base.replace(thgs=None, sa=SecureAggConfig(enabled=False)).validate()
+    with pytest.raises(ValueError, match="cannot carry DP noise"):
+        base.replace(codec="int8",
+                     sa=SecureAggConfig(enabled=False)).validate()
+    with pytest.raises(ValueError, match="mode='async'"):
+        base.replace(mode="async", dropout_rate=0.0,
+                     sa=SecureAggConfig(enabled=False)).validate()
+    with pytest.raises(ValueError, match="weight_by_data_count"):
+        base.replace(weight_by_data_count=True).validate()
+    with pytest.raises(ValueError, match="finite dp.clip"):
+        base.replace(dp=dp.DPConfig(sigma=0.5)).validate()
+    # clip-only DP (no noise) is allowed and composes to epsilon=inf
+    base.replace(dp=dp.DPConfig(clip=1.0)).validate()

@@ -99,6 +99,20 @@ GOOD = {
             "    return x\n"
         ),
     ),
+    "RPL007": (
+        "src/repro/sim/sidecar.py",
+        (
+            "import json\n"
+            "import os\n"
+            "\n"
+            "\n"
+            "def write(path, obj):\n"
+            "    tmp = path + '.tmp'\n"
+            "    with open(tmp, 'w') as f:\n"
+            "        json.dump(obj, f)\n"
+            "    os.replace(tmp, path)\n"
+        ),
+    ),
 }
 
 BAD = {
@@ -180,6 +194,17 @@ BAD = {
             "    if x > 0:\n"
             "        return x * k\n"
             "    return x\n"
+        ),
+    ),
+    "RPL007": (
+        "src/repro/sim/sidecar.py",
+        (
+            "import json\n"
+            "\n"
+            "\n"
+            "def write(path, obj):\n"
+            "    with open(path, 'w') as f:\n"
+            "        json.dump(obj, f)\n"
         ),
     ),
 }
@@ -313,6 +338,45 @@ def test_rpl006_static_argnames_and_is_none_pass():
 def test_rpl006_undecorated_functions_out_of_scope():
     source = "def f(x):\n    if x > 0:\n        return x\n    return -x\n"
     assert lint.lint_source(source, path="src/repro/core/free.py") == []
+
+
+def test_rpl007_tmp_spellings_all_pass():
+    # the four tmp-path spellings the codebase actually uses: literal,
+    # f-string, string concatenation, and a name resolved through a simple
+    # assignment chain
+    for body in (
+        "with open('/tmp/x.json.tmp', 'w') as f:\n    json.dump(obj, f)\n",
+        "with open(f'{path}.tmp', 'w') as f:\n    json.dump(obj, f)\n",
+        "with open(path + '.tmp', 'w') as f:\n    json.dump(obj, f)\n",
+        "tmp = path + '.tmp'\nwith open(tmp, 'w') as f:\n"
+        "    json.dump(obj, f)\n",
+    ):
+        source = "import json\n\npath = 'out.json'\nobj = {}\n" + body
+        assert lint.lint_source(source, path="src/repro/sim/w.py",
+                                select={"RPL007"}) == [], body
+
+
+def test_rpl007_read_mode_and_fp_kwarg():
+    # reads are never flagged; dump(fp=...) into a bare-path handle is
+    src = ("import json\n\n"
+           "def load(path):\n"
+           "    with open(path) as f:\n"
+           "        return json.load(f)\n")
+    assert lint.lint_source(src, path="src/repro/sim/r.py",
+                            select={"RPL007"}) == []
+    src = ("import json\n\n"
+           "def write(path, obj):\n"
+           "    with open(path, mode='w') as f:\n"
+           "        json.dump(obj, fp=f)\n")
+    findings = lint.lint_source(src, path="src/repro/sim/w.py",
+                                select={"RPL007"})
+    assert [f.check for f in findings] == ["RPL007"]
+
+
+def test_rpl007_test_files_exempt():
+    _, source = BAD["RPL007"]
+    assert lint.lint_source(source, path="tests/test_sidecar.py",
+                            select={"RPL007"}) == []
 
 
 # ------------------------------------------------------------ suppressions

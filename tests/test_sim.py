@@ -56,6 +56,15 @@ def test_sampler_dropout_keeps_one_survivor():
         assert len(dropped) == len(cohort) - 1         # one always survives
 
 
+def test_sampler_rejects_negative_weights():
+    # a negative weight would silently skew (or crash) the normalized
+    # selection probabilities many rounds later; fail at construction
+    weights = {c: 1.0 for c in range(6)}
+    weights[4] = -0.5
+    with pytest.raises(ValueError, match="negative weight"):
+        ClientSampler(6, 3, mode="weighted", weights=weights, seed=0)
+
+
 # -------------------------------------------------------------------- ledger
 def _linreg_model(dim):
     params = {"b": jnp.zeros((1,)), "w": jnp.zeros((dim, 1))}
@@ -226,6 +235,24 @@ def test_engine_resume_skips_orphaned_checkpoint(tmp_path):
     # simulate a crash between the step-2 npz write and its sidecar write
     os.remove(ck + "/sim_00000002.json")
     resumed = Simulation(cfg).run()            # resumes from step 1
+    assert len(resumed.ledger) == 2
+    assert resumed.ledger.entries == full.ledger.entries
+    np.testing.assert_allclose(resumed.losses, full.losses, rtol=1e-6)
+
+
+def test_engine_resume_falls_back_past_truncated_sidecar(tmp_path):
+    ck = str(tmp_path / "ck")
+    cfg = _TINY.replace(rounds=2, ckpt_dir=ck, ckpt_every=1)
+    full = Simulation(cfg).run()
+    # simulate the pre-atomic-write failure mode: a crash mid-dump left the
+    # newest sidecar truncated-but-present; resume must warn, skip it, and
+    # fall back to the step-1 pair instead of dying inside json.load
+    sidecar = ck + "/sim_00000002.json"
+    blob = open(sidecar).read()
+    with open(sidecar, "w") as f:
+        f.write(blob[: len(blob) // 2])
+    with pytest.warns(RuntimeWarning, match="sidecar"):
+        resumed = Simulation(cfg).run()        # resumes from step 1
     assert len(resumed.ledger) == 2
     assert resumed.ledger.entries == full.ledger.entries
     np.testing.assert_allclose(resumed.losses, full.losses, rtol=1e-6)
