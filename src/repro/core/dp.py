@@ -1,28 +1,45 @@
 """Distributed differential privacy under secure aggregation (DESIGN.md §15).
 
 The DP plane composes with the sparse secagg data plane without touching the
-wire format: each client clips its local model delta to a global L2 bound
-``S`` (``DPConfig.clip``) and adds discrete Gaussian noise *under* its pair
-masks, on the transmitted slots of its unified stream. The noise values are
-drawn on the same f32-exact 2^-24 grid as the pair masks
-(``kernels/ref.dp_noise_stream_ref``), so masks cancel and noise survives
-exactly in the server's scatter-add — the server only ever sees the noised
-sum, and the noise adds ZERO wire bits (it rides the existing stream slots).
+wire format. Per round, each client:
+
+1. **clips** the encoder's actual input — its error-feedback accumulator
+   ``residual + delta`` — to a global L2 bound ``S`` (``DPConfig.clip``), so
+   the bound covers the *full stream the client emits*, error feedback
+   included (the residual carries clipped-but-untransmitted mass forward;
+   it re-enters next round's accumulator and is clipped again);
+2. releases gradient values ONLY on the round's **common public support**
+   (``kernels/ref.dp_support_stream_ref``) — ``k`` positions per block drawn
+   from (dp seed, round, leaf), identical for every client and independent
+   of the data, so the transmitted indices leak nothing (a data-dependent
+   top-k support would be unaccounted leakage, and would leave coordinates
+   in only one client's support carrying a single client's noise). Pair-mask
+   slots carry *masks only* — no gradient values ride them under DP;
+3. adds grid-rounded Gaussian noise to each released slot *under* its pair
+   masks. Noise is drawn on the same f32-exact 2^-24 grid as the masks
+   (``kernels/ref.dp_noise_stream_ref``), so masks cancel and noise survives
+   exactly in the server's scatter-add — the server only ever sees the
+   noised sum, and the noise adds ZERO wire bits.
 
 Per-client noise is ``sigma_client = z * S / sqrt(C)`` with noise multiplier
-``z = DPConfig.sigma`` over a ``C``-client cohort, so the *sum* over a full
-cohort carries noise ``z * S`` — the distributed-DP analogue of the central
-Gaussian mechanism (Byrd & Polychroniadou 2020; Beguier et al. 2020 for the
-grid/quantized composition). With ``d`` survivors the realized sum noise is
-``z * S * sqrt(d / C)``; the accountant uses that survivor-aware effective
-multiplier per round (``CommLedger.privacy``).
+``z = DPConfig.sigma`` over a ``C``-client cohort. Because every survivor
+releases (and noises) the very same support, EVERY released coordinate of
+the sum carries all ``d`` survivors' noise: stddev ``z * S * sqrt(d / C)``
+against per-client sensitivity ``S`` — the distributed-DP analogue of the
+central Gaussian mechanism (Byrd & Polychroniadou 2020; Beguier et al. 2020
+for the grid/quantized composition), valid against an honest-but-curious
+server that observes only the masked sum. The accountant composes over the
+survivor-aware multiplier ``z_eff = z * sqrt(d / C)`` per round
+(``CommLedger.privacy``); uniform client weights are required and enforced
+(a weighted stream would scale a contribution past ``S``).
 
 Replayability: noise seeds are derived host-side per (dp seed, round, client)
-via sha256 (:meth:`DPConfig.client_seeds` — the same derivation discipline as
+and the support seed per (dp seed, round) via sha256 (:meth:`DPConfig
+.client_seeds` / :meth:`DPConfig.support_seed` — the derivation discipline of
 ``masks.pair_seed``) and folded with the leaf id in-trace, so a resumed sim
-replays the identical noise stream from config + round index alone, and the
-client-sharded round slices the same seed rows the serial round uses
-(bit-identical by construction).
+replays the identical noise and support streams from config + round index
+alone, and the client-sharded round slices the same seed rows the serial
+round uses (bit-identical by construction).
 
 ``sigma == 0`` and ``clip == inf`` statically skip every DP op, making such
 rounds bit-identical to plain secagg rounds (property-tested in
@@ -105,15 +122,36 @@ class DPConfig:
             out[i] = int.from_bytes(h[:4], "little")
         return out
 
+    def support_seed(self, round_t: int) -> np.uint32:
+        """uint32 seed of one round's PUBLIC common release support.
+
+        A pure function of (dp seed, round) — shared by the whole cohort and
+        independent of any client's data, so the support indices the stream
+        transmits under DP noise release nothing
+        (``kernels/ref.dp_support_stream_ref`` folds the leaf id in-trace).
+        """
+        h = hashlib.sha256(
+            f"dpsupport:{self.seed}:{round_t}".encode()).digest()
+        # np.uint32, not int: the seed crosses jit boundaries as a traced
+        # scalar, and a Python int above 2^31 overflows the weak-int32 parse
+        return np.uint32(int.from_bytes(h[:4], "little"))
+
 
 # ------------------------------------------------------------------ clipping
 @functools.partial(jax.jit, static_argnames=("clip",))
 def clip_client_updates(updates: PyTree, *, clip: float) -> PyTree:
-    """Per-client global-L2 clip of stacked client updates (leading axis C).
+    """Per-client global-L2 clip of stacked client trees (leading axis C).
 
-    ``factor = min(1, clip / norm)`` over each client's full delta tree.
+    ``factor = min(1, clip / norm)`` over each client's full tree, norm and
+    scaling computed in f32 (the engine's working precision — DESIGN.md §15).
     Clients already inside the bound get factor exactly 1.0, and ``x * 1.0``
     is a bitwise no-op in f32 — so clipping never perturbs compliant clients.
+
+    Under DP the server (fedavg.run_round) clips the error-feedback
+    accumulator ``residual + delta`` — the encoder's actual input — not the
+    fresh delta alone: error feedback accumulates untransmitted mass across
+    rounds, so only clipping what the encoder consumes bounds the L2 norm of
+    the stream a client actually emits by ``clip``.
     """
     leaves = jax.tree_util.tree_leaves(updates)
     sq = sum(
@@ -131,52 +169,50 @@ def clip_client_updates(updates: PyTree, *, clip: float) -> PyTree:
 
 
 # ------------------------------------------------------------ noise injection
-def noise_slot_gate(pair_signs: jax.Array | None, k_eff: int, k_mask: int):
-    """f32[..., k_total] gate: 1 on transmitted slots, 0 on gated self slots.
-
-    The unified stream's slot layout is ``[k_eff top-k][C pairs x k_mask]``;
-    the self-pair block (sign 0) is value-gated to zero and support-gated onto
-    the top-1 index — it never reaches the wire, so it must carry no noise
-    (noise there would double-count onto the top-1 position and break the
-    k + (C-1)*k_mask wire accounting). ``pair_signs`` may be the full [C, C]
-    matrix or a sliced rows view (sharded path); None/k_mask==0 means every
-    slot is a transmitted top-k slot (returns None: no gating needed).
-    """
-    if pair_signs is None or k_mask <= 0:
-        return None
-    active = (jnp.asarray(pair_signs, jnp.float32) != 0.0)
-    mask_gate = jnp.repeat(active, k_mask, axis=-1).astype(jnp.float32)
-    top = jnp.ones(mask_gate.shape[:-1] + (k_eff,), jnp.float32)
-    return jnp.concatenate([top, mask_gate], axis=-1)
-
-
 def add_stream_noise(
     values: jax.Array,          # f32[..., nb, k_total] batched stream values
     dp_seeds: jax.Array,        # uint32[...] per-client noise seeds
     *,
     sigma: float,               # per-client noise stddev (sigma_client)
     leaf_id,
-    pair_signs: jax.Array | None = None,
-    k_eff: int = 0,
-    k_mask: int = 0,
+    k_data: int,                # released (common-support) slots per block
 ) -> jax.Array:
     """Inject grid-exact Gaussian noise into a batched stream's values.
 
-    One noise draw per transmitted slot, under the pair masks (the noise is
-    added to the same f32 values the masks were added to, before any gather),
-    drawn from the per-(round, client) counter stream folded with the leaf id
-    — exactly the pair-mask stream discipline, so serial/sharded/resumed
+    One noise draw per *released* slot — the leading ``k_data`` common-
+    support slots of each block, the only slots that carry gradient values
+    under DP (module docstring). Mask slots carry masks only and stay
+    noise-free: their contributions cancel pairwise in the aggregate, so
+    noise there would add error without adding privacy. The noise is added
+    under the pair masks (to the same f32 values the masks were added to),
+    drawn from the per-(round, client) counter stream folded with the leaf
+    id — exactly the pair-mask stream discipline, so serial/sharded/resumed
     rounds agree bit for bit.
     """
     from repro.kernels import ref as kref
 
     seeds = kref.fold_leaf_seed(jnp.asarray(dp_seeds, jnp.uint32), leaf_id)
     noise = kref.dp_noise_stream_ref(
-        seeds, values.shape[-2], values.shape[-1], sigma=float(sigma))
-    gate = noise_slot_gate(pair_signs, k_eff, k_mask)
-    if gate is not None:
-        noise = noise * gate[..., None, :]
+        seeds, values.shape[-2], int(k_data), sigma=float(sigma))
+    pad = values.shape[-1] - int(k_data)
+    if pad:
+        noise = jnp.concatenate(
+            [noise, jnp.zeros(noise.shape[:-1] + (pad,), noise.dtype)], -1)
     return values + noise
+
+
+def common_support(support_seed, nb: int, k: int, m: int,
+                   leaf_id) -> jax.Array:
+    """int32[nb, k] PUBLIC common release support for one (round, leaf).
+
+    Folds the leaf id into the round's support seed in-trace (the pair-seed
+    discipline) and draws the shared indices every client of the round
+    releases on (``kernels/ref.dp_support_stream_ref``).
+    """
+    from repro.kernels import ref as kref
+
+    seed = kref.fold_leaf_seed(jnp.asarray(support_seed, jnp.uint32), leaf_id)
+    return kref.dp_support_stream_ref(seed, nb, k, m)
 
 
 def reject_codec_with_noise(codec: str, sigma: float) -> None:

@@ -228,13 +228,17 @@ def run_round(
     dropout recovery, for any group count. Requires THGS.
 
     ``dp`` takes a ``core.dp.DPConfig`` (DESIGN.md §15): per-client global-L2
-    clipping of the local deltas plus grid-exact Gaussian noise on every
-    transmitted stream slot, injected under the pair masks, seeded per
-    (round, client) so resume replays it. Requires THGS and the f32 codec;
-    the sensitivity calibration assumes uniform client weights (the sim
-    config rejects ``weight_by_data_count`` with DP). ``None`` or an
-    inactive config (``clip=inf, sigma=0``) leaves the round bit-identical
-    to the pre-DP path.
+    clipping of the error-feedback accumulator ``residual + delta`` (the
+    encoder's actual input, so the bound covers the full emitted stream),
+    and with ``sigma > 0`` the round releases gradient values on a PUBLIC
+    common support (no data-dependent index leakage) with grid-exact
+    Gaussian noise on every released slot, injected under the pair masks and
+    seeded per (round, client) so resume replays it. Requires THGS, the f32
+    codec, and uniform client weights — non-uniform ``client_weights`` are
+    rejected here (a weighted stream would scale a contribution past the
+    clip bound S), mirroring the sim config's ``weight_by_data_count``
+    rejection. ``None`` or an inactive config (``clip=inf, sigma=0``) leaves
+    the round bit-identical to the pre-DP path.
 
     All participants' batch pytrees must share one structure and one set of
     array shapes (they are stacked on a leading client axis for the batched
@@ -256,6 +260,13 @@ def run_round(
         from repro.core.dp import reject_codec_with_noise
 
         reject_codec_with_noise(codec, dp.sigma)
+        if client_weights and any(
+                float(w) != 1.0 for w in client_weights.values()):
+            raise ValueError(
+                "dp requires uniform client weights: weights scale the "
+                "stream values before masking, so a weight != 1.0 would "
+                "scale that client's contribution past the clip bound S "
+                "the accountant calibrates noise against")
     participants = sorted(client_batches.keys())
     C = len(participants)
     sharded = se.can_shard_clients(mesh, C)
@@ -301,19 +312,14 @@ def run_round(
     losses_list = [float(x) for x in losses]
 
     if thgs is not None:
-        if dp_active and dp.clips:
-            # per-client global-L2 clip of the whole delta tree, BEFORE the
-            # per-leaf encode loop: the sensitivity bound S covers the full
-            # update (core/dp.py; compliant clients scale by exactly 1.0)
-            from repro.core.dp import clip_client_updates
-
-            deltas_stacked = clip_client_updates(
-                deltas_stacked, clip=float(dp.clip))
-        # per-(round, client) noise seeds, derived host-side so the stream is
-        # replayable from config + round alone (resume, sharded parity)
+        # per-(round, client) noise seeds and the round's public common-
+        # support seed, derived host-side so the stream is replayable from
+        # config + round alone (resume, sharded parity)
         dp_sigma_c = dp.sigma_client(C) if dp_active else 0.0
+        dp_noised = dp_active and dp.noised
         dp_seeds = (jnp.asarray(dp.client_seeds(state.round, participants))
-                    if dp_active and dp.noised else None)
+                    if dp_noised else None)
+        dp_sup_seed = dp.support_seed(state.round) if dp_noised else 0
         # Eq. 2's beta from the federation-mean loss trajectory: one static
         # per-leaf k for the whole batched round (per-client k would make the
         # stacked stream shapes ragged — see DESIGN.md §3).
@@ -349,6 +355,23 @@ def run_round(
                           for c in participants]
         res_stacked = [jnp.stack([rl[i] for rl in res_per_client])
                        for i in range(len(leaves))]
+        if dp_active and dp.clips:
+            # per-client global-L2 clip of the ENCODER INPUT — the error-
+            # feedback accumulator residual + delta — so the sensitivity
+            # bound S holds for the full stream the client emits (the
+            # residual carries untransmitted mass across rounds; clipping
+            # the fresh delta alone would not bound it). The clipped
+            # accumulator becomes the encode's update with a zeroed residual
+            # source; compliant clients scale by exactly 1.0 (core/dp.py).
+            from repro.core.dp import clip_client_updates
+
+            acc_tree = jax.tree_util.tree_unflatten(
+                treedef,
+                [d.astype(jnp.float32) + r.astype(jnp.float32)
+                 for d, r in zip(delta_leaves, res_stacked)])
+            delta_leaves = jax.tree_util.tree_leaves(
+                clip_client_updates(acc_tree, clip=float(dp.clip)))
+            res_stacked = [jnp.zeros_like(r) for r in res_stacked]
         if sharded:
             res_stacked = [se.shard_client_tree(r, mesh) for r in res_stacked]
 
@@ -373,7 +396,8 @@ def run_round(
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
                     leaf_id=leaf_id, weights=w_vec, codec=codec,
                     topology=topology, tree_groups=groups,
-                    dp_sigma=dp_sigma_c, dp_seeds=dp_seeds)
+                    dp_sigma=dp_sigma_c, dp_seeds=dp_seeds,
+                    dp_support_seed=dp_sup_seed)
             else:
                 # ---- 2. batched unified-stream encode (all clients, one
                 # jit) ----
@@ -383,7 +407,8 @@ def run_round(
                     pair_seeds=pair_seeds, pair_signs=pair_signs,
                     k_mask=k_mask, mask_p=sa.p, mask_q=sa.q,
                     leaf_id=leaf_id, weights=w_vec, codec=codec,
-                    dp_sigma=dp_sigma_c, dp_seeds=dp_seeds)
+                    dp_sigma=dp_sigma_c, dp_seeds=dp_seeds,
+                    dp_support_seed=dp_sup_seed)
                 # ---- 3. fused scatter-add decode + dropout recovery ----
                 if topology == "tree":
                     dense = se.decode_leaf_tree(

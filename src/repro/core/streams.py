@@ -137,6 +137,7 @@ def unified_stream_rows(
     selector: str = "exact",
     sample_frac: float = 0.01,
     weight: jax.Array | float = 1.0,
+    dp_support: jax.Array | None = None,  # int32[n_blocks, k] public support
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One client, one leaf: ``top-k(|acc|) ∪ support(mask)`` unified stream.
 
@@ -146,10 +147,20 @@ def unified_stream_rows(
     (duplicate indices transmit the gradient once; mask values ride in their
     dedicated slots), and ``new_acc`` zeroes every transmitted position —
     including mask-support positions below the top-k threshold.
+
+    ``dp_support`` switches the stream into its DP release shape (core/dp.py,
+    DESIGN.md §15): the k data slots release the *public common support*
+    instead of the data-dependent top-k (the transmitted indices leak
+    nothing), mask slots carry masks ONLY (no gradient values ride them),
+    and ``new_acc`` zeroes only the released support positions — everything
+    else stays in the error-feedback residual.
     """
     nb, m = acc.shape
     k = int(min(k, m))
-    idx_t = select_topk_rows(acc, k, selector, sample_frac)
+    if dp_support is not None:
+        idx_t = dp_support
+    else:
+        idx_t = select_topk_rows(acc, k, selector, sample_frac)
     if mask_idx is not None and mask_idx.shape[-1] > 0:
         idx = jnp.concatenate([idx_t, mask_idx], -1)
         mvals = jnp.concatenate(
@@ -159,10 +170,18 @@ def unified_stream_rows(
         mvals = jnp.zeros((nb, k), jnp.float32)
 
     first = first_occurrence_rows(idx)
+    if dp_support is not None:
+        # DP: gradient values are released on the support slots alone; a mask
+        # slot that happens to be the first occurrence of its index must not
+        # smuggle the (un-noised) gradient value out beside the masks
+        data_slot = jnp.concatenate(
+            [jnp.ones((nb, k), bool),
+             jnp.zeros((nb, idx.shape[-1] - k), bool)], -1)
+        first = first & data_slot
     gvals = jnp.take_along_axis(acc, idx, -1)
     vals = weight * gvals * first.astype(acc.dtype) + mvals
     rows = jnp.arange(nb)[:, None]
-    new_acc = acc.at[rows, idx].set(0.0)
+    new_acc = acc.at[rows, idx_t if dp_support is not None else idx].set(0.0)
     return idx, vals, new_acc
 
 
@@ -386,6 +405,7 @@ def encode_client_blocks(
     mask_q: float = 2.0,
     leaf_id: int | jax.Array | None = None,
     weight: jax.Array | float = 1.0,
+    dp_support: jax.Array | None = None,
 ) -> tuple[jax.Array, jax.Array, jax.Array]:
     """One client's full encode: pairwise masks + unified stream, block view.
 
@@ -395,7 +415,9 @@ def encode_client_blocks(
     (global_idx int32[nb, k_total], vals, new_acc). ``global_idx`` is
     ``row*m + col`` — flat into the padded block space (equals the flat leaf
     index when nb == 1). vmap-polymorphic: both the batched entry below and the
-    shard_map datacenter path (traced self_id) call this.
+    shard_map datacenter path (traced self_id) call this. ``dp_support``
+    switches the data slots onto the round's public common support
+    (``unified_stream_rows``; core/dp.py).
     """
     nb, m = acc.shape
     if mask_idx is not None and k_mask > 0:
@@ -406,7 +428,7 @@ def encode_client_blocks(
             p=mask_p, q=mask_q, leaf_id=leaf_id)
     else:
         m_idx = m_vals = None
-    if m_idx is not None:
+    if m_idx is not None and dp_support is None:
         # Inactive (self) slots carry zero mask value; point their support
         # at the block's top-1 position so first-occurrence gating zeroes
         # the slot entirely — a random support index there would transmit
@@ -414,9 +436,13 @@ def encode_client_blocks(
         top1 = jnp.argmax(jnp.abs(acc), -1).astype(jnp.int32)[:, None]
         col_active = jnp.repeat(pair_signs_row != 0.0, k_mask)[None, :]
         m_idx = jnp.where(col_active, m_idx, top1)
+    # Under DP (dp_support set) mask slots carry no gradient values at all,
+    # so the self slot is silent at its raw counter-drawn index already — and
+    # the top-1 override above would leak argmax(|acc|) through a transmitted
+    # index, which the public-support release exists to prevent.
     idx, vals, new_acc = unified_stream_rows(
         acc, k, m_idx, m_vals, selector=selector,
-        sample_frac=sample_frac, weight=weight)
+        sample_frac=sample_frac, weight=weight, dp_support=dp_support)
     rows = jnp.arange(nb, dtype=jnp.int32)[:, None]
     return (rows * m + idx).astype(jnp.int32), vals, new_acc
 
@@ -435,6 +461,7 @@ def encode_batch_blocks(
     mask_q: float = 2.0,
     leaf_id: int | jax.Array | None = None,
     weights: jax.Array | None = None,     # f32[C] client-side gradient weights
+    dp_support: jax.Array | None = None,  # int32[nb, k] public common support
 ) -> tuple[StreamBatch, jax.Array]:
     """Batched client encode: all clients of a round in one vmapped program.
 
@@ -445,7 +472,8 @@ def encode_batch_blocks(
     row*m + col, new_acc [C, nb, m]). The caller owns the block view
     (``to_blocks``/``from_blocks`` or the sharding-aligned transform of
     core/blocked.py) and the error-feedback accumulate ``acc = residual +
-    update``.
+    update``. ``dp_support`` (one support, shared by every client — that is
+    the point) routes the encode through the DP release shape (core/dp.py).
     """
     C, nb, m = acc.shape
     if weights is None:
@@ -464,7 +492,8 @@ def encode_batch_blocks(
                 acc_c, k, selector=selector, sample_frac=sample_frac,
                 mask_idx=m_idx_c, mask_vals=m_vals_c,
                 pair_signs_row=signs_row, k_mask=k_mask,
-                mask_p=mask_p, mask_q=mask_q, weight=w_c)
+                mask_p=mask_p, mask_q=mask_q, weight=w_c,
+                dp_support=dp_support)
 
         gidx, vals, new_acc = jax.vmap(one_seeded)(
             acc, m_idx, m_vals, pair_signs, weights)
@@ -475,7 +504,7 @@ def encode_batch_blocks(
             acc_c, k, selector=selector, sample_frac=sample_frac,
             pair_keys_row=keys_row, pair_signs_row=signs_row,
             k_mask=k_mask if use_keys else 0, mask_p=mask_p, mask_q=mask_q,
-            leaf_id=leaf_id, weight=w_c)
+            leaf_id=leaf_id, weight=w_c, dp_support=dp_support)
 
     if use_keys:
         gidx, vals, new_acc = jax.vmap(one_client)(
@@ -557,6 +586,7 @@ def encode_leaf_batch(
     codec: str = "f32",
     dp_sigma: float = 0.0,
     dp_seeds: jax.Array | None = None,
+    dp_support_seed: jax.Array | int = 0,
 ) -> tuple[StreamBatch, jax.Array]:
     """Jitted leaf-level encode: accumulate -> block view -> batched encode.
 
@@ -609,14 +639,21 @@ def encode_leaf_batch(
         round trip in-trace; they require ``k_mask == 0`` — pair masks cancel
         only on the f32 grid.
     dp_sigma : float (static)
-        Per-client DP noise stddev (``DPConfig.sigma_client``); > 0 adds
-        grid-exact Gaussian noise to every *transmitted* slot under the pair
-        masks (core/dp.py, DESIGN.md §15). 0 statically skips the stage, so
-        DP-off rounds are bit-identical to pre-DP rounds. Requires the f32
-        codec and ``dp_seeds``.
+        Per-client DP noise stddev (``DPConfig.sigma_client``); > 0 switches
+        the encode into its DP release shape (core/dp.py, DESIGN.md §15):
+        the k data slots release the round's PUBLIC common support instead
+        of the data-dependent top-k, mask slots carry masks only, and
+        grid-exact Gaussian noise is added to every released slot under the
+        pair masks. 0 statically skips the stage, so DP-off rounds are
+        bit-identical to pre-DP rounds. Requires the f32 codec, ``dp_seeds``
+        and ``dp_support_seed``.
     dp_seeds : uint32[C], optional
         Per-(round, client) noise-stream seeds (``DPConfig.client_seeds``),
         folded with ``leaf_id`` in-trace like the pair seeds.
+    dp_support_seed : uint32 scalar
+        The round's common-support seed (``DPConfig.support_seed``) — a pure
+        function of (dp seed, round), shared by the cohort; folded with
+        ``leaf_id`` in-trace. Only read when ``dp_sigma > 0``.
 
     Returns
     -------
@@ -631,6 +668,16 @@ def encode_leaf_batch(
     """
     leaf_shape = updates.shape[1:]
     reject_codec_with_masks(codec, k_mask)
+    dp_on = dp_sigma > 0.0
+    dp_support = None
+    if dp_on:
+        from repro.core import dp as dp_mod
+
+        dp_mod.reject_codec_with_noise(codec, dp_sigma)
+        if dp_seeds is None:
+            raise ValueError("dp_sigma > 0 requires dp_seeds")
+        dp_support = dp_mod.common_support(
+            dp_support_seed, nb, min(int(k), m), m, leaf_id)
     acc = jax.vmap(lambda u, r: to_blocks(
         r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
             updates, residuals)
@@ -638,22 +685,13 @@ def encode_leaf_batch(
         acc, k, selector=selector, sample_frac=sample_frac,
         pair_keys=pair_keys, pair_signs=pair_signs, pair_seeds=pair_seeds,
         k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, leaf_id=leaf_id,
-        weights=weights)
-    if dp_sigma > 0.0:
-        from repro.core import dp as dp_mod
-
-        dp_mod.reject_codec_with_noise(codec, dp_sigma)
-        if dp_seeds is None:
-            raise ValueError("dp_sigma > 0 requires dp_seeds")
-        C = acc.shape[0]
-        use_masks = (pair_seeds is not None or pair_keys is not None) \
-            and k_mask > 0 and C >= 2
+        weights=weights, dp_support=dp_support)
+    if dp_on:
         streams = StreamBatch(
             indices=streams.indices,
             values=dp_mod.add_stream_noise(
                 streams.values, dp_seeds, sigma=dp_sigma, leaf_id=leaf_id,
-                pair_signs=pair_signs if use_masks else None,
-                k_eff=min(int(k), m), k_mask=k_mask if use_masks else 0))
+                k_data=min(int(k), m)))
     if codec != "f32":
         cols, q, scales, new_acc = codec_wire_stage(
             streams.indices, streams.values, new_acc, weights, m, codec)
@@ -1079,14 +1117,22 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
     with_masks = k_mask > 0
 
     def body(updates_l, residuals_l, weights_l, pair_seeds, pair_signs,
-             recovery_seeds, alive, dp_seeds, leaf_id):
+             recovery_seeds, alive, dp_seeds, dp_support_seed, leaf_id):
         c_loc = updates_l.shape[0]
         leaf_shape = updates_l.shape[1:]
         acc = jax.vmap(lambda u, r: to_blocks(
             r.astype(jnp.float32) + u.astype(jnp.float32), nb, m))(
                 updates_l, residuals_l)
         i0 = jax.lax.axis_index(CLIENT_AXIS) * c_loc
-        signs_rows = None
+        dp_support = None
+        if dp_sigma > 0.0:
+            from repro.core import dp as dp_mod
+
+            # every device derives the IDENTICAL public support from the
+            # replicated (round, leaf) seed — common across the whole cohort,
+            # bit-identical with the serial encode by construction
+            dp_support = dp_mod.common_support(
+                dp_support_seed, nb, min(int(k), m), m, leaf_id)
         if with_masks:
             seeds_rows = jax.lax.dynamic_slice_in_dim(
                 pair_seeds, i0, c_loc, 0)
@@ -1100,7 +1146,8 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
                 return encode_client_blocks(
                     acc_c, k, selector=selector, sample_frac=sample_frac,
                     mask_idx=mi, mask_vals=mv, pair_signs_row=srow,
-                    k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, weight=w_c)
+                    k_mask=k_mask, mask_p=mask_p, mask_q=mask_q, weight=w_c,
+                    dp_support=dp_support)
 
             gidx, vals, new_acc = jax.vmap(one)(
                 acc, m_idx, m_vals, signs_rows, weights_l)
@@ -1108,19 +1155,16 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
             def one_plain(acc_c, w_c):
                 return encode_client_blocks(
                     acc_c, k, selector=selector, sample_frac=sample_frac,
-                    weight=w_c)
+                    weight=w_c, dp_support=dp_support)
 
             gidx, vals, new_acc = jax.vmap(one_plain)(acc, weights_l)
         if dp_sigma > 0.0:
-            from repro.core import dp as dp_mod
-
             # each device noises its OWN clients' rows from the same seed
             # vector the serial round folds — bit-identical by construction
             dp_rows = jax.lax.dynamic_slice_in_dim(dp_seeds, i0, c_loc, 0)
             vals = dp_mod.add_stream_noise(
                 vals, dp_rows, sigma=dp_sigma, leaf_id=leaf_id,
-                pair_signs=signs_rows, k_eff=min(int(k), m),
-                k_mask=k_mask if with_masks else 0)
+                k_data=min(int(k), m))
         # the server reduction: ONE collective over the clients axis. An
         # all_gather of the sparse streams (then the identical full fused
         # scatter-add on every device) rather than a psum of per-device dense
@@ -1175,7 +1219,7 @@ def _sharded_leaf_program(mesh, k: int, nb: int, m: int, size: int,
     fn = shard_map_clients(
         body, mesh,
         in_specs=(P(CLIENT_AXIS), P(CLIENT_AXIS), P(CLIENT_AXIS),
-                  P(), P(), P(), P(), P(), P()),
+                  P(), P(), P(), P(), P(), P(), P()),
         out_specs=(P(), P(CLIENT_AXIS)))
     return jax.jit(fn)
 
@@ -1206,6 +1250,7 @@ def encode_decode_leaf_sharded(
     tree_groups: int = 0,
     dp_sigma: float = 0.0,
     dp_seeds: jax.Array | None = None,
+    dp_support_seed: jax.Array | int = 0,
 ) -> tuple[jax.Array, jax.Array]:
     """Client-parallel encode + decode for one leaf, fused in one shard_map.
 
@@ -1266,4 +1311,6 @@ def encode_decode_leaf_sharded(
         bool(with_dropout), use_pallas, str(codec), splits, float(dp_sigma))
     return fn(updates, residuals, jnp.asarray(weights, jnp.float32),
               pair_seeds, pair_signs, recovery_seeds, alive,
-              jnp.asarray(dp_seeds, jnp.uint32), jnp.asarray(leaf_id))
+              jnp.asarray(dp_seeds, jnp.uint32),
+              jnp.asarray(dp_support_seed, jnp.uint32),
+              jnp.asarray(leaf_id))

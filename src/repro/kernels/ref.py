@@ -113,16 +113,44 @@ def pair_mask_stream_ref(seeds, signs, nb: int, k_mask: int, m: int,
     return idx, vals
 
 
-# Domain-separation salts for the distributed-DP noise streams (core/dp.py,
+# Domain-separation salts for the distributed-DP streams (core/dp.py,
 # DESIGN.md §15): two independent murmur counter streams per client feed a
-# Box-Muller transform. Distinct from IDX/VAL/LEAF_SALT so DP draws never
+# Box-Muller transform, and one public stream draws the round's common
+# release support. Distinct from IDX/VAL/LEAF_SALT so DP draws never
 # collide with the pair-mask draws even under equal seeds.
 DP_U1_SALT = 0x94D049BB
 DP_U2_SALT = 0xBF58476D
+DP_SUP_SALT = 0xC2B2AE35
+
+
+def dp_support_stream_ref(seeds, nb: int, k: int, m: int):
+    """Counter-based PUBLIC common-support indices for the DP data release.
+
+    Under DP noise every client of a round releases gradient values at the
+    SAME ``k`` positions per block — drawn here from a seed that is a pure
+    function of (dp seed, round, leaf), never of the data. A data-dependent
+    support (top-k) would leak through the transmitted indices and would
+    spread each client's noise over slots the others don't share; a common
+    public support makes the index release free and stacks every survivor's
+    noise on every released coordinate (core/dp.py, DESIGN.md §15).
+
+    Same draw discipline as the pair-mask support
+    (:func:`pair_mask_stream_ref`): ``idx = mix32(mix32(seed^DP_SUP_SALT)
+    + c) % m`` with flat counter ``c = block * k + slot``. Mod-``m``
+    collisions MAY repeat an index inside a block; the unified stream's
+    first-occurrence gate transmits the underlying gradient once, and the
+    duplicate slot just carries one extra noise draw (privacy-conservative).
+    Returns int32[..., nb, k].
+    """
+    seeds = jnp.asarray(seeds, jnp.uint32)
+    c = jnp.arange(nb * k, dtype=jnp.uint32).reshape(nb, k)
+    c = c.reshape((1,) * seeds.ndim + (nb, k))
+    base = _mix32(seeds ^ jnp.uint32(DP_SUP_SALT))[..., None, None]
+    return (_mix32(base + c) % jnp.uint32(m)).astype(jnp.int32)
 
 
 def dp_noise_stream_ref(seeds, nb: int, k: int, *, sigma: float):
-    """Counter-based discrete Gaussian noise on the f32-exact 2^-24 mask grid.
+    """Counter-based grid-rounded Gaussian noise on the f32-exact 2^-24 grid.
 
     For each uint32 seed draw ``nb`` blocks of ``k`` noise values with flat
     counter ``c = block * k + slot`` — the same counter discipline as
@@ -137,7 +165,10 @@ def dp_noise_stream_ref(seeds, nb: int, k: int, *, sigma: float):
     same grid (the ``>> 8`` draw above), so masks + noise compose exactly in
     f32 scatter-adds while per-slot partial sums stay below 1 in magnitude
     (2^24 grid units — the identical headroom contract the mask plane has;
-    DESIGN.md §15). Returns f32[..., nb, k].
+    DESIGN.md §15). This is a *rounded continuous* Gaussian — accounted as
+    continuous by core/dp.py (the <= 2^-25 rounding perturbation is
+    negligible against any practical sigma) — NOT the Canonne-Kamath-Steinke
+    discrete Gaussian mechanism. Returns f32[..., nb, k].
     """
     seeds = jnp.asarray(seeds, jnp.uint32)
     c = jnp.arange(nb * k, dtype=jnp.uint32).reshape(nb, k)

@@ -78,7 +78,12 @@ class LedgerEntry:
         Each of the C participants adds ``z * S / sqrt(C)``; only the d
         survivors' streams reach the aggregate, so the realized sum noise is
         ``z * S * sqrt(d / C)`` — multiplier ``z * sqrt(d / C)`` against
-        sensitivity S. 0.0 when the round carried no noise.
+        sensitivity S. Valid because every survivor releases (and noises)
+        the SAME public common support (core/dp.py): every released
+        coordinate of the sum carries all d survivors' noise, the released
+        indices are data-independent, and clipping the error-feedback
+        accumulator bounds the emitted subvector's L2 by S. 0.0 when the
+        round carried no noise.
         """
         if self.dp_sigma <= 0.0 or self.n_clients <= 0:
             return 0.0
@@ -240,9 +245,12 @@ class CommLedger:
 
         Per-round Gaussian-mechanism (ε, δ) at the survivor-aware effective
         noise multiplier ``dp_z_eff``, plus the RDP composition across the
-        whole horizon (core/dp.py). Rounds with clipping but no noise make
-        the composed ε infinite — clipping alone bounds sensitivity, it does
-        not privatize. ``delta`` overrides the recorded target δ.
+        whole horizon (core/dp.py) — adaptive composition is valid because
+        each round's release is a clipped function of that client's own
+        data plus already-released public state. Rounds with clipping but
+        no noise make the composed ε infinite — clipping alone bounds
+        sensitivity, it does not privatize. ``delta`` overrides the
+        recorded target δ.
         """
         if not any(e.dp for e in self.entries):
             return None

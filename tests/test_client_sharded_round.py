@@ -254,3 +254,38 @@ def test_sharded_codec_parity_inprocess(codec):
     np.testing.assert_array_equal(np.asarray(dense_serial),
                                   np.asarray(dense_shard))
     np.testing.assert_array_equal(np.asarray(nr), np.asarray(nr_shard))
+
+
+@pytest.mark.skipif(len(jax.devices()) < 2,
+                    reason="needs a multi-device process (CI runs this file "
+                           "under XLA_FLAGS=--xla_force_host_platform_"
+                           "device_count=8)")
+def test_sharded_dp_parity_inprocess():
+    """DP rounds (common public support + grid noise, DESIGN.md §15) are
+    bit-exact between the sharded and serial encodes: every device derives
+    the identical support from the round's seed and each shard draws its
+    own clients' noise rows."""
+    import numpy as np
+    import jax.numpy as jnp
+
+    from repro.core import dp, streams
+    from repro.launch.mesh import clients_mesh_for
+
+    C, size, nb, m = 4, 192, 3, 64
+    mesh = clients_mesh_for(C)
+    assert mesh is not None
+    key = jax.random.key(11)
+    g = jax.random.normal(key, (C, size), jnp.float32)
+    r = 0.1 * jax.random.normal(jax.random.fold_in(key, 1), (C, size),
+                                jnp.float32)
+    dpc = dp.DPConfig(clip=1.0, sigma=0.5, seed=11)
+    dp_seeds = jnp.asarray(dpc.client_seeds(0, list(range(C))))
+    kw = dict(k=8, nb=nb, m=m, size=size, dp_sigma=0.01,
+              dp_seeds=dp_seeds, dp_support_seed=dpc.support_seed(0))
+    sb, nr = streams.encode_leaf_batch(g, r, **kw)
+    dense_serial = streams.decode_leaf_batch(sb, nb=nb, m=m, size=size)
+    dense_shard, nr_shard = streams.encode_decode_leaf_sharded(
+        mesh, g, r, **kw)
+    np.testing.assert_array_equal(np.asarray(dense_serial),
+                                  np.asarray(dense_shard))
+    np.testing.assert_array_equal(np.asarray(nr), np.asarray(nr_shard))

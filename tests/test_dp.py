@@ -92,9 +92,9 @@ def _scatter64(idx, vals, padded):
 def test_noise_and_masks_compose_exactly_on_grid(seed):
     """The tentpole property: with gradients, masks AND noise all on the
     f32-exact 2^-24 grid (and per-slot sums < 1), every f32 add in the
-    encode is exact, so the server-visible sum equals the unmasked top-k
-    sum plus exactly the injected noise — over the full cohort and over any
-    survivor subset >= t with Bonawitz mask recovery."""
+    encode is exact, so the server-visible sum equals the released common-
+    support sum plus exactly the injected noise — over the full cohort and
+    over any survivor subset >= t with Bonawitz mask recovery."""
     C, n, k = 5, 512, 12
     rng = np.random.default_rng(seed)
     # gradients snapped to the grid at |g| ~ 0.03: every slot value
@@ -109,19 +109,33 @@ def test_noise_and_masks_compose_exactly_on_grid(seed):
     dpc = dp.DPConfig(clip=1.0, sigma=0.5, delta=1e-5, seed=seed)
     sigma_c = 0.01                                  # |noise| < ~0.07 at 7 sd
     dp_seeds = jnp.asarray(dpc.client_seeds(seed, list(range(C))))
+    sup_seed = dpc.support_seed(seed)
     enc = dict(k=k, nb=1, m=n, size=n, pair_seeds=pk, pair_signs=ps,
                k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0)
-    st_p, nr_p = streams.encode_leaf_batch(g, r, **enc)
     st_n, nr_n = streams.encode_leaf_batch(
-        g, r, dp_sigma=sigma_c, dp_seeds=dp_seeds, **enc)
-    # noise never touches indices or residuals
-    assert np.array_equal(np.asarray(st_n.indices), np.asarray(st_p.indices))
-    assert np.array_equal(np.asarray(nr_n), np.asarray(nr_p))
+        g, r, dp_sigma=sigma_c, dp_seeds=dp_seeds,
+        dp_support_seed=sup_seed, **enc)
+    # the release support is the round's PUBLIC common stream: the k data
+    # slots of every client carry the same (seed, round, leaf)-derived
+    # indices, independent of the gradients
+    sup = np.asarray(dp.common_support(sup_seed, 1, k, n, 0)).ravel()
+    idx = np.asarray(st_n.indices).reshape(C, -1)
+    for c in range(C):
+        assert np.array_equal(idx[c, :k], sup)
+    # residuals keep the untransmitted mass: g with support coords zeroed
+    exp_res = np.asarray(g, np.float64).copy()
+    exp_res[:, sup] = 0.0
+    assert np.array_equal(np.asarray(nr_n, np.float64), exp_res)
     # every stream value is still an exact grid multiple: no f32 add rounded
     units = np.asarray(st_n.values, np.float64) / GRID
     assert np.array_equal(units, np.round(units)), "f32 encode left the grid"
-    noise = (np.asarray(st_n.values, np.float64)
-             - np.asarray(st_p.values, np.float64))
+    # oracle noise: the per-(round, client) stream on the k released slots,
+    # zero on the mask-only slots (masks cancel pairwise; noise there would
+    # add error without privacy)
+    noise_k = np.asarray(kref.dp_noise_stream_ref(
+        kref.fold_leaf_seed(dp_seeds, 0), 1, k, sigma=sigma_c), np.float64)
+    noise = np.zeros((C, idx.shape[1]), np.float64)
+    noise[:, :k] = noise_k.reshape(C, k)
     assert float(np.abs(noise).max()) > 0.0
     # --- full cohort: masks cancel exactly under the noise ---------------
     transmitted = (np.asarray(g, np.float64)
@@ -160,6 +174,112 @@ def test_noise_and_masks_compose_exactly_on_grid(seed):
         assert np.array_equal(oracle, expected)
         # and the real f32 decode matches the oracle to scatter-order ulps
         np.testing.assert_allclose(dec, oracle, rtol=0, atol=2 ** -20)
+
+
+def test_dp_release_support_is_public_and_data_independent():
+    """Under noise, the transmitted index support is a pure function of
+    (dp seed, round, leaf) — two encodes of completely different gradients
+    transmit the SAME indices (no data-dependent index leakage), and the
+    support changes with the round seed."""
+    C, n, k = 4, 256, 8
+    rng = np.random.default_rng(7)
+    sa = SecureAggConfig(mask_ratio=0.25, p=-0.5, q=1.0, seed=7)
+    km = sa.k_mask_for(n, C)
+    pk, ps = streams.pair_seed_matrix(sa, list(range(C)), round_t=0)
+    dpc = dp.DPConfig(clip=1.0, sigma=0.5, seed=7)
+    dp_seeds = jnp.asarray(dpc.client_seeds(0, list(range(C))))
+    enc = dict(k=k, nb=1, m=n, size=n, pair_seeds=pk, pair_signs=ps,
+               k_mask=km, mask_p=sa.p, mask_q=sa.q, leaf_id=0,
+               dp_sigma=0.01, dp_seeds=dp_seeds)
+    g1 = jnp.asarray(np.round(rng.normal(size=(C, n)) * 2 ** 19) * GRID,
+                     jnp.float32)
+    g2 = jnp.asarray(np.round(rng.normal(size=(C, n)) * 2 ** 19) * GRID,
+                     jnp.float32)
+    z = jnp.zeros_like(g1)
+    s1, _ = streams.encode_leaf_batch(
+        g1, z, dp_support_seed=dpc.support_seed(0), **enc)
+    s2, _ = streams.encode_leaf_batch(
+        g2, z, dp_support_seed=dpc.support_seed(0), **enc)
+    assert np.array_equal(np.asarray(s1.indices), np.asarray(s2.indices))
+    s3, _ = streams.encode_leaf_batch(
+        g1, z, dp_support_seed=dpc.support_seed(1), **enc)
+    i1 = np.asarray(s1.indices).reshape(C, -1)[:, :k]
+    i3 = np.asarray(s3.indices).reshape(C, -1)[:, :k]
+    assert not np.array_equal(i1, i3)           # fresh support each round
+
+
+def test_emitted_stream_norm_bounded_by_clip_under_error_feedback():
+    """The high-severity review point: error-feedback residuals accumulate
+    untransmitted mass, so clipping the fresh delta alone does NOT bound
+    what a client emits. The engine clips the encoder input residual+delta
+    (and re-seeds the residual from the clipped accumulator, the fedavg
+    wiring) — the emitted stream's L2 stays <= S every round."""
+    C, n, k = 3, 256, 8
+    S = 1.0
+    rng = np.random.default_rng(11)
+    sa = SecureAggConfig(mask_ratio=0.25, p=-0.5, q=1.0, seed=11)
+    km = sa.k_mask_for(n, C)
+    dpc = dp.DPConfig(clip=S, sigma=0.5, seed=11)
+    res = np.zeros((C, n), np.float32)
+    for rnd in range(4):
+        delta = (np.round(rng.normal(size=(C, n)) * 2 ** 21) * GRID
+                 ).astype(np.float32) * 3.0     # deltas far above the bound
+        pk, ps = streams.pair_seed_matrix(sa, list(range(C)), round_t=rnd)
+        acc = jnp.asarray(delta) + jnp.asarray(res)
+        clipped = dp.clip_client_updates({"w": acc}, clip=S)["w"]
+        dp_seeds = jnp.asarray(dpc.client_seeds(rnd, list(range(C))))
+        st, nr = streams.encode_leaf_batch(
+            clipped, jnp.zeros_like(clipped), k=k, nb=1, m=n, size=n,
+            pair_seeds=pk, pair_signs=ps, k_mask=km, mask_p=sa.p,
+            mask_q=sa.q, leaf_id=0, dp_sigma=0.01, dp_seeds=dp_seeds,
+            dp_support_seed=dpc.support_seed(rnd))
+        emitted = np.asarray(clipped, np.float64) - np.asarray(nr, np.float64)
+        norms = np.sqrt((emitted ** 2).sum(1))
+        assert norms.max() <= S * (1 + 1e-6)
+        res = np.asarray(nr)
+    # counterfactual (pure numpy): clip the fresh delta ALONE and emit
+    # top-k(residual + delta). A uniform delta of norm S (clip is a no-op)
+    # parks its mass in the residual until the emitted top-k concentrates
+    # more than S — the sensitivity breach the engine's clipping prevents.
+    n2, k2 = 64, 16
+    bad_res = np.zeros(n2)
+    bad_violated = False
+    for _ in range(6):
+        d = np.full(n2, 1.0 / math.sqrt(n2))   # ||d||_2 == S == 1 exactly
+        acc2 = bad_res + d
+        order = np.argsort(-np.abs(acc2))[:k2]
+        if math.sqrt(float((acc2[order] ** 2).sum())) > 1.0 + 1e-9:
+            bad_violated = True
+        acc2[order] = 0.0
+        bad_res = acc2
+    assert bad_violated, "counterexample should breach S within 6 rounds"
+
+
+def test_run_round_rejects_nonuniform_weights_with_dp():
+    """Library-level guard (not just SimConfig): client_weights != 1 under
+    DP would scale a stream past the clip bound S."""
+    from repro.core.fedavg import init_state, run_round
+    from repro.core.types import FedConfig
+
+    def loss_fn(p, batch):
+        x, y = batch
+        return jnp.mean((x @ p["w"] - y) ** 2)
+
+    key = jax.random.key(0)
+    x = jax.random.normal(key, (2, 4, 8))
+    batches = {c: (x, jnp.ones((2, 4, 1))) for c in range(3)}
+    fed = FedConfig(n_clients=3, clients_per_round=3, local_steps=2,
+                    local_batch=4, local_lr=0.1, rounds=1)
+    st = init_state({"w": jnp.zeros((8, 1))}, fed)
+    thgs = THGSConfig(s0=0.5, alpha=0.9, s_min=0.1)
+    sa = SecureAggConfig(mask_ratio=0.25)
+    dpc = dp.DPConfig(clip=1.0, sigma=0.5)
+    with pytest.raises(ValueError, match="uniform client weights"):
+        run_round(st, batches, loss_fn, fed, thgs, sa,
+                  client_weights={1: 2.0}, dp=dpc)
+    # uniform weights (explicit 1.0) pass the guard
+    run_round(st, batches, loss_fn, fed, thgs, sa,
+              client_weights={1: 1.0}, dp=dpc)
 
 
 # --------------------------------------------------- sigma=0 == plain secagg
