@@ -1,8 +1,11 @@
-"""Serving example: batched prefill + greedy decode with KV caches.
+"""Serving example: the batched inference server on an LM workload.
 
-Serves a reduced assigned architecture with a batch of token requests —
-demonstrating the prefill/decode split the decode_32k / long_500k dry-run
-shapes exercise at production scale.
+Requests (fixed-length token prompts) flow through the real serving stack —
+:class:`repro.serving.InferenceServer` with an :class:`~repro.serving.LMAdapter`
+(batched prefill + greedy decode with donated KV caches, ``launch/serve.py``),
+paced by the open-loop :class:`~repro.serving.LoadGenerator` — and the run
+prints the ``repro.serve/v1`` latency/throughput summary the CI serve smoke
+asserts on.
 
 Run:  PYTHONPATH=src python examples/serve_llm.py --arch yi-6b --n-new 16
 """
@@ -10,40 +13,61 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro import configs
+from repro import configs, serving
 from repro.data import make_lm_tokens
-from repro.launch.serve import greedy_generate
 from repro.models import transformer as tf
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="yi-6b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="server max_batch (compile-once shape)")
     ap.add_argument("--prompt-len", type=int, default=24)
     ap.add_argument("--n-new", type=int, default=16)
+    ap.add_argument("--requests", type=int, default=16)
+    ap.add_argument("--qps", type=float, default=40.0)
     args = ap.parse_args()
 
     cfg = configs.reduced(configs.get(args.arch))
     if not cfg.supports_decode:
         raise SystemExit(f"{args.arch} is encoder-only: no decode step")
     params = tf.init_params(cfg, jax.random.key(0))
-    prompts, _ = make_lm_tokens(cfg.vocab, args.batch, args.prompt_len, seed=1)
-    prompts = jnp.asarray(prompts)
+    prompts, _ = make_lm_tokens(cfg.vocab, args.requests, args.prompt_len,
+                                seed=1)
+    prompts = np.asarray(prompts, np.int32)
 
-    cache_len = args.prompt_len + args.n_new + 8
+    metrics = serving.ServingMetrics(offered_qps=args.qps)
+    adapter = serving.LMAdapter(cfg, args.batch, args.prompt_len, args.n_new)
+    server = serving.InferenceServer(adapter, params, metrics=metrics)
+    gen = serving.LoadGenerator(server, prompts, args.qps, metrics=metrics)
+
     t0 = time.perf_counter()
-    out = greedy_generate(params, cfg, prompts, args.n_new, cache_len)
+    server.start()
+    try:
+        gen.run(n_requests=args.requests)
+        errors = gen.drain()
+    finally:
+        server.stop()
     dt = time.perf_counter() - t0
-    print(f"arch={cfg.name} (reduced)  batch={args.batch} "
+
+    doc = metrics.summary()
+    print(f"arch={cfg.name} (reduced)  max_batch={args.batch} "
           f"prompt={args.prompt_len} new={args.n_new}")
-    for i in range(args.batch):
+    # replay a few requests synchronously so the output is showable
+    for i in range(min(args.requests, args.batch)):
+        out = server.submit(prompts[i])
+        server.step(block=True)
         print(f"  req{i}: prompt={list(map(int, prompts[i][:8]))}... "
-              f"-> generated={list(map(int, out[i]))}")
-    print(f"{args.batch * args.n_new} tokens in {dt:.2f}s "
-          f"({args.batch * args.n_new / dt:.1f} tok/s on 1 CPU core)")
+              f"-> generated={list(map(int, out.wait(30.0)))}")
+    lat = doc["latency_us"]
+    print(f"{doc['tokens']['generated']} tokens for {doc['requests']['served']}"
+          f" requests in {dt:.2f}s ({doc['tokens']['generated'] / dt:.1f}"
+          f" tok/s on 1 CPU core, {errors} errors)")
+    print(f"latency p50={lat['p50'] / 1e3:.1f}ms p99={lat['p99'] / 1e3:.1f}ms "
+          f"mean_fill={doc['batches']['mean_fill']:.2f}")
 
 
 if __name__ == "__main__":

@@ -1,11 +1,12 @@
 """repro.bench — the machine-readable performance trajectory.
 
 ``python -m repro.bench`` times the hot paths (the client-parallel federated
-round, serial vs device-sharded, the aggregation kernels, and the flat-vs-
-tree cohort scaling sweep) and emits schema'd JSON documents —
-``BENCH_round.json`` / ``BENCH_agg.json`` / ``BENCH_cohort.json`` at the
-repo root — that CI gates every PR against (``--gate``). EXPERIMENTS.md
-documents the schema and how to refresh the committed baselines.
+round, serial vs device-sharded, the aggregation kernels, the flat-vs-tree
+cohort scaling sweep, and the hot-swap serving path) and emits schema'd JSON
+documents — ``BENCH_round.json`` / ``BENCH_agg.json`` / ``BENCH_cohort.json``
+/ ``BENCH_serve.json`` at the repo root — that CI gates every PR against
+(``--gate``). EXPERIMENTS.md documents the schema and how to refresh the
+committed baselines.
 
 This package also subsumes ``benchmarks/run.py``'s CSV printer: the legacy
 paper-table suites (table1/table2/fig1/fig3/roofline) remain importable from
@@ -28,6 +29,7 @@ JSON_SUITES = {
     "round": ("repro.bench.round_bench", "BENCH_round.json"),
     "agg": ("repro.bench.agg_bench", "BENCH_agg.json"),
     "cohort": ("repro.bench.cohort_bench", "BENCH_cohort.json"),
+    "serve": ("repro.bench.serve_bench", "BENCH_serve.json"),
 }
 
 # legacy CSV-only suites living in the repo-root benchmarks/ package

@@ -41,7 +41,7 @@ def main(argv=None) -> int:
                          "quick-mode; entry names encode the size)")
     ap.add_argument("--only", default=None,
                     help="comma-separated suites; JSON suites: "
-                         "round,agg,cohort; legacy CSV-only: "
+                         "round,agg,cohort,serve; legacy CSV-only: "
                          "table1,table2,fig1,fig3,roofline")
     ap.add_argument("--out", default=None,
                     help="write ONE combined JSON document here instead of "
@@ -58,7 +58,7 @@ def main(argv=None) -> int:
     ap.add_argument("--baseline", action="append", default=None,
                     help="baseline document(s) for --gate (default: "
                          "BENCH_round.json BENCH_agg.json "
-                         "BENCH_cohort.json)")
+                         "BENCH_cohort.json BENCH_serve.json)")
     ap.add_argument("--max-slowdown", type=float,
                     default=schema.DEFAULT_MAX_SLOWDOWN,
                     help="gate threshold (default %(default)s; generous — "
@@ -69,7 +69,8 @@ def main(argv=None) -> int:
         current = schema.load_doc(args.gate)
         baselines = []
         for p in (args.baseline or ["BENCH_round.json", "BENCH_agg.json",
-                                    "BENCH_cohort.json"]):
+                                    "BENCH_cohort.json",
+                                    "BENCH_serve.json"]):
             baselines.append(schema.load_doc(p))
         failures, compared = schema.gate_compare(
             current, baselines, max_slowdown=args.max_slowdown)

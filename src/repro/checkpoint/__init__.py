@@ -1,3 +1,5 @@
-from repro.checkpoint.store import latest_step, restore, save
+from repro.checkpoint.store import (latest_published_step, latest_step,
+                                    publish, restore, save)
 
-__all__ = ["save", "restore", "latest_step"]
+__all__ = ["save", "restore", "latest_step", "latest_published_step",
+           "publish"]

@@ -71,6 +71,50 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return max(steps) if steps else None
 
 
+# --------------------------------------------------- publish / subscribe
+# The serving loop (repro/serving, DESIGN.md §16) treats a checkpoint
+# directory as a single-writer/many-reader channel: the trainer *publishes*
+# steps with ``publish`` (plain ``save`` — the manifest is written last and
+# atomically, so its presence marks the step complete) and readers poll
+# ``latest_published_step``, which only surfaces steps whose manifest both
+# exists and parses. A crash mid-publish (npz present, manifest absent) or a
+# corrupted manifest (truncated by something that bypassed the tmp+replace
+# discipline) leaves the step invisible — subscribers stay on the last good
+# one instead of dying inside ``restore``.
+
+def publish(ckpt_dir: str, step: int, tree: PyTree) -> str:
+    """Atomically publish ``tree`` as ``step`` for polling subscribers."""
+    return save(ckpt_dir, step, tree)
+
+
+def _manifest_ok(ckpt_dir: str, step: int) -> bool:
+    mpath = os.path.join(ckpt_dir, f"step_{step:08d}.json")
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+    except (OSError, ValueError):
+        return False
+    return isinstance(manifest, dict) and manifest.get("step") == step
+
+
+def latest_published_step(ckpt_dir: str,
+                          after: Optional[int] = None) -> Optional[int]:
+    """Newest *complete* step in ``ckpt_dir`` — npz present AND manifest
+    present and parseable — or None. With ``after``, only steps strictly
+    greater count (the subscriber's "anything new since step N?" poll)."""
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = sorted(
+        (int(m.group(1)) for f in os.listdir(ckpt_dir)
+         if (m := re.match(r"step_(\d+)\.npz$", f))), reverse=True)
+    for s in steps:
+        if after is not None and s <= after:
+            return None          # sorted newest-first: nothing newer is left
+        if _manifest_ok(ckpt_dir, s):
+            return s
+    return None
+
+
 def restore(ckpt_dir: str, step: int, like: PyTree,
             shardings: Optional[PyTree] = None) -> PyTree:
     """Rebuild the pytree of ``like``'s structure from disk; optionally place

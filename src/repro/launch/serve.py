@@ -27,16 +27,27 @@ def make_decode_step(cfg: ArchConfig) -> Callable:
     return step
 
 
+def next_token(logits) -> jax.Array:
+    """Greedy int32[B, 1] token from logits of any serving shape.
+
+    Prefill emits ``[B, T, V]`` (the last position is the prediction);
+    decode emits ``[B, 1, V]`` or ``[B, V]`` depending on the family. The
+    ``ndim`` test is static at trace time, so this is jit-safe.
+    """
+    if logits.ndim == 3:
+        logits = logits[:, -1, :]
+    return jax.numpy.argmax(logits, -1)[:, None].astype(jax.numpy.int32)
+
+
 def greedy_generate(params, cfg: ArchConfig, prompt, n_new: int,
                     cache_len: int):
     """Host-driven greedy loop (examples / integration tests)."""
     logits, state = jax.jit(make_prefill_step(cfg, cache_len))(params, prompt)
     step = jax.jit(make_decode_step(cfg), donate_argnums=(2,))
-    tok = jax.numpy.argmax(logits[:, -1:], -1).astype(jax.numpy.int32)
+    tok = next_token(logits)
     out = [tok]
     for _ in range(n_new - 1):
         logits, state = step(params, tok, state)
-        tok = jax.numpy.argmax(logits[:, -1:], -1)[..., 0:1].astype(jax.numpy.int32) if logits.ndim == 3 else jax.numpy.argmax(logits, -1).astype(jax.numpy.int32)
-        tok = tok.reshape(prompt.shape[0], 1)
+        tok = next_token(logits)
         out.append(tok)
     return jax.numpy.concatenate(out, axis=1)

@@ -1,0 +1,27 @@
+"""repro.serving — continuous train -> checkpoint -> hot-swap serving.
+
+The deployment leg of the north star (DESIGN.md §16): the sim engine
+publishes checkpoints (``sim.publish_params_hook`` -> ``checkpoint.publish``,
+atomic manifest-last), a batched jitted :class:`InferenceServer` picks them
+up through a :class:`CheckpointWatcher` via double-buffered weight hot-swap
+(``hot_swap.py`` — staging off the serve path, a pointer-flip swap between
+batches), and a :class:`LoadGenerator` drives it open-loop at a configured
+QPS while federated rounds keep training in the same process. Every run
+renders one ``repro.serve/v1`` metrics document (``metrics.py``) that CI
+asserts on and ``bench/serve_bench.py`` turns into BENCH_serve.json entries.
+
+``python -m repro.serving`` runs the whole loop end to end.
+"""
+from __future__ import annotations
+
+from repro.serving.hot_swap import CheckpointWatcher, WeightBuffers
+from repro.serving.loadgen import LoadGenerator
+from repro.serving.metrics import (SCHEMA_VERSION, ServingMetrics,
+                                   load_metrics, validate_metrics)
+from repro.serving.server import ClassifierAdapter, InferenceServer, LMAdapter
+
+__all__ = [
+    "CheckpointWatcher", "WeightBuffers", "LoadGenerator", "ServingMetrics",
+    "SCHEMA_VERSION", "load_metrics", "validate_metrics",
+    "ClassifierAdapter", "InferenceServer", "LMAdapter",
+]

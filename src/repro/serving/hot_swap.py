@@ -1,0 +1,169 @@
+"""Double-buffered weight hot-swap (DESIGN.md §16).
+
+Two weight slots live on device. The *active* slot answers every request;
+the *staging* slot is where a :class:`CheckpointWatcher` loads newly
+published checkpoints — host-side npz read, ``device_put``, and a blocking
+``block_until_ready`` all happen off the serve path (the watcher's loader
+thread, or an explicit ``poll_once()``). The serve loop only ever calls
+``maybe_swap()`` *between* batches: when a staged buffer is resident the
+swap is a pointer flip under a lock — the measured pause is microseconds,
+and a request never waits on a training round or a disk read. Old weights
+keep serving until the instant the new buffer is complete.
+
+Staleness invariant: ``active_step`` is monotone non-decreasing, and after
+a failed/partial publish (npz without a parseable manifest —
+``checkpoint.latest_published_step`` skips those) the server simply stays
+on the last good step.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+
+from repro import checkpoint
+
+PyTree = Any
+
+
+class WeightBuffers:
+    """The two device-resident weight slots + the active pointer."""
+
+    def __init__(self, params: PyTree, step: int = 0):
+        params = jax.tree_util.tree_map(jax.numpy.asarray, params)
+        self._slots: list[Optional[PyTree]] = [params, None]
+        self._steps: list[int] = [int(step), -1]
+        self._active = 0
+        self._staged = False
+        self._lock = threading.Lock()
+
+    @property
+    def active_params(self) -> PyTree:
+        with self._lock:
+            return self._slots[self._active]
+
+    @property
+    def active_step(self) -> int:
+        with self._lock:
+            return self._steps[self._active]
+
+    @property
+    def staged_step(self) -> Optional[int]:
+        """Step resident in the staging slot, whether or not swapped yet."""
+        with self._lock:
+            s = self._steps[1 - self._active]
+            return s if s >= 0 else None
+
+    @property
+    def has_staged(self) -> bool:
+        with self._lock:
+            return self._staged
+
+    def stage(self, step: int, params: PyTree) -> None:
+        """Load ``params`` into the inactive slot and mark it swappable.
+        Blocks until the buffer is device-resident — callers keep this OFF
+        the serve path."""
+        params = jax.tree_util.tree_map(jax.numpy.asarray, params)
+        for leaf in jax.tree_util.tree_leaves(params):
+            leaf.block_until_ready()
+        with self._lock:
+            self._slots[1 - self._active] = params
+            self._steps[1 - self._active] = int(step)
+            self._staged = True
+
+    def swap(self) -> float:
+        """Flip the active pointer onto the staged slot; returns the pause
+        in microseconds (the only instant the serve loop is 'down')."""
+        t0 = time.perf_counter()
+        with self._lock:
+            if not self._staged:
+                raise RuntimeError("swap() with nothing staged")
+            self._active = 1 - self._active
+            self._staged = False
+        return (time.perf_counter() - t0) * 1e6
+
+
+class CheckpointWatcher:
+    """Polls a publish directory and stages new checkpoints for swapping.
+
+    ``tree_of(step)`` defaults to ``checkpoint.restore`` against the
+    ``like`` tree; only steps with a complete, parseable manifest are ever
+    considered (``checkpoint.latest_published_step``), so a crash
+    mid-publish leaves the watcher — and therefore the server — on the last
+    good checkpoint.
+    """
+
+    def __init__(self, ckpt_dir: str, like: PyTree, buffers: WeightBuffers,
+                 metrics=None,
+                 restore_fn: Optional[Callable[[int], PyTree]] = None,
+                 poll_interval_s: float = 0.05):
+        self.ckpt_dir = ckpt_dir
+        self.like = like
+        self.buffers = buffers
+        self.metrics = metrics
+        self.poll_interval_s = poll_interval_s
+        self._restore = restore_fn or self._restore_step
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.latest_seen: Optional[int] = None   # newest complete step found
+
+    def _restore_step(self, step: int) -> PyTree:
+        return checkpoint.restore(self.ckpt_dir, step, like=self.like)
+
+    # ---------------------------------------------------------------- polling
+    def poll_once(self) -> Optional[int]:
+        """One poll: stage the newest complete step if it beats both the
+        active and any already-staged step. Returns the staged step or None.
+        Safe to call inline (tests) or from the loader thread."""
+        newest = checkpoint.latest_published_step(self.ckpt_dir)
+        if newest is None:
+            return None
+        self.latest_seen = newest
+        horizon = max(self.buffers.active_step,
+                      self.buffers.staged_step
+                      if self.buffers.staged_step is not None else -1)
+        if newest <= horizon:
+            return None
+        tree = self._restore(newest)
+        self.buffers.stage(newest, tree)
+        return newest
+
+    def maybe_swap(self) -> Optional[int]:
+        """Between-batches hook: flip onto a staged buffer when one is
+        resident. Returns the new active step, or None if nothing swapped."""
+        if not self.buffers.has_staged:
+            return None
+        pause_us = self.buffers.swap()
+        step = self.buffers.active_step
+        if self.metrics is not None:
+            self.metrics.record_swap(step, pause_us)
+        return step
+
+    # ----------------------------------------------------------- loader thread
+    def start(self) -> None:
+        """Run the poll loop in a daemon loader thread (staging happens
+        there; swapping stays with the serve loop)."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop,
+                                        name="ckpt-watcher", daemon=True)
+        self._thread.start()
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.poll_once()
+            except (OSError, ValueError, KeyError):
+                # a reader racing the publisher can lose (partial listing);
+                # the next poll sees a consistent directory
+                pass
+            self._stop.wait(self.poll_interval_s)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=5.0)
+            self._thread = None

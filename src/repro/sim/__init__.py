@@ -7,9 +7,11 @@ eval hooks and checkpoint/resume (engine.py), named experiment presets
 (presets.py) and a CLI (``python -m repro.sim --preset table2_quick``).
 """
 from repro.sim.config import SimConfig
-from repro.sim.engine import AsyncSimulation, SimResult, Simulation, simulate
+from repro.sim.engine import (AsyncSimulation, SimResult, Simulation,
+                              publish_params_hook, simulate)
 from repro.sim.ledger import CommLedger, LedgerEntry, mib
 from repro.sim.sampler import ClientSampler
 
 __all__ = ["SimConfig", "SimResult", "Simulation", "AsyncSimulation",
-           "simulate", "CommLedger", "LedgerEntry", "mib", "ClientSampler"]
+           "simulate", "publish_params_hook", "CommLedger", "LedgerEntry",
+           "mib", "ClientSampler"]

@@ -54,6 +54,25 @@ from repro.sim.sampler import ClientSampler
 RoundHook = Callable[[int, dict], None]
 
 
+def publish_params_hook(publish_dir: str, every: int = 1) -> RoundHook:
+    """A :data:`RoundHook` that publishes the post-round global params for
+    serving subscribers (repro.serving, DESIGN.md §16).
+
+    Publishes the bare params pytree — not the training state — via
+    ``checkpoint.publish`` (atomic npz + manifest, manifest written last so
+    its presence marks the step complete) at step ``round + 1``, every
+    ``every`` rounds. This is the control-plane seam between training and
+    serving: the trainer never talks to the server, it only drops complete
+    checkpoints; the server's ``CheckpointWatcher`` polls them up.
+    """
+    def hook(round_t: int, info: dict) -> None:
+        if (round_t + 1) % max(1, every) == 0:
+            checkpoint.publish(publish_dir, round_t + 1,
+                               info["state"].params)
+
+    return hook
+
+
 @dataclasses.dataclass
 class SimResult:
     """Outcome of one simulation: metric trajectories + the comm ledger."""

@@ -74,7 +74,7 @@ def test_gate_unmatched_names_do_not_compare():
 
 
 @pytest.mark.parametrize("name", ["BENCH_round.json", "BENCH_agg.json",
-                                  "BENCH_cohort.json"])
+                                  "BENCH_cohort.json", "BENCH_serve.json"])
 def test_committed_baselines_are_valid(name):
     """The perf-trajectory baselines at the repo root stay schema-valid."""
     path = os.path.join(ROOT, name)

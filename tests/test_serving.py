@@ -1,0 +1,260 @@
+"""Serving-loop tests: hot-swap correctness, pub/sub crash safety, the
+batched server, greedy decode seeding, metrics schema, and the in-process
+train+serve CLI smoke (DESIGN.md §16)."""
+import json
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint, configs, serving
+from repro.data import make_lm_tokens
+from repro.launch.serve import greedy_generate, make_prefill_step, next_token
+from repro.models import transformer as tf
+from repro.models.paper_models import PAPER_MODELS
+
+MODEL = PAPER_MODELS["mnist_mlp"]
+
+
+def _params(seed: int):
+    return MODEL.init(jax.random.key(seed))
+
+
+def _payloads(n: int, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    return rng.randn(n, *MODEL.input_shape).astype(np.float32)
+
+
+# ------------------------------------------------------------- greedy decode
+@pytest.fixture(scope="module")
+def lm_setup():
+    cfg = configs.reduced(configs.get("yi_6b"))
+    params = tf.init_params(cfg, jax.random.key(0))
+    prompts, _ = make_lm_tokens(cfg.vocab, 2, 12, seed=3)
+    return cfg, params, jnp.asarray(prompts)
+
+
+def test_next_token_2d_3d_agree(lm_setup):
+    cfg, params, prompts = lm_setup
+    prefill = jax.jit(make_prefill_step(cfg, 24))
+    logits, _ = prefill(params, prompts)
+    assert logits.ndim == 3
+    t3 = next_token(logits)
+    t2 = next_token(logits[:, -1, :])
+    assert t3.shape == (prompts.shape[0], 1)
+    assert t3.dtype == jnp.int32
+    np.testing.assert_array_equal(np.asarray(t3), np.asarray(t2))
+
+
+def test_greedy_generate_seeded(lm_setup):
+    cfg, params, prompts = lm_setup
+    cache_len = prompts.shape[1] + 4 + 8
+    out1 = greedy_generate(params, cfg, prompts, 4, cache_len)
+    out2 = greedy_generate(params, cfg, prompts, 4, cache_len)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(out2))
+    # the first generated token IS the argmax over the prefill's last logits
+    prefill = jax.jit(make_prefill_step(cfg, cache_len))
+    logits, _ = prefill(params, prompts)
+    first = np.argmax(np.asarray(logits[:, -1, :]), axis=-1)
+    np.testing.assert_array_equal(np.asarray(out1[:, 0]), first)
+
+
+# ----------------------------------------------------------------- hot swap
+def _served_logits(server, payload):
+    t = server.submit(payload)
+    server.step(block=True)
+    return np.asarray(t.wait(30.0))
+
+
+def test_hot_swap_bit_identity(tmp_path):
+    """Publish step 2 while serving step 1: post-swap logits must be
+    bit-identical to a cold server restored from checkpoint 2."""
+    d = str(tmp_path)
+    p1, p2 = _params(1), _params(2)
+    checkpoint.publish(d, 1, p1)
+    x = _payloads(1)[0]
+
+    metrics = serving.ServingMetrics()
+    buffers = serving.WeightBuffers(p1, step=1)
+    watcher = serving.CheckpointWatcher(d, p1, buffers, metrics=metrics)
+    adapter = serving.ClassifierAdapter(MODEL, 4)
+    server = serving.InferenceServer(adapter, watcher=watcher,
+                                     metrics=metrics)
+    before = _served_logits(server, x)
+
+    checkpoint.publish(d, 2, p2)          # trainer finishes round 2
+    assert watcher.poll_once() == 2       # staged off the serve path
+    assert buffers.active_step == 1       # old weights still serving
+    after = _served_logits(server, x)     # step() swaps between batches
+    assert buffers.active_step == 2
+    assert metrics.swap_steps == [2]
+
+    cold = serving.InferenceServer(
+        serving.ClassifierAdapter(MODEL, 4),
+        checkpoint.restore(d, 2, like=p1))
+    expect = _served_logits(cold, x)
+    np.testing.assert_array_equal(after, expect)   # bit-identical
+    assert not np.array_equal(before, after)       # and actually swapped
+
+
+def test_truncated_manifest_keeps_last_good(tmp_path):
+    """A crash mid-publish (npz there, manifest truncated or missing) leaves
+    subscribers on the last complete checkpoint."""
+    d = str(tmp_path)
+    p1, p2 = _params(1), _params(2)
+    checkpoint.publish(d, 1, p1)
+    buffers = serving.WeightBuffers(p1, step=0)
+    watcher = serving.CheckpointWatcher(d, p1, buffers)
+    assert watcher.poll_once() == 1
+    assert watcher.maybe_swap() == 1
+
+    # crash A: manifest truncated mid-json.dump (bypassing tmp+replace)
+    checkpoint.publish(d, 2, p2)
+    with open(os.path.join(d, "step_00000002.json"), "w") as f:
+        f.write('{"step": 2, "lea')
+    # crash B: npz written, manifest never got there at all
+    shutil.copy(os.path.join(d, "step_00000002.npz"),
+                os.path.join(d, "step_00000003.npz"))
+
+    assert checkpoint.latest_published_step(d) == 1
+    assert checkpoint.latest_published_step(d, after=1) is None
+    assert watcher.poll_once() is None
+    assert buffers.active_step == 1       # still on the last good step
+
+    # the trainer retries the publish -> step becomes visible again
+    checkpoint.publish(d, 2, p2)
+    assert checkpoint.latest_published_step(d) == 2
+    assert watcher.poll_once() == 2
+
+
+def test_swap_requires_staged():
+    buffers = serving.WeightBuffers(_params(0))
+    with pytest.raises(RuntimeError):
+        buffers.swap()
+    buffers.stage(5, _params(1))
+    pause = buffers.swap()
+    assert buffers.active_step == 5 and pause >= 0.0
+
+
+# ------------------------------------------------------------------- server
+def test_server_pads_partial_batches():
+    params = _params(0)
+    adapter = serving.ClassifierAdapter(MODEL, 8)
+    server = serving.InferenceServer(adapter, params)
+    rows = _payloads(3, seed=7)
+    tickets = [server.submit(r) for r in rows]
+    served = server.step(block=True)
+    assert served == 3
+    # expectation from the SAME jitted callable on the padded stack
+    stack = np.concatenate(
+        [rows, np.zeros((5, *MODEL.input_shape), np.float32)])
+    expect = adapter.infer(params, jnp.asarray(stack))
+    for i, t in enumerate(tickets):
+        np.testing.assert_array_equal(t.wait(30.0), expect[i])
+    doc = server.metrics.summary()
+    assert doc["batches"] == {"count": 1, "mean_fill": 3.0}
+
+
+class _ExplodingAdapter:
+    max_batch = 4
+    request_shape = MODEL.input_shape
+    request_dtype = np.float32
+
+    def infer(self, params, stack):
+        raise RuntimeError("kaboom")
+
+    def tokens_per_request(self):
+        return 0
+
+
+def test_server_records_adapter_errors():
+    server = serving.InferenceServer(_ExplodingAdapter(), _params(0))
+    gen = serving.LoadGenerator(server, _payloads(2), qps=1000.0,
+                                wait_timeout_s=5.0)
+    gen.run(n_requests=2)
+    server.drain()
+    errors = gen.drain()
+    assert errors == 2
+    doc = server.metrics.summary()
+    assert doc["requests"]["errors"] == 2
+    assert doc["requests"]["served"] == 0
+    assert serving.validate_metrics(doc) == []   # still reconciles
+
+
+def test_server_needs_params_or_watcher():
+    with pytest.raises(ValueError):
+        serving.InferenceServer(serving.ClassifierAdapter(MODEL, 2))
+
+
+# ------------------------------------------------------------------ metrics
+def test_metrics_document_validates():
+    m = serving.ServingMetrics(offered_qps=10.0)
+    for i in range(3):
+        m.record_submit()
+    m.record_batch(3, 0, 1)
+    for i in range(3):
+        m.record_served(100.0 + i, 0)
+    m.record_swap(1, 2.0)
+    m.wall_s = 0.5
+    doc = m.summary()
+    assert serving.validate_metrics(doc) == []
+    assert doc["requests"] == {"submitted": 3, "served": 3, "errors": 0}
+    assert doc["staleness"]["max"] == 1
+    assert doc["checkpoints"]["served_steps"] == {"0": 3}
+
+
+def test_metrics_validate_rejects_malformed():
+    good = serving.ServingMetrics()
+    good.record_submit()
+    good.record_served(10.0, 0)
+    doc = good.summary()
+    assert serving.validate_metrics(doc) == []
+
+    bad = json.loads(json.dumps(doc))
+    bad["requests"]["served"] = 7                  # counts don't reconcile
+    assert any("reconcile" in e for e in serving.validate_metrics(bad))
+    bad2 = json.loads(json.dumps(doc))
+    bad2["schema"] = "repro.serve/v0"
+    assert serving.validate_metrics(bad2)
+    bad3 = json.loads(json.dumps(doc))
+    del bad3["swaps"]
+    assert any("swaps" in e for e in serving.validate_metrics(bad3))
+    bad4 = json.loads(json.dumps(doc))
+    bad4["checkpoints"]["served_steps"] = {"0": 99}
+    assert any("served_steps" in e for e in serving.validate_metrics(bad4))
+
+
+def test_metrics_json_roundtrip(tmp_path):
+    m = serving.ServingMetrics()
+    m.record_submit()
+    m.record_served(10.0, 0)
+    path = str(tmp_path / "sub" / "metrics.json")
+    m.to_json(path)
+    doc = serving.load_metrics(path)
+    assert doc["schema"] == serving.SCHEMA_VERSION
+    with pytest.raises(ValueError):
+        bad = str(tmp_path / "bad.json")
+        with open(bad, "w") as f:
+            json.dump({"schema": "nope"}, f)
+        serving.load_metrics(bad)
+
+
+# ---------------------------------------------------------------- CLI smoke
+def test_train_serve_cli_smoke(tmp_path):
+    """The whole loop in-process: train 2 rounds while serving, >=1 swap,
+    zero errors, valid metrics document."""
+    from repro.serving.__main__ import main
+
+    out = str(tmp_path / "serve_metrics.json")
+    rc = main(["--preset", "table2_quick", "--quick", "--rounds", "2",
+               "--qps", "30", "--publish-dir", str(tmp_path / "pub"),
+               "--out", out])
+    assert rc == 0
+    doc = serving.load_metrics(out)
+    assert doc["requests"]["errors"] == 0
+    assert doc["requests"]["served"] > 0
+    assert doc["swaps"]["count"] >= 1
+    assert np.isfinite(doc["latency_us"]["p99"])
